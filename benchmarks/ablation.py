@@ -1,0 +1,61 @@
+"""Beyond-paper ablation: which interference channel matters?
+
+Provision the 12-workload study with the iGniter model but with ONE
+interference term zeroed out (scheduler Eq. 6 / cache Eq. 8 / power
+Eq. 9), then validate against the full-physics simulator.  Violations
+that appear attribute SLO risk to the ablated channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import fitted_context
+from repro.core import provisioner as prov
+from repro.serving.simulator import simulate_plan
+from repro.serving.workload import models, specs_by_name, twelve_workloads
+
+
+def _ablate(ctx, which: str):
+    hw = ctx.hw
+    profiles = dict(ctx.profiles)
+    if which == "scheduler":
+        hw = dataclasses.replace(hw, alpha_sch=0.0, beta_sch=0.0)
+    elif which == "cache":
+        profiles = {k: dataclasses.replace(c, alpha_cache=0.0)
+                    for k, c in profiles.items()}
+    elif which == "power":
+        # pretend nothing draws power -> the model never predicts throttling
+        profiles = {k: dataclasses.replace(c, alpha_power=0.0, beta_power=0.0)
+                    for k, c in profiles.items()}
+    return hw, profiles
+
+
+def run():
+    ctx = fitted_context()
+    sb = specs_by_name()
+    rows = []
+    for which in ("none", "scheduler", "cache", "power", "all"):
+        if which == "all":
+            hw, profiles = ctx.hw, ctx.profiles
+            hw, p2 = _ablate(ctx, "scheduler")
+            _, p3 = _ablate(ctx, "cache")
+            profiles = {k: dataclasses.replace(
+                p2[k], alpha_cache=0.0, alpha_power=0.0, beta_power=0.0)
+                for k in p2}
+        else:
+            hw, profiles = _ablate(ctx, which)
+        try:
+            plan = prov.provision(twelve_workloads(), profiles, hw)
+        except prov.InfeasibleError as e:
+            rows.append({"bench": "interference_ablation", "ablated": which,
+                         "status": f"infeasible: {e}"})
+            continue
+        res = simulate_plan(plan, models(), ctx.hw, duration_s=20.0,
+                            shadow=False, seed=1)
+        viols = res.violations(sb)
+        rows.append({
+            "bench": "interference_ablation", "ablated": which,
+            "n_devices": plan.n_gpus,
+            "violations": len(viols), "violating": ",".join(viols),
+        })
+    return rows

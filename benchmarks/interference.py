@@ -1,0 +1,97 @@
+"""Figs. 3-9: interference characterization + solo-model fits."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fitted_context
+from repro.core import perf_model as pm
+from repro.serving import physics
+from repro.serving.workload import models
+
+
+def fig3_colocation():
+    """Normalized latency vs #co-located identical workloads (1-5)."""
+    ctx = fitted_context()
+    rows = []
+    for name, d in models().items():
+        solo = physics.device_state([(d, 8, 0.2)], ctx.hw)[0].t_inf
+        for n in range(1, 6):
+            st = physics.device_state([(d, 8, 0.2)] * n, ctx.hw)[0]
+            pred = pm.predict_device(
+                [pm.PlacedWorkload(ctx.profiles[name], 8, 0.2)] * n,
+                ctx.hw).per_workload[0].t_inf
+            rows.append({
+                "bench": "fig3_colocation", "model": name, "n": n,
+                "observed_ms": round(st.t_inf, 3),
+                "normalized": round(st.t_inf / solo, 4),
+                "predicted_ms": round(pred, 3),
+            })
+    return rows
+
+
+def fig4_batch_interference():
+    """Latency of a fixed workload vs a neighbor's batch size (1-32)."""
+    ctx = fitted_context()
+    me = models()["qwen1.5-4b"]
+    neighbor = models()["rwkv6-1.6b"]
+    solo = physics.device_state([(me, 16, 0.5)], ctx.hw)[0].t_inf
+    rows = []
+    for nb in (1, 2, 4, 8, 16, 32):
+        st = physics.device_state([(me, 16, 0.5), (neighbor, nb, 0.5)],
+                                  ctx.hw)[0]
+        pred = pm.predict_device(
+            [pm.PlacedWorkload(ctx.profiles["qwen1.5-4b"], 16, 0.5),
+             pm.PlacedWorkload(ctx.profiles["rwkv6-1.6b"], nb, 0.5)],
+            ctx.hw).per_workload[0].t_inf
+        rows.append({
+            "bench": "fig4_batch_interference", "neighbor_batch": nb,
+            "observed_ms": round(st.t_inf, 3),
+            "normalized": round(st.t_inf / solo, 4),
+            "predicted_ms": round(pred, 3),
+        })
+    return rows
+
+
+def fig5_7_factors():
+    """Factor decomposition: dispatch delay, bandwidth contention, power."""
+    ctx = fitted_context()
+    d = models()["qwen2-vl-7b"]
+    rows = []
+    for n in range(1, 6):
+        st = physics.device_state([(d, 8, 0.2)] * n, ctx.hw)[0]
+        rows.append({
+            "bench": "fig5_7_factors", "n": n,
+            "sched_ms": round(st.t_sched, 4),
+            "active_ms": round(st.t_act, 3),
+            "device_power_w": round(st.device_power, 1),
+            "freq_mhz": round(st.freq, 1),
+        })
+    return rows
+
+
+def fig8_9_solo_model():
+    """Eq. 11 surface fit quality + p/c linear fits (R^2)."""
+    ctx = fitted_context()
+    rows = []
+    for name, c in ctx.profiles.items():
+        obs, fit = [], []
+        for b in (1, 2, 4, 8, 16, 32):
+            for r in (0.15, 0.3, 0.5, 0.75, 1.0):
+                s = ctx.testbed.run_solo(name, b, r)
+                obs.append(s.t_act)
+                fit.append(c.k_act(b, r))
+        obs, fit = np.array(obs), np.array(fit)
+        ss_res = float(np.sum((obs - fit) ** 2))
+        ss_tot = float(np.sum((obs - obs.mean()) ** 2))
+        rows.append({
+            "bench": "fig8_9_solo_model", "model": name,
+            "k_act_r2": round(1 - ss_res / ss_tot, 5),
+            "k_act_mape_pct": round(
+                100 * float(np.mean(np.abs(obs - fit) / obs)), 3),
+        })
+    return rows
+
+
+def run():
+    return (fig3_colocation() + fig4_batch_interference() + fig5_7_factors()
+            + fig8_9_solo_model())

@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks (name, us_per_call, derived) — CPU wall-clock of
+the pure-jnp model paths vs the naive oracles.  The Pallas kernels
+themselves target TPU (interpret mode timing is meaningless), so the
+'derived' column reports the kernel's ANALYTIC HBM-traffic advantage —
+the quantity the roofline table prices.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fitted_context  # noqa: F401  (path setup)
+from repro.kernels import ref
+from repro.models.attention import kv_blockwise_attention
+from repro.models.rwkv import wkv_chunked
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)                                     # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # attention: chunked online-softmax vs naive quadratic
+    B, S, H, KV, hd = 1, 2048, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    chunked = jax.jit(lambda q, k, v: kv_blockwise_attention(
+        q, k, v, q_positions=pos, kv_positions=pos, causal=True, window=None,
+        kv_chunk=512))
+    t_naive = _time(naive, q, k, v)
+    t_chunk = _time(chunked, q, k, v)
+    # flash kernel analytic traffic: scores never hit HBM
+    score_bytes = B * S * S * H * 4
+    io_bytes = (3 * B * S * KV * hd + B * S * H * hd) * 4
+    rows.append({"bench": "kernel_micro", "name": "attention_naive_2k",
+                 "us_per_call": round(t_naive, 1),
+                 "derived": f"score_traffic={score_bytes/1e6:.0f}MB"})
+    rows.append({"bench": "kernel_micro", "name": "attention_kvblockwise_2k",
+                 "us_per_call": round(t_chunk, 1),
+                 "derived": f"flash_kernel_traffic={io_bytes/1e6:.0f}MB "
+                            f"({score_bytes/io_bytes:.0f}x less than naive)"})
+
+    # rwkv6: chunked factorized vs sequential scan
+    S2, H2, hd2 = 1024, 4, 64
+    r = 0.5 * jax.random.normal(ks[3], (B, S2, H2, hd2))
+    kk = 0.5 * jax.random.normal(ks[4], (B, S2, H2, hd2))
+    vv = jax.random.normal(ks[5], (B, S2, H2, hd2))
+    logw = jnp.maximum(-jnp.exp(jax.random.normal(ks[6], (B, S2, H2, hd2)) - 1.5), -2.0)
+    u = 0.3 * jax.random.normal(ks[7], (H2, hd2))
+    t_seq = _time(jax.jit(lambda *a: ref.rwkv6_ref(*a)[0]), r, kk, vv, logw, u)
+    t_chk = _time(jax.jit(lambda *a: wkv_chunked(*a, q=32)[0]), r, kk, vv, logw, u)
+    rows.append({"bench": "kernel_micro", "name": "rwkv6_sequential_1k",
+                 "us_per_call": round(t_seq, 1), "derived": "oracle"})
+    rows.append({"bench": "kernel_micro", "name": "rwkv6_chunked_1k",
+                 "us_per_call": round(t_chk, 1),
+                 "derived": f"speedup={t_seq/t_chk:.1f}x"})
+
+    # ssd: chunked vs sequential
+    N = 32
+    xdt = jax.random.normal(ks[0], (B, S2, H2, hd2))
+    Bm = 0.5 * jax.random.normal(ks[1], (B, S2, N))
+    Cm = 0.5 * jax.random.normal(ks[2], (B, S2, N))
+    dt = jnp.ones((B, S2, H2)) * 0.1
+    dA = -jnp.exp(jax.random.normal(ks[3], (B, S2, H2)) - 1.5)
+    D = jnp.ones((H2,))
+    BmH = jnp.broadcast_to(Bm[:, :, None, :], (B, S2, H2, N))
+    CmH = jnp.broadcast_to(Cm[:, :, None, :], (B, S2, H2, N))
+    t_seq2 = _time(jax.jit(lambda *a: ref.ssd_ref(*a)[0]),
+                   xdt * dt[..., None], BmH, CmH, dA)
+    t_chk2 = _time(jax.jit(lambda *a: ssd_chunked(*a, q=128)[0]),
+                   xdt, Bm, Cm, dt, dA, D)
+    rows.append({"bench": "kernel_micro", "name": "ssd_sequential_1k",
+                 "us_per_call": round(t_seq2, 1), "derived": "oracle"})
+    rows.append({"bench": "kernel_micro", "name": "ssd_chunked_1k",
+                 "us_per_call": round(t_chk2, 1),
+                 "derived": f"speedup={t_seq2/t_chk2:.1f}x"})
+    return rows

@@ -1,0 +1,77 @@
+"""Table 1 + Figs. 14/18/19: provisioning plans, cost, SLO violations."""
+from __future__ import annotations
+
+from benchmarks.common import fitted_context
+from repro.core import baselines as B
+from repro.core import provisioner as prov
+from repro.core.experiments import all_plans, evaluate_plans
+from repro.serving.workload import three_workloads, twelve_workloads
+
+
+def table1_three_workloads():
+    """Sec. 2.3 illustrative example (A/R/V on one device)."""
+    ctx = fitted_context()
+    plan = prov.provision(three_workloads(), ctx.profiles, ctx.hw)
+    rows = [{
+        "bench": "table1_example", "strategy": "iGniter",
+        "n_devices": plan.n_gpus,
+        "plan": plan.summary().replace("\n", " | "),
+    }]
+    return rows
+
+
+def fig14_18_strategies():
+    ctx = fitted_context()
+    plans = all_plans(ctx)
+    results = evaluate_plans(plans, ctx)
+    rows = []
+    for name, r in results.items():
+        rows.append({
+            "bench": "fig14_strategies", "strategy": name,
+            "n_devices": r["n_gpus"],
+            "cost_per_hour": round(r["cost_per_hour"], 2),
+            "violations": len(r["violations"]),
+            "violating": ",".join(r["violations"]),
+        })
+        for p in sorted(r["plan"].placements,
+                        key=lambda p: int(p.workload.name[1:])):
+            rows.append({
+                "bench": "fig18_allocations", "strategy": name,
+                "workload": p.workload.name, "gpu": p.gpu,
+                "r_pct": round(100 * p.r, 1), "batch": p.batch,
+            })
+    ig = results["iGniter"]["cost_per_hour"]
+    gl = results["gpu-lets+"]["cost_per_hour"]
+    rows.append({"bench": "fig14_strategies", "strategy": "saving_vs_gpulets",
+                 "cost_saving_pct": round(100 * (gl - ig) / gl, 1),
+                 "paper_claim_pct": 25})
+    return rows
+
+
+def fig19_placement_of_w2():
+    """Where does each strategy place W2 and at what allocation?"""
+    ctx = fitted_context()
+    specs = twelve_workloads()
+    import functools
+    from repro.serving.simulator import measure_steady
+    from repro.serving.workload import models
+    mfn = functools.partial(measure_steady, models=models(), hw=ctx.hw)
+    strategies = {
+        "FFD+": B.provision_ffd(specs, ctx.profiles, ctx.hw),
+        "FFD++": B.provision_ffd(specs, ctx.profiles, ctx.hw,
+                                 use_alloc_gpus=True),
+        "gpu-lets+": B.provision_gpulets(specs, ctx.profiles, ctx.hw),
+        "iGniter": prov.provision(specs, ctx.profiles, ctx.hw),
+    }
+    rows = []
+    for name, plan in strategies.items():
+        p = next(pl for pl in plan.placements if pl.workload.name == "W2")
+        rows.append({"bench": "fig19_placement", "strategy": name,
+                     "gpu": p.gpu, "r_pct": round(100 * p.r, 1),
+                     "batch": p.batch})
+    return rows
+
+
+def run():
+    return table1_three_workloads() + fig14_18_strategies() \
+        + fig19_placement_of_w2()

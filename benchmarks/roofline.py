@@ -1,0 +1,38 @@
+"""Roofline table (brief §Roofline): per (arch x shape), the three terms
+from the compiled dry-run artifacts + dominant bottleneck + MODEL_FLOPS
+ratio.  Reads dryrun_results.json if present (produced by
+`python -m repro.launch.dryrun --both-meshes --out dryrun_results.json`);
+otherwise reports skip."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def run():
+    if not os.path.exists(RESULTS):
+        return [{"bench": "roofline", "status":
+                 "dryrun_results.json missing — run repro.launch.dryrun"}]
+    recs = json.load(open(RESULTS))
+    rows = []
+    for r in recs:
+        if r.get("mesh") != "16x16":      # roofline table is single-pod
+            continue
+        if r["status"] != "ok":
+            rows.append({"bench": "roofline", "arch": r["arch"],
+                         "shape": r["shape"], "status": r["status"]})
+            continue
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "status": "ok",
+            "compute_ms": round(1e3 * r["compute_s"], 2),
+            "memory_ms": round(1e3 * r["memory_s"], 2),
+            "collective_ms": round(1e3 * r["collective_s"], 2),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "mem_gib_per_dev": round(
+                (r["temp_bytes_per_dev"] + r["arg_bytes_per_dev"]) / 2**30, 2),
+        })
+    return rows

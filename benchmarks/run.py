@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure (+ roofline).
+
+Prints ``bench,key=value,...`` CSV-ish rows and writes
+benchmarks/results.json.  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import ablation, accuracy, interference, \
+        kernels_micro, provisioning, roofline, runtime_behavior
+
+    modules = [
+        ("interference(Figs3-9)", interference),
+        ("accuracy(Figs11-13)", accuracy),
+        ("provisioning(Table1,Figs14-19)", provisioning),
+        ("runtime(Figs15-21)", runtime_behavior),
+        ("kernels_micro", kernels_micro),
+        ("interference_ablation", ablation),
+        ("roofline", roofline),
+    ]
+    all_rows = []
+    for name, mod in modules:
+        t0 = time.time()
+        rows = mod.run()
+        dt = time.time() - t0
+        print(f"# {name}: {len(rows)} rows in {dt:.1f}s", flush=True)
+        for r in rows:
+            bench = r.pop("bench", name)
+            body = ",".join(f"{k}={v}" for k, v in r.items())
+            print(f"{bench},{body}")
+            r["bench"] = bench
+        all_rows.extend(rows)
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# wrote {out} ({len(all_rows)} rows)")
+
+
+if __name__ == '__main__':
+    main()

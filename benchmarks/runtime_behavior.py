@@ -1,0 +1,96 @@
+"""Figs. 15-17 (GSLICE oscillation + shadow failover) and Fig. 20-21
+(heterogeneous selection, provisioner overhead)."""
+from __future__ import annotations
+
+import resource
+import time
+
+import numpy as np
+
+from benchmarks.common import fitted_context
+from repro.core import provisioner as prov
+from repro.core.experiments import all_plans, fitted_context as fc
+from repro.core.types import V4, V5E, WorkloadSpec
+from repro.serving.simulator import simulate_plan
+from repro.serving.workload import models, specs_by_name, twelve_workloads
+
+
+def fig15_17_shadow_failover():
+    """Inject a prediction error, record the P99 timeline around the
+    shadow switch (paper Fig. 17: recovery within ~1.5 s)."""
+    ctx = fitted_context()
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    victim = next(p for p in plan.placements if p.workload.name == "W1")
+    victim.r = max(ctx.hw.r_unit,
+                   round(victim.r * 0.5 / ctx.hw.r_unit) * ctx.hw.r_unit)
+    res = simulate_plan(plan, models(), ctx.hw, duration_s=12.0, shadow=True,
+                        record_timeline=True)
+    rows = []
+    switch_t = None
+    for t in res.timeline:
+        if t["workload"] != "W1":
+            continue
+        if t["shadow"] and switch_t is None:
+            switch_t = t["t_s"]
+        rows.append({
+            "bench": "fig17_shadow_timeline", "t_s": round(t["t_s"], 1),
+            "p99_1s_ms": round(t["p99_1s"], 1),
+            "r_pct": round(100 * t["r"], 1), "shadow": t["shadow"],
+        })
+    rows.append({
+        "bench": "fig17_shadow_timeline", "summary": True,
+        "shadow_switch_t_s": switch_t,
+        "final_p99_ms": round(res.per_workload["W1"]["p99_ms"], 1),
+        "slo_ms": specs_by_name()["W1"].slo_ms,
+    })
+    return rows[:10] + rows[-1:]
+
+
+def fig20_heterogeneous():
+    """Run Alg. 1 per TPU type and pick the cheaper plan (paper: V100 vs
+    T4; here v5e vs the bigger v4-analogue)."""
+    rows = []
+    specs = twelve_workloads()
+    best = None
+    for hw_name in ("tpu-v5e", "tpu-v4"):
+        ctx = fc(hw_name)
+        plan = prov.provision(specs, ctx.profiles, ctx.hw)
+        cost = plan.cost_per_hour()
+        rows.append({
+            "bench": "fig20_heterogeneous", "hardware": hw_name,
+            "n_devices": plan.n_gpus, "cost_per_hour": round(cost, 2),
+        })
+        if best is None or cost < best[1]:
+            best = (hw_name, cost)
+    rows.append({"bench": "fig20_heterogeneous", "selected": best[0],
+                 "cost_per_hour": round(best[1], 2)})
+    return rows
+
+
+def fig21_overhead():
+    """Alg. 1 computation time and memory vs #workloads (paper: 4.61 s and
+    55 MB at m=1000; complexity O(m^2) time / O(m) space)."""
+    ctx = fitted_context()
+    rng = np.random.default_rng(0)
+    mods = list(ctx.profiles)
+    rows = []
+    for m in (10, 50, 100, 200, 400):
+        specs = [WorkloadSpec(f"W{i}", mods[i % len(mods)],
+                              float(rng.uniform(150, 400)),
+                              float(rng.uniform(5, 30)))
+                 for i in range(m)]
+        t0 = time.time()
+        plan = prov.provision(specs, ctx.profiles, ctx.hw)
+        dt = time.time() - t0
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+        rows.append({
+            "bench": "fig21_overhead", "m_workloads": m,
+            "time_s": round(dt, 3), "rss_mb": round(rss, 1),
+            "n_devices": plan.n_gpus,
+        })
+    return rows
+
+
+def run():
+    return fig15_17_shadow_failover() + fig20_heterogeneous() + fig21_overhead()

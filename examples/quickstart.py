@@ -1,0 +1,55 @@
+"""Quickstart: the full iGniter pipeline in one script.
+
+1. Profile the serving models against the ground-truth testbed
+   (11 solo configs + pair runs each, per paper Sec. 3.1).
+2. Provision GPU/TPU resources for the 12-workload App study with
+   Algorithm 1 (iGniter) and the three baselines.
+3. Validate SLOs in the discrete-event cluster simulator.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.experiments import all_plans, evaluate_plans, fitted_context
+from repro.core.provisioner import predicted_plan_metrics
+from repro.serving.workload import specs_by_name
+
+
+def main():
+    print("== fitting coefficients from 11-config lightweight profiling ==")
+    ctx = fitted_context()
+    for name, c in ctx.profiles.items():
+        print(f"  {name:18s} k_act=({c.k1:.3g} b^2 + {c.k2:.3g} b + {c.k3:.3g})"
+              f"/(r + {c.k4:.3g}) + {c.k5:.3g}   alpha_cache={c.alpha_cache:.3f}")
+
+    print("\n== provisioning plans (12 workloads, paper Table 3 analogue) ==")
+    plans = all_plans(ctx)
+    results = evaluate_plans(plans, ctx)
+    sb = specs_by_name()
+    for name, r in results.items():
+        v = r["violations"]
+        print(f"  {name:10s} devices={r['n_gpus']:2d} "
+              f"cost=${r['cost_per_hour']:6.2f}/h  SLO violations={len(v)} {v}")
+
+    ig = results["iGniter"]["cost_per_hour"]
+    gl = results["gpu-lets+"]["cost_per_hour"]
+    print(f"\n  iGniter saves {100 * (gl - ig) / gl:.0f}% vs gpu-lets+ "
+          f"(paper: up to 25%)")
+
+    print("\n== iGniter plan detail ==")
+    print(results["iGniter"]["plan"].summary())
+    pred = predicted_plan_metrics(results["iGniter"]["plan"], ctx.profiles,
+                                  ctx.hw)
+    print("\n== model-predicted vs simulator-observed latency ==")
+    for w, m in sorted(results["iGniter"]["result"].per_workload.items(),
+                       key=lambda kv: int(kv[0][1:])):
+        s = sb[w]
+        print(f"  {w:4s} predicted t_inf={pred[w].t_inf:7.2f} ms | observed "
+              f"p99={m['p99_ms']:7.2f} ms | SLO {s.slo_ms:5.0f} ms | "
+              f"rps {m['rps']:6.1f}/{s.rate_rps:.0f}")
+
+
+if __name__ == "__main__":
+    main()

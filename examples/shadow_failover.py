@@ -1,0 +1,45 @@
+"""Demonstrate iGniter's shadow-instance failover (paper Sec. 4.2,
+Fig. 17): deliberately under-provision one workload (simulating a
+performance-prediction error), watch its P99 violate the SLO, and show
+the monitor activating the pre-launched shadow process within ~1.5 s.
+
+Run:  PYTHONPATH=src python examples/shadow_failover.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import provisioner as prov
+from repro.core.experiments import fitted_context
+from repro.serving.simulator import simulate_plan
+from repro.serving.workload import models, specs_by_name, twelve_workloads
+
+
+def main():
+    ctx = fitted_context()
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+
+    # inject a prediction error: shave 2 resource units off W1
+    victim = next(p for p in plan.placements if p.workload.name == "W1")
+    victim.r = max(ctx.hw.r_unit,
+                   round(victim.r * 0.5 / ctx.hw.r_unit) * ctx.hw.r_unit)
+    print(f"under-provisioned W1 to {victim.r*100:.1f}% (simulated "
+          f"prediction error)")
+
+    res = simulate_plan(plan, models(), ctx.hw, duration_s=20.0,
+                        shadow=True, record_timeline=True)
+    m = res.per_workload["W1"]
+    print(f"W1: p99={m['p99_ms']:.1f} ms (SLO "
+          f"{specs_by_name()['W1'].slo_ms:.0f} ms), shadow activated: "
+          f"{m['shadow_used']}")
+    tl = [t for t in res.timeline if t["workload"] == "W1"]
+    for t in tl[:8]:
+        print(f"  t={t['t_s']:4.1f}s p99(1s)={t['p99_1s']:7.1f} ms "
+              f"r={t['r']*100:4.1f}% shadow={t['shadow']}")
+    assert m["shadow_used"], "shadow failover should have triggered"
+    print("OK: shadow failover engaged and recovered the SLO")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model for a
+few hundred steps on the packed synthetic pipeline, with checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.training.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M-param variant of the chosen family
+    cfg = get_config(args.arch).replace(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=8192, dtype="float32")
+    n = cfg.n_params()
+    print(f"training {cfg.name} variant: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        report = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=ckpt_dir, ckpt_every=100)
+    first = float(np.mean(report.losses[:20]))
+    last = float(np.mean(report.losses[-20:]))
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({report.tokens_per_s:,.0f} tokens/s)")
+    assert last < first - 0.5, "loss did not decrease as expected"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Baseline provisioning strategies the paper compares against (Sec. 5.1):
+
+  FFD+      first-fit-decreasing, allocates exactly r_lower (interference-
+            oblivious both in placement and allocation).
+  FFD++     FFD placement but allocation via Alg. 2 (`alloc_gpus`) — the
+            paper's Fig. 19 ablation.
+  GSLICE+   GSLICE patched with our placement; tunes r and b *reactively*
+            and separately per workload with a fixed threshold, oblivious
+            to co-located workloads (can over-subscribe a device).
+  gpu-lets+ throughput-maximizing resource sizing over a coarse grid
+            {20,40,50,60,80}%, at most TWO workloads per device, best-fit
+            placement, pairwise-only interference estimate, and never
+            re-adjusts the originally-placed workload.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import perf_model as pm
+from repro.core import provisioner as prov
+from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
+                              WorkloadCoefficients, WorkloadSpec)
+
+R_MAX = 1.0
+
+
+# ---------------------------------------------------------------------------
+# FFD+ / FFD++
+# ---------------------------------------------------------------------------
+
+def provision_ffd(specs: Sequence[WorkloadSpec],
+                  profiles: Dict[str, WorkloadCoefficients],
+                  hw: HardwareSpec, *, use_alloc_gpus: bool = False
+                  ) -> ProvisioningPlan:
+    prepared = []
+    for s in specs:
+        c = profiles[s.model]
+        b = prov.appropriate_batch(s, c, hw)
+        rl = prov.resource_lower_bound(s, c, hw, b)
+        prepared.append((s, c, b, rl))
+    prepared.sort(key=lambda t: -t[3])
+
+    devs: List[prov._Dev] = []
+    for (s, c, b, rl) in prepared:
+        placed = False
+        for dev in devs:
+            if use_alloc_gpus:
+                r_a = prov.alloc_gpus(dev, s, c, b, rl, hw)
+                if r_a is not None:
+                    dev.entries = [
+                        (e[0], e[1], e[2], r_new)
+                        for e, r_new in zip(dev.entries, r_a[:-1])
+                    ] + [(s, c, b, r_a[-1])]
+                    placed = True
+                    break
+            else:
+                if dev.total() + rl <= R_MAX + 1e-9:
+                    dev.entries.append((s, c, b, rl))
+                    placed = True
+                    break
+        if not placed:
+            devs.append(prov._Dev(entries=[(s, c, b, rl)]))
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g, dev in enumerate(devs):
+        for (s, c, b, r) in dev.entries:
+            plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
+    plan.n_gpus = len(devs)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# GSLICE+
+# ---------------------------------------------------------------------------
+
+MeasureFn = Callable[[List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]],
+                     List[Tuple[float, float]]]
+# measure_fn(device entries) -> [(observed avg latency ms, observed rps)] per entry
+
+
+def provision_gslice(specs: Sequence[WorkloadSpec],
+                     profiles: Dict[str, WorkloadCoefficients],
+                     hw: HardwareSpec, measure_fn: MeasureFn, *,
+                     rounds: int = 5, threshold: float = 0.10
+                     ) -> ProvisioningPlan:
+    """GSLICE+ — iGniter's *placement* (per the paper's patch) but GSLICE's
+    allocation policy: start from an equal spatial split of each device,
+    then run `rounds` of reactive, per-workload threshold tuning against
+    observed latency/throughput.  Each workload is tuned separately with
+    no awareness of co-located demand, so a device can end up
+    over-subscribed (sum r > 100%) — the pathology of Fig. 15/16 — and
+    resources are reclaimed whenever latency sits below the threshold
+    band, which trades SLO safety for utilization."""
+    base = prov.provision(specs, profiles, hw)
+    devs: Dict[int, List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]] = {}
+    for p in base.placements:
+        devs.setdefault(p.gpu, []).append(
+            (p.workload, profiles[p.workload.model], p.batch, p.r))
+    # GSLICE initial state: equal split, batch grown from 1 reactively
+    for g, entries in devs.items():
+        share = round((R_MAX / len(entries)) / hw.r_unit) * hw.r_unit
+        devs[g] = [(s, c, 1, share) for (s, c, b, r) in entries]
+
+    for g, entries in devs.items():
+        for _ in range(rounds):
+            obs = measure_fn(entries)
+            new_entries = []
+            changed = False
+            for (s, c, b, r), (lat, rps) in zip(entries, obs):
+                target = s.slo_ms / 2.0
+                if lat > target:                        # violating -> grow
+                    r = min(R_MAX, round(r + 2 * hw.r_unit, 10))
+                    changed = True
+                elif lat < (1.0 - threshold) * target:  # reclaim (oscillates)
+                    r = max(hw.r_unit, round(r - hw.r_unit, 10))
+                    changed = True
+                if rps < s.rate_rps and b < 64:         # throughput short
+                    b = min(64, b + max(1, int(b * 0.5)))
+                    changed = True
+                elif rps > (1 + threshold) * s.rate_rps and b > 1 and lat > target:
+                    b = b - 1
+                    changed = True
+                new_entries.append((s, c, b, r))
+            entries[:] = new_entries
+            if not changed:
+                break
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g, entries in devs.items():
+        for (s, c, b, r) in entries:
+            plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
+    plan.n_gpus = len(devs)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# gpu-lets+
+# ---------------------------------------------------------------------------
+
+_GPULETS_CHOICES = (0.2, 0.4, 0.5, 0.6, 0.8)
+
+
+def _solo_throughput(c: WorkloadCoefficients, b: int, r: float,
+                     hw: HardwareSpec) -> float:
+    t_gpu = c.k_sch * c.n_kernels + c.k_act(b, r)
+    return 1000.0 * b / (t_gpu + c.t_feedback(b, hw.pcie_bw))
+
+
+def _most_efficient_r(spec: WorkloadSpec, c: WorkloadCoefficients, b: int,
+                      hw: HardwareSpec, knee: float = 0.30) -> float:
+    """gpu-lets sizing: the grid point where marginal throughput efficiency
+    knees, grown until the solo latency SLO and arrival rate are met."""
+    choice = _GPULETS_CHOICES[-1]
+    for i, r in enumerate(_GPULETS_CHOICES[:-1]):
+        cur = _solo_throughput(c, b, r, hw)
+        nxt = _solo_throughput(c, b, _GPULETS_CHOICES[i + 1], hw)
+        if (nxt - cur) / max(cur, 1e-9) < knee:
+            choice = r
+            break
+    idx = _GPULETS_CHOICES.index(choice)
+    while idx < len(_GPULETS_CHOICES) - 1:
+        r = _GPULETS_CHOICES[idx]
+        me = pm.PlacedWorkload(coeffs=c, batch=b, r=r)
+        lat = pm.predict_workload(me, [], hw).t_inf
+        if (lat <= spec.slo_ms / 2.0
+                and _solo_throughput(c, b, r, hw) >= spec.rate_rps):
+            break
+        idx += 1
+    return _GPULETS_CHOICES[idx]
+
+
+def provision_gpulets(specs: Sequence[WorkloadSpec],
+                      profiles: Dict[str, WorkloadCoefficients],
+                      hw: HardwareSpec) -> ProvisioningPlan:
+    prepared = []
+    for s in specs:
+        c = profiles[s.model]
+        b = prov.appropriate_batch(s, c, hw)   # paper-modified batch policy
+        r = _most_efficient_r(s, c, b, hw)
+        prepared.append((s, c, b, r))
+    prepared.sort(key=lambda t: -t[3])
+
+    # best-fit with at most 2 workloads per device; pairwise interference
+    # check for the NEW workload only (the original is never re-checked).
+    devs: List[List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]] = []
+    for (s, c, b, r) in prepared:
+        best_i, best_left = -1, None
+        for i, entries in enumerate(devs):
+            if len(entries) >= 2:
+                continue
+            used = sum(e[3] for e in entries)
+            if used + r > R_MAX + 1e-9:
+                continue
+            # pairwise latency estimate for the newcomer
+            placed = [pm.PlacedWorkload(coeffs=e[1], batch=e[2], r=e[3])
+                      for e in entries]
+            me = pm.PlacedWorkload(coeffs=c, batch=b, r=r)
+            lat = pm.predict_workload(me, placed, hw).t_inf
+            if lat > s.slo_ms / 2.0:
+                continue
+            left = R_MAX - used - r
+            if best_left is None or left < best_left:
+                best_i, best_left = i, left
+        if best_i == -1:
+            devs.append([(s, c, b, r)])
+        else:
+            devs[best_i].append((s, c, b, r))
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g, entries in enumerate(devs):
+        for (s, c, b, r) in entries:
+            plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
+    plan.n_gpus = len(devs)
+    return plan

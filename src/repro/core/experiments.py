@@ -1,0 +1,72 @@
+"""Shared experiment pipeline: fit -> provision -> simulate.
+
+Used by benchmarks (one per paper table/figure) and integration tests.
+Results are cached per hardware type within a process.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import baselines as B
+from repro.core import coefficients as C
+from repro.core import provisioner as prov
+from repro.core.types import (HardwareSpec, ProvisioningPlan, V4, V5E,
+                              WorkloadCoefficients, WorkloadSpec)
+from repro.serving.simulator import SimTestbed, measure_steady, simulate_plan
+from repro.serving.workload import models, specs_by_name, twelve_workloads
+
+
+@dataclass
+class FittedContext:
+    hw: HardwareSpec
+    profiles: Dict[str, WorkloadCoefficients]
+    testbed: SimTestbed
+
+
+@functools.lru_cache(maxsize=4)
+def fitted_context(hw_name: str = "tpu-v5e") -> FittedContext:
+    base = {"tpu-v5e": V5E, "tpu-v4": V4}[hw_name]
+    mods = models()
+    tb = SimTestbed(mods, base)
+    hw = C.fit_hardware("qwen2-vl-7b", base, tb)
+    tb = SimTestbed(mods, hw)
+    profiles = {name: C.fit_workload(name, hw, tb) for name in mods}
+    return FittedContext(hw=hw, profiles=profiles, testbed=tb)
+
+
+def all_plans(ctx: Optional[FittedContext] = None
+              ) -> Dict[str, ProvisioningPlan]:
+    ctx = ctx or fitted_context()
+    specs = twelve_workloads()
+    mods = models()
+    mfn = functools.partial(measure_steady, models=mods, hw=ctx.hw)
+    return {
+        "iGniter": prov.provision(specs, ctx.profiles, ctx.hw),
+        "FFD+": B.provision_ffd(specs, ctx.profiles, ctx.hw),
+        "FFD++": B.provision_ffd(specs, ctx.profiles, ctx.hw,
+                                 use_alloc_gpus=True),
+        "GSLICE+": B.provision_gslice(specs, ctx.profiles, ctx.hw, mfn),
+        "gpu-lets+": B.provision_gpulets(specs, ctx.profiles, ctx.hw),
+    }
+
+
+def evaluate_plans(plans: Dict[str, ProvisioningPlan],
+                   ctx: Optional[FittedContext] = None,
+                   duration_s: float = 30.0):
+    ctx = ctx or fitted_context()
+    sb = specs_by_name()
+    mods = models()
+    out = {}
+    for name, plan in plans.items():
+        res = simulate_plan(plan, mods, ctx.hw, duration_s=duration_s,
+                            shadow=(name == "iGniter"))
+        out[name] = {
+            "n_gpus": plan.n_gpus,
+            "cost_per_hour": plan.cost_per_hour(),
+            "violations": res.violations(sb),
+            "result": res,
+            "plan": plan,
+        }
+    return out

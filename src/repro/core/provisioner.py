@@ -1,0 +1,254 @@
+"""iGniter GPU resource provisioning strategy (paper Sec. 4.1).
+
+Implements Theorem 1 (appropriate batch size b_appr, Eq. 17; resource
+lower bound r_lower, Eq. 18), Algorithm 2 (`alloc_gpus`) and Algorithm 1
+(`provision`) faithfully, including the ANYFIT new-device rule and the
+greedy minimum-interference device selection.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import perf_model as pm
+from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
+                              WorkloadCoefficients, WorkloadSpec)
+
+R_MAX = 1.0
+
+
+class InfeasibleError(RuntimeError):
+    """A workload cannot meet its SLO even alone on a full device."""
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1
+# ---------------------------------------------------------------------------
+
+def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
+                      hw: HardwareSpec, *, b_max: int = 64) -> int:
+    """Eq. (17): smallest batch sustaining the arrival rate within T_slo/2.
+
+    R is req/s; the model works in ms, so R_ms = R / 1000.
+    """
+    r_ms = spec.rate_rps / 1000.0
+    num = spec.slo_ms * r_ms * hw.pcie_bw
+    den = 2.0 * (hw.pcie_bw + r_ms * c.d_load)
+    b = int(math.ceil(num / den))
+    return max(1, min(b, b_max))
+
+
+def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
+                         hw: HardwareSpec, b_appr: Optional[int] = None) -> float:
+    """Eq. (18): minimal solo resource fraction meeting T_slo/2."""
+    b = b_appr if b_appr is not None else appropriate_batch(spec, c, hw)
+    gamma = c.k1 * b * b + c.k2 * b + c.k3
+    delta = (spec.slo_ms / 2.0
+             - (c.d_load + c.d_feedback) * b / hw.pcie_bw
+             - c.k5 - c.k_sch * c.n_kernels)
+    if delta <= 0:
+        raise InfeasibleError(
+            f"{spec.name}: fixed latency terms exceed T_slo/2 "
+            f"(delta={delta:.3f} ms)")
+    r = gamma / delta - c.k4
+    r_units = math.ceil(r / hw.r_unit - 1e-9)
+    r_lower = max(hw.r_unit, r_units * hw.r_unit)
+    if r_lower > R_MAX + 1e-9:
+        raise InfeasibleError(
+            f"{spec.name}: needs r={r_lower:.3f} > 100% of a device")
+    return min(r_lower, R_MAX)
+
+
+# ---------------------------------------------------------------------------
+# Device state during provisioning
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Dev:
+    """Mutable allocation state for one device."""
+    entries: List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]] = \
+        field(default_factory=list)   # (spec, coeffs, batch, r)
+
+    def total(self) -> float:
+        return sum(e[3] for e in self.entries)
+
+    def placed(self) -> List[pm.PlacedWorkload]:
+        return [pm.PlacedWorkload(coeffs=c, batch=b, r=r)
+                for (_, c, b, r) in self.entries]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: alloc_gpus
+# ---------------------------------------------------------------------------
+
+def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
+               w_batch: int, w_r_lower: float,
+               hw: HardwareSpec) -> Optional[List[float]]:
+    """Try placing workload w on `dev`; returns the new allocation vector
+    r_a (existing entries order, w last), or None if the device cannot host
+    it within r_max.
+
+    Faithful to Alg. 2: start w at its lower bound, then iteratively grant
+    +r_unit to any workload whose predicted t_inf exceeds T_slo/2, until
+    stable or out of resources.
+    """
+    specs = [e[0] for e in dev.entries] + [w_spec]
+    coeffs = [e[1] for e in dev.entries] + [w_coeffs]
+    batches = [e[2] for e in dev.entries] + [w_batch]
+    r_a = [e[3] for e in dev.entries] + [w_r_lower]
+
+    flag = True
+    while sum(r_a) <= R_MAX + 1e-9 and flag:
+        flag = False
+        placed = [pm.PlacedWorkload(coeffs=c, batch=b, r=r)
+                  for c, b, r in zip(coeffs, batches, r_a)]
+        pred = pm.predict_device(placed, hw)
+        for i, spec in enumerate(specs):
+            if pred.per_workload[i].t_inf > spec.slo_ms / 2.0 + 1e-9:
+                r_a[i] = round(r_a[i] + hw.r_unit, 10)
+                flag = True
+    if sum(r_a) > R_MAX + 1e-9:
+        return None
+    return r_a
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: iGniter provisioning
+# ---------------------------------------------------------------------------
+
+def provision(specs: Sequence[WorkloadSpec],
+              profiles: Dict[str, WorkloadCoefficients],
+              hw: HardwareSpec) -> ProvisioningPlan:
+    """Cost-efficient interference-aware provisioning (Alg. 1)."""
+    # line 2: b_appr, r_lower per workload
+    prepared = []
+    for s in specs:
+        c = profiles[s.model]
+        b = appropriate_batch(s, c, hw)
+        rl = resource_lower_bound(s, c, hw, b)
+        prepared.append((s, c, b, rl))
+    # line 3: sort by r_lower descending
+    prepared.sort(key=lambda t: -t[3])
+
+    devs: List[_Dev] = [_Dev()]
+    for (s, c, b, rl) in prepared:
+        best_q = -1
+        best_alloc: Optional[List[float]] = None
+        best_inter = R_MAX + 1.0     # r_inter^min
+        for q, dev in enumerate(devs):
+            r_a = alloc_gpus(dev, s, c, b, rl, hw)
+            if r_a is None:
+                continue
+            # increased resources caused by interference (line 8)
+            old = [e[3] for e in dev.entries] + [rl]
+            r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
+            if r_inter < best_inter - 1e-12:
+                best_inter = r_inter
+                best_q = q
+                best_alloc = r_a
+        if best_q == -1:
+            devs.append(_Dev(entries=[(s, c, b, rl)]))     # line 14
+        else:
+            dev = devs[best_q]
+            new_entries = []
+            for (e, r_new) in zip(dev.entries, best_alloc[:-1]):
+                new_entries.append((e[0], e[1], e[2], r_new))
+            new_entries.append((s, c, b, best_alloc[-1]))
+            dev.entries = new_entries
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g, dev in enumerate(devs):
+        for (s, c, b, r) in dev.entries:
+            plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
+    plan.n_gpus = sum(1 for d in devs if d.entries)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Online arrival (paper Sec. 4.2: iGniter is "periodically executed to
+# provision GPU resources for newly-arrived inference workloads").
+# Unlike gpu-lets, Alg. 2 may grow the allocations of ORIGINALLY-PLACED
+# workloads on the chosen device to absorb the newcomer's interference.
+# ---------------------------------------------------------------------------
+
+def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
+                 profiles: Dict[str, WorkloadCoefficients],
+                 hw: HardwareSpec) -> ProvisioningPlan:
+    """Place one newly-arrived workload into an existing plan (in place of
+    a full re-run of Alg. 1): greedy minimum-interference device selection
+    with Alg. 2 reallocation, or a fresh device."""
+    c = profiles[spec.model]
+    b = appropriate_batch(spec, c, hw)
+    rl = resource_lower_bound(spec, c, hw, b)
+
+    devs: Dict[int, _Dev] = {}
+    for p in plan.placements:
+        devs.setdefault(p.gpu, _Dev()).entries.append(
+            (p.workload, profiles[p.workload.model], p.batch, p.r))
+
+    best_q, best_alloc, best_inter = -1, None, R_MAX + 1.0
+    for q, dev in sorted(devs.items()):
+        r_a = alloc_gpus(dev, spec, c, b, rl, hw)
+        if r_a is None:
+            continue
+        old = [e[3] for e in dev.entries] + [rl]
+        r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
+        if r_inter < best_inter - 1e-12:
+            best_q, best_alloc, best_inter = q, r_a, r_inter
+
+    new_plan = ProvisioningPlan(hardware=plan.hardware or hw)
+    if best_q == -1:
+        g_new = (max(devs) + 1) if devs else 0
+        new_plan.placements = list(plan.placements) + [
+            Placement(workload=spec, gpu=g_new, r=rl, batch=b)]
+    else:
+        for p in plan.placements:
+            if p.gpu != best_q:
+                new_plan.placements.append(p)
+        dev = devs[best_q]
+        for (s, _, bb, _), r_new in zip(dev.entries, best_alloc[:-1]):
+            new_plan.placements.append(
+                Placement(workload=s, gpu=best_q, r=r_new, batch=bb))
+        new_plan.placements.append(
+            Placement(workload=spec, gpu=best_q, r=best_alloc[-1], batch=b))
+    new_plan.n_gpus = len({p.gpu for p in new_plan.placements})
+    return new_plan
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous type selection (paper Sec. 5.3, Fig. 20)
+# ---------------------------------------------------------------------------
+
+def provision_cheapest(specs: Sequence[WorkloadSpec],
+                       profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
+                       hardware: Sequence[HardwareSpec]
+                       ) -> Tuple[ProvisioningPlan, HardwareSpec]:
+    """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
+    best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
+    errors = []
+    for hw in hardware:
+        try:
+            plan = provision(specs, profiles_by_hw[hw.name], hw)
+        except InfeasibleError as e:
+            errors.append(str(e))
+            continue
+        if best is None or plan.cost_per_hour() < best[0].cost_per_hour():
+            best = (plan, hw)
+    if best is None:
+        raise InfeasibleError("; ".join(errors))
+    return best
+
+
+def predicted_plan_metrics(plan: ProvisioningPlan,
+                           profiles: Dict[str, WorkloadCoefficients],
+                           hw: HardwareSpec):
+    """Model-predicted latency/throughput for every placement in a plan."""
+    out = {}
+    for g, pls in plan.by_gpu().items():
+        placed = [pm.PlacedWorkload(coeffs=profiles[p.workload.model],
+                                    batch=p.batch, r=p.r) for p in pls]
+        pred = pm.predict_device(placed, hw)
+        for p, wp in zip(pls, pred.per_workload):
+            out[p.workload.name] = wp
+    return out

@@ -1,0 +1,163 @@
+"""Logical-axis -> mesh-axis resolution and activation sharding policies.
+
+Model code annotates params with *logical* axes ("fsdp", "tp", "exp");
+this module resolves them against a concrete mesh:
+
+  fsdp -> "data"   (ZeRO-style parameter/optimizer sharding)
+  tp   -> "model"  (tensor parallelism)
+  exp  -> "pod"    (expert parallelism across pods, when divisible)
+
+Any axis that does not divide the corresponding dim is dropped
+(replicated) rather than erroring — e.g. 4 KV heads never shard over a
+16-way model axis.  Activation policies are per input shape (see
+`repro.launch.shapes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_TO_MESH = {
+    "fsdp": "data",
+    "tp": "model",
+    "exp": "pod",
+}
+
+
+def _mesh_axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_mesh_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def resolve_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                 drop: frozenset = frozenset()) -> P:
+    """Translate one logical PartitionSpec for an array of `shape`."""
+    out = []
+    used = set()
+    for dim, name in enumerate(spec):
+        if name is None:
+            out.append(None)
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        resolved = []
+        for n in names:
+            if n in drop:
+                continue
+            m = LOGICAL_TO_MESH.get(n, n)
+            if m in used or m not in mesh.shape:
+                continue
+            resolved.append(m)
+        size = int(np.prod([mesh.shape[m] for m in resolved])) if resolved else 1
+        if resolved and dim < len(shape) and shape[dim] % size == 0 and size > 1:
+            out.append(tuple(resolved) if len(resolved) > 1 else resolved[0])
+            used.update(resolved)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def resolve_tree(spec_tree, abstract_tree, mesh: Mesh,
+                 drop: frozenset = frozenset()):
+    """Resolve a tree of logical specs against matching abstract arrays."""
+    def f(spec, arr):
+        spec = spec if isinstance(spec, P) else P()
+        # pad spec to array rank
+        padded = tuple(spec) + (None,) * (len(arr.shape) - len(spec))
+        return resolve_spec(P(*padded), arr.shape, mesh, drop)
+    return jax.tree.map(f, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(spec_tree, abstract_tree, mesh: Mesh):
+    resolved = resolve_tree(spec_tree, abstract_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), resolved,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationPolicy:
+    """Per-shape activation sharding knobs (hillclimb levers)."""
+    shard_batch: bool = True
+    seq_shard_residual: bool = True     # sequence-parallel residuals over model
+    vocab_shard_logits: bool = True
+    kv_seq_shard: bool = False          # decode KV cache: shard S over model
+
+    def hints(self, mesh: Mesh, *, batch: int, decode: bool = False):
+        """Build transformer.ShardingHints with resolved specs."""
+        from repro.models.transformer import ShardingHints
+        dp = batch_axes(mesh)
+        bspec = dp if (self.shard_batch and batch % max(
+            1, _mesh_axis_size(mesh, dp)) == 0) else None
+        seq = "model" if (self.seq_shard_residual and not decode
+                          and "model" in mesh.shape) else None
+        resid = P(bspec, seq, None)
+        logits = P(bspec, None,
+                   "model" if self.vocab_shard_logits and "model" in mesh.shape
+                   else None)
+        tp = "model" if "model" in mesh.shape else None
+        return ShardingHints(residual=resid, logits=logits, kv=None,
+                             moe_w_in=P(None, None, tp),
+                             moe_w_out=P(None, tp, None))
+
+
+def cache_specs(cache_abstract, mesh: Mesh, *, batch: int,
+                policy: ActivationPolicy) -> Any:
+    """Logical->resolved specs for a decode cache tree.
+
+    Rules by rank/shape:
+      KV k/v   (L, B, S, KV, hd): batch over dp; S over model if kv_seq_shard
+      pos      (L, B)           : batch over dp
+      mamba ssm (L, B, H, hd, N): batch over dp, heads over model
+      rwkv state (L, B, H, hd, hd): batch over dp, heads over model
+      conv/x prev (L, B, *, d)  : batch over dp
+      cross k/v (L, B, Se, KV, hd): batch over dp
+    """
+    dp = batch_axes(mesh)
+    dp_size = _mesh_axis_size(mesh, dp)
+    b_ok = batch % max(dp_size, 1) == 0 and policy.shard_batch
+
+    def leaf_spec(a):
+        shape = a.shape
+        if len(shape) == 0 or shape == ():
+            return P()
+        spec = [None] * len(shape)
+        # find the batch dim: stacked caches have leading L, batch second —
+        # prefer dim 1 (dim 0 is the layer stack and may collide with batch)
+        bdim = None
+        if len(shape) >= 2 and shape[1] == batch:
+            bdim = 1
+        else:
+            for d, s in enumerate(shape):
+                if s == batch:
+                    bdim = d
+                    break
+        if bdim is not None and b_ok:
+            spec[bdim] = dp if len(dp) > 1 else dp[0]
+        if "model" in mesh.shape:
+            m = mesh.shape["model"]
+            if len(shape) == 5 and bdim == 1:
+                # KV cache (L, B, KV, S, hd) heads-major, or SSM state
+                # (L, B, H, hd, N): the seq dim is the largest of dims 2/3
+                sdim = 2 if shape[2] >= shape[3] else 3
+                if (policy.kv_seq_shard and shape[sdim] % m == 0
+                        and shape[sdim] >= 2048):
+                    spec[sdim] = "model"
+            if not b_ok and len(shape) >= 3 and bdim == 1:
+                # long_500k: batch=1 -> shard the longest remaining dim
+                sizes = [(s, d) for d, s in enumerate(shape) if d > 1]
+                s, d = max(sizes)
+                if s % m == 0 and s >= m:
+                    spec[d] = "model"
+        return resolve_spec(P(*spec), shape, mesh)
+
+    return jax.tree.map(leaf_spec, cache_abstract)

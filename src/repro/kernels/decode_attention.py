@@ -1,0 +1,104 @@
+"""Flash-decode attention — Pallas TPU kernel.
+
+One query token per sequence against a long KV cache:
+grid = (batch, q_heads, kv_blocks); the kv axis is sequential and
+carries the online-softmax state (m, l, acc) in VMEM scratch.  Supports
+GQA, a per-batch valid length (linear caches) and absolute kv position
+masking for rolling SWA buffers.
+
+The (1, hd) query row stays resident in VMEM; each grid step streams one
+(bk, hd) KV tile from HBM — the kernel is purely memory-bound, as decode
+attention should be.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, qpos_ref, kvpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, sm_scale: float,
+                   window: int | None, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale           # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T)                                            # (1, bk)
+
+    qp = qpos_ref[0]                                         # () int32
+    kp = kvpos_ref[0][None, :]                               # (1, bk)
+    mask = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, q_positions, kv_positions, *,
+                     window: int | None = None, bk: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, H, hd); k, v: (B, S, KV, hd);
+    q_positions: (B,) int32; kv_positions: (B, S) int32 (absolute positions,
+    -1 for never-written rolling slots).  Returns (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(bk, S)
+    assert S % bk == 0
+    nk = S // bk
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    qt = q.reshape(B, H, 1, hd)
+    kt = k.swapaxes(1, 2)                                    # (B, KV, S, hd)
+    vt = v.swapaxes(1, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=sm_scale, window=window,
+                          bk=bk, nk=nk),
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),
+            pl.BlockSpec((1, bk), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt, q_positions, kv_positions)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True; on TPU the
+same calls lower to Mosaic.  `INTERPRET` flips automatically.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=INTERPRET)
+
+
+def decode_attention(q, k, v, q_positions, kv_positions, *, window=None,
+                     bk=512):
+    return _decode(q, k, v, q_positions, kv_positions, window=window, bk=bk,
+                   interpret=INTERPRET)
+
+
+def rwkv6_scan(r, k, v, logw, u, *, q_chunk=32):
+    return _rwkv6(r, k, v, logw, u, q_chunk=q_chunk, interpret=INTERPRET)
+
+
+def ssd_scan(xdt, Bm, Cm, dA, *, q_chunk=128):
+    return _ssd(xdt, Bm, Cm, dA, q_chunk=q_chunk, interpret=INTERPRET)

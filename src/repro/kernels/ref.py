@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (exact, unchunked)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """Naive quadratic attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32))
+    qi = jnp.arange(S)[:, None]
+    si = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), jnp.bool_)
+    if causal:
+        mask &= si <= qi
+    if window is not None:
+        mask &= si > qi - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, q_positions, kv_positions, *,
+                         window: int | None = None):
+    """q: (B,1,H,hd); k,v: (B,S,KV,hd); positions as in the kernel."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32))
+    kp = kv_positions[:, None, None, None, :]
+    qp = q_positions[:, None, None, None, None]
+    mask = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Exact sequential RWKV6 recurrence (per-step lax.scan).
+    r,k,v,logw: (B,S,H,hd); u: (H,hd) -> (y (B,S,H,hd) f32, S (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    rf = r.astype(jnp.float32).swapaxes(0, 1)        # (S,B,H,hd)
+    kf = k.astype(jnp.float32).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).swapaxes(0, 1)
+    wf = jnp.exp(logw.astype(jnp.float32)).swapaxes(0, 1)
+    uf = u.astype(jnp.float32)
+
+    def step(S0, xs):
+        rt, kt, vt, wt = xs                          # (B,H,hd)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S0 + uf[None, :, :, None] * kv)
+        S1 = S0 * wt[..., None] + kv
+        return S1, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_fin, ys = jax.lax.scan(step, S0, (rf, kf, vf, wf))
+    return ys.swapaxes(0, 1), S_fin
+
+
+def ssd_ref(xdt, Bm, Cm, dA):
+    """Exact sequential SSD recurrence.
+    xdt: (B,S,H,hd); Bm,Cm: (B,S,H,N); dA: (B,S,H) <= 0."""
+    B, S, H, hd = xdt.shape
+    xf = xdt.astype(jnp.float32).swapaxes(0, 1)
+    bf = Bm.astype(jnp.float32).swapaxes(0, 1)
+    cf = Cm.astype(jnp.float32).swapaxes(0, 1)
+    af = jnp.exp(dA.astype(jnp.float32)).swapaxes(0, 1)   # (S,B,H)
+
+    def step(h, xs):
+        xt, bt, ct, at = xs
+        h = h * at[..., None, None] + jnp.einsum("bhd,bhn->bhdn", xt, bt)
+        y = jnp.einsum("bhn,bhdn->bhd", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, hd, Bm.shape[-1]), jnp.float32)
+    h_fin, ys = jax.lax.scan(step, h0, (xf, bf, cf, af))
+    return ys.swapaxes(0, 1), h_fin

@@ -1,0 +1,95 @@
+"""RWKV6 chunked WKV recurrence — Pallas TPU kernel.
+
+grid = (batch, heads, chunks); the chunk axis is sequential and carries
+the (hd, hd) per-head state in VMEM scratch.  Each step computes the
+exact factorized intra-chunk score matmul (see repro.models.rwkv) plus
+the carried-state contribution, entirely in VMEM:
+
+    y_t = r_t (S + diag(u) k_t^T v_t) ;  S <- diag(w_t) S + k_t^T v_t
+
+Inputs are the post-projection per-head tensors; logw must already be
+clamped (LOGW_CLAMP in repro.models.rwkv) so exp(cum_Q - cum_s) stays in
+f32 range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sfin_ref, s_scr,
+                *, Q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (Q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)        # (Q, hd), <= 0
+    u = u_ref[0].astype(jnp.float32)             # (1, hd)
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_prev = cum - lw
+    tot = cum[-1:, :]                            # (1, hd)
+    r_f = r * jnp.exp(cum_prev - tot)
+    k_f = k * jnp.exp(tot - cum)
+    scores = r_f @ k_f.T                         # (Q, Q) = r.k * exp ratios
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    scores = jnp.where(ti > si, scores, 0.0)
+    diag = jnp.sum(r * (u * k), axis=1)          # (Q,)
+    scores = scores + jnp.diag(diag)
+    S0 = s_scr[...]                              # (hd, hd)
+    y = scores @ v + (r * jnp.exp(cum_prev)) @ S0
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_scr[...] = S0 * jnp.exp(tot).T + k_f.T @ v
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sfin_ref[0, 0] = s_scr[...].astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, *, q_chunk: int = 32,
+               interpret: bool = False):
+    """r,k,v,logw: (B, S, H, hd); u: (H, hd).
+    Returns (y (B,S,H,hd), final state (B,H,hd,hd) f32)."""
+    B, S, H, hd = r.shape
+    Q = min(q_chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def t(x):
+        return x.swapaxes(1, 2)                  # (B, H, S, hd)
+
+    y, s_fin = pl.pallas_call(
+        functools.partial(_wkv_kernel, Q=Q, nc=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(t(r), t(k), t(v), t(logw), u)
+    return y.swapaxes(1, 2), s_fin

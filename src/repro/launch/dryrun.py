@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# 512 placeholder host devices back both the 16x16 single-pod mesh and the
+# 2x16x16 multi-pod mesh.  Never set this globally (smoke tests see 1 dev).
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input shape)
+combination on the production meshes, proving the distribution config is
+coherent without real hardware.
+
+For each combination this records:
+  * memory_analysis()    — bytes per device (proves it fits)
+  * cost_analysis()      — XLA's own flops/bytes (scan bodies counted once)
+  * roofline terms       — from our trip-count-aware HLO analyzer
+    (repro.profiling.hlo_analysis): compute / memory / collective seconds
+    per step per device, dominant term, collective breakdown.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # full matrix
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 512-chip mesh
+  PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, applicable, skip_reason
+from repro.launch.steps import build_step
+from repro.profiling import hlo_analysis as H
+from repro.profiling.metrics import forward_flops
+from repro.launch.shapes import effective_config
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N_active*D for inference."""
+    cfg = effective_config(arch, shape_name)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def run_one(arch: str, shape_name: str, mesh, *, save_hlo: str | None = None):
+    t0 = time.time()
+    st = build_step(arch, shape_name, mesh)
+    with mesh:
+        lowered = st.fn.lower(*st.abstract_args)
+        compiled = lowered.compile()
+    elapsed = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(txt)
+    r = H.roofline_from_hlo(txt)
+    n_dev = mesh.devices.size
+    mf = model_flops(arch, shape_name)
+    hlo_flops_global = r.flops * n_dev
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "compile_s": round(elapsed, 1),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "fits_hbm": bool(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                         < HBM_PER_CHIP),
+        "xla_cost_flops_per_dev": float(ca.get("flops", 0.0)),
+        "hlo_flops_per_dev": r.flops,
+        "hbm_bytes_per_dev": r.hbm_bytes,
+        "collective_bytes_per_dev": r.collective_bytes,
+        "compute_s": r.compute_s,
+        "memory_s": r.memory_s,
+        "collective_s": r.collective_s,
+        "dominant": r.dominant,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "per_collective": {k: v for k, v in r.per_collective.items()},
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo-dir", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    records = []
+    for mesh in meshes:
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+        for arch in archs:
+            for shape_name in shapes:
+                if not applicable(arch, shape_name):
+                    records.append({
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "skip", "reason": skip_reason(arch, shape_name),
+                    })
+                    print(f"[skip] {arch} {shape_name}: "
+                          f"{skip_reason(arch, shape_name)}", flush=True)
+                    continue
+                hlo_path = None
+                if args.save_hlo_dir:
+                    os.makedirs(args.save_hlo_dir, exist_ok=True)
+                    hlo_path = os.path.join(
+                        args.save_hlo_dir, f"{arch}_{shape_name}_{mesh_name}.hlo")
+                try:
+                    rec = run_one(arch, shape_name, mesh, save_hlo=hlo_path)
+                    records.append(rec)
+                    print(f"[ok]   {arch:18s} {shape_name:12s} {mesh_name:8s} "
+                          f"compile={rec['compile_s']:6.1f}s "
+                          f"mem={(rec['temp_bytes_per_dev']+rec['arg_bytes_per_dev'])/2**30:6.2f}GB "
+                          f"fits={rec['fits_hbm']} dom={rec['dominant']:10s} "
+                          f"c/m/i(ms)={1e3*rec['compute_s']:9.2f}/"
+                          f"{1e3*rec['memory_s']:9.2f}/{1e3*rec['collective_s']:9.2f}",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    records.append({
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "fail", "error": f"{type(e).__name__}: {e}"})
+                    print(f"[FAIL] {arch} {shape_name} {mesh_name}: {e}",
+                          flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    n_ok = sum(1 for r in records if r["status"] == "ok")
+    n_skip = sum(1 for r in records if r["status"] == "skip")
+    n_fail = sum(1 for r in records if r["status"] == "fail")
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skip, {n_fail} fail ==")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

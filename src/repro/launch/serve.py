@@ -1,0 +1,75 @@
+"""Serving launcher: provision with iGniter, then serve.
+
+Cluster-scale (simulator, paper's 12-workload study):
+  PYTHONPATH=src python -m repro.launch.serve --mode cluster [--strategy iGniter]
+
+Single-host JAX engine (reduced model, real batched inference on CPU):
+  PYTHONPATH=src python -m repro.launch.serve --mode engine --arch qwen3-4b
+"""
+import argparse
+import time
+
+
+def cluster(strategy: str, duration: float, poisson: bool):
+    from repro.core.experiments import all_plans, evaluate_plans, fitted_context
+    from repro.serving.workload import specs_by_name
+    ctx = fitted_context()
+    plans = all_plans(ctx)
+    if strategy not in plans:
+        raise SystemExit(f"unknown strategy {strategy}; one of {list(plans)}")
+    from repro.serving.simulator import simulate_plan
+    from repro.serving.workload import models
+    res = simulate_plan(plans[strategy], models(), ctx.hw,
+                        duration_s=duration, shadow=(strategy == "iGniter"),
+                        poisson=poisson)
+    sb = specs_by_name()
+    print(plans[strategy].summary())
+    print(f"devices={plans[strategy].n_gpus} "
+          f"cost=${plans[strategy].cost_per_hour():.2f}/h "
+          f"arrivals={'poisson' if poisson else 'constant'}")
+    for w, m in sorted(res.per_workload.items(), key=lambda kv: int(kv[0][1:])):
+        s = sb[w]
+        flag = "VIOLATION" if (m["p99_ms"] > s.slo_ms
+                               or m["rps"] < 0.95 * s.rate_rps) else "ok"
+        print(f"  {w:4s} p99={m['p99_ms']:7.1f}/{s.slo_ms:5.0f} ms "
+              f"rps={m['rps']:6.1f}/{s.rate_rps:5.0f} {flag}")
+
+
+def engine(arch: str, n_requests: int):
+    import numpy as np
+    from repro.configs import REGISTRY, reduced
+    from repro.serving.engine import Request, ServingEngine
+    cfg = reduced(REGISTRY[arch], layers=2, d_model=256)
+    eng = ServingEngine(cfg, batch_size=4, prompt_len=32)
+    rng = np.random.default_rng(0)
+    done = []
+    for i in range(n_requests):
+        eng.submit(Request(rid=i, tokens=rng.integers(
+            3, cfg.vocab_size, size=32).astype(np.int32),
+            arrival_s=time.time()))
+        if (i + 1) % 4 == 0:
+            done.extend(eng.pump())
+    done.extend(eng.pump())
+    lats = np.array([c.latency_ms for c in done])
+    print(f"{arch}: served {len(done)} requests, "
+          f"p50={np.percentile(lats, 50):.1f} ms "
+          f"p99={np.percentile(lats, 99):.1f} ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("cluster", "engine"), default="cluster")
+    ap.add_argument("--strategy", default="iGniter")
+    ap.add_argument("--duration", type=float, default=20.0)
+    ap.add_argument("--poisson", action="store_true")
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--requests", type=int, default=32)
+    args = ap.parse_args()
+    if args.mode == "cluster":
+        cluster(args.strategy, args.duration, args.poisson)
+    else:
+        engine(args.arch, args.requests)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""Jitted, sharded step builders + ShapeDtypeStruct input specs.
+
+Everything here works on abstract values only (no allocation) so the
+512-device dry-run can lower+compile every (arch x shape) combination.
+The same builders drive the real CPU smoke runs with a 1x1 mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as sh
+from repro.launch.shapes import SHAPES, InputShape, effective_config
+from repro.models import transformer as T
+from repro.models.zoo import Model, build_model
+from repro.training.optimizer import AdamW, AdamWState, QuantState
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    model = build_model(cfg)
+    return model.train_batch_specs(shape.global_batch, shape.seq_len, dtype)
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    window = cfg.sliding_window
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 dtype=dtype, window=window))
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape,
+                       dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cache": abstract_cache(cfg, shape, dtype),
+    }
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: InputShape,
+                        dtype=jnp.bfloat16) -> Dict[str, Any]:
+    model = build_model(cfg)
+    batch = model.train_batch_specs(shape.global_batch, shape.seq_len, dtype)
+    del batch["labels"]
+    return {"batch": batch, "cache": abstract_cache(cfg, shape, dtype)}
+
+
+def input_specs(arch: str, shape_name: str, dtype=jnp.bfloat16):
+    """Public entry: all model inputs for one (arch, shape) as
+    ShapeDtypeStructs (weak-type-correct, shardable, no allocation)."""
+    cfg = effective_config(arch, shape_name)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, dtype)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, dtype)
+    return decode_input_specs(cfg, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                      # jitted callable
+    abstract_args: Tuple         # args as ShapeDtypeStructs (lower(*args))
+    in_shardings: Any
+    cfg: ArchConfig
+
+
+SERVE_TP_FIT_BYTES = 6e9   # replicate-over-data threshold for serving params
+
+
+def _param_shardings(model: Model, mesh: Mesh, dtype, *, serve: bool = False):
+    abstract = model.abstract_params(dtype)
+    drop = frozenset()
+    if serve and "model" in mesh.shape:
+        total = sum(jnp.dtype(a.dtype).itemsize * math.prod(a.shape)
+                    for a in jax.tree.leaves(abstract))
+        if total / mesh.shape["model"] <= SERVE_TP_FIT_BYTES:
+            # classic TP serving: replicate over data, shard over model —
+            # avoids per-step FSDP all-gathers when the model fits
+            drop = frozenset({"fsdp"})
+    specs = sh.resolve_tree(model.param_specs(), abstract, mesh, drop)
+    return abstract, jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# gradient-accumulation factor per arch for train_4k: keeps the activation
+# working set under one v5e's HBM at global_batch=256 (dry-run validated)
+TRAIN_MICROBATCHES = {
+    "zamba2-2.7b": 4,
+    "mixtral-8x22b": 16,
+    "dbrx-132b": 16,
+}
+
+# gradient-accumulation dtype: the 132-140B MoE models on a 256-chip v5e
+# pod are optimizer-memory-bound (f32 p+m+v+accum = 8.2 GiB/dev); bf16
+# accumulation saves 1 GiB/dev at a ~4-bit mantissa cost over 16
+# microbatches (EXPERIMENTS.md §Perf discusses the trade and the
+# multi-pod ZeRO alternative).
+TRAIN_ACC_DTYPE = {
+    "mixtral-8x22b": jnp.bfloat16,
+    "dbrx-132b": jnp.bfloat16,
+}
+
+# 8-bit Adam moments for the 100B+ MoE models (saves ~6 bytes/param/dev;
+# the f32 master weights stay full precision) — EXPERIMENTS.md §Perf.
+TRAIN_OPTIMIZER = {
+    "mixtral-8x22b": AdamW(quant_min_size=1 << 22),
+    "dbrx-132b": AdamW(quant_min_size=1 << 22),
+}
+
+
+def make_train_step(arch: str, mesh: Mesh, *,
+                    shape: Optional[InputShape] = None,
+                    policy: Optional[sh.ActivationPolicy] = None,
+                    opt: Optional[AdamW] = None,
+                    remat: bool = True,
+                    microbatches: Optional[int] = None,
+                    moe_ep: Optional[bool] = None) -> BuiltStep:
+    shape = shape or SHAPES["train_4k"]
+    cfg = effective_config(arch, shape.name)
+    policy = policy or sh.ActivationPolicy()
+    opt = opt or TRAIN_OPTIMIZER.get(arch, AdamW())
+    model = build_model(cfg)
+    M = microbatches if microbatches is not None else \
+        TRAIN_MICROBATCHES.get(arch, 1)
+
+    abstract_params, p_shard = _param_shardings(model, mesh, jnp.float32)
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+
+    def _moment_shard(p_ns, opt_leaf):
+        if isinstance(opt_leaf, QuantState):
+            return QuantState(
+                q=p_ns,
+                scale=NamedSharding(mesh, sh.resolve_spec(
+                    p_ns.spec, opt_leaf.scale.shape, mesh)))
+        return p_ns
+
+    _, ptd = jax.tree.flatten(abstract_params)
+    def _opt_tree_shard(moments):
+        leaves = ptd.flatten_up_to(moments)
+        p_ns = ptd.flatten_up_to(p_shard)
+        return jax.tree.unflatten(ptd, [
+            _moment_shard(ns, ol) for ns, ol in zip(p_ns, leaves)])
+
+    o_shard = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=_opt_tree_shard(abstract_opt.mu),
+        nu=_opt_tree_shard(abstract_opt.nu))
+    batch_abs = train_input_specs(cfg, shape)
+    dp = sh.batch_axes(mesh)
+    b_shard = jax.tree.map(
+        lambda a: NamedSharding(mesh, sh.resolve_spec(
+            P(dp if len(dp) > 1 else (dp[0] if dp else None)), a.shape, mesh)),
+        batch_abs)
+    hints = policy.hints(mesh, batch=shape.global_batch)
+    if moe_ep is None:
+        # default: expert parallelism whenever the mesh admits it —
+        # n_experts == data axis AND the microbatch shards over all batch
+        # axes (EXPERIMENTS.md §Perf pair 2 it. 6: dbrx -2.3x collectives)
+        dp_size = 1
+        for a in sh.batch_axes(mesh):
+            dp_size *= mesh.shape[a]
+        moe_ep = (cfg.is_moe
+                  and cfg.n_experts * cfg.expert_shards
+                  == mesh.shape.get("data", 0)
+                  and (shape.global_batch // M) % dp_size == 0)
+    if moe_ep:
+        assert cfg.is_moe and (cfg.n_experts * cfg.expert_shards
+                               == mesh.shape["data"]), \
+            "EP requires n_experts * expert_shards == data axis size"
+        # expert weights: E over data (resident experts), F over model
+        import dataclasses as _dc
+        hints = _dc.replace(hints, moe_ep=(mesh, "data",
+                                           sh.batch_axes(mesh)))
+        for wname, spec in (("w_gate", P(None, "data", None, "model")),
+                            ("w_up", P(None, "data", None, "model")),
+                            ("w_down", P(None, "data", "model", None))):
+            p_shard["blocks"]["moe"][wname] = NamedSharding(mesh, spec)
+        o_shard = AdamWState(
+            step=o_shard.step,
+            mu=_opt_tree_shard(abstract_opt.mu),
+            nu=_opt_tree_shard(abstract_opt.nu))
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def loss_fn(params, batch):
+        pc = T.cast_params(params, compute_dtype)
+        return model.loss(pc, batch, shard=hints, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # gradient accumulation over M microbatches (scan, f32 accum)
+            mb = jax.tree.map(
+                lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:]), batch)
+
+            acc_dtype = TRAIN_ACC_DTYPE.get(arch, jnp.float32)
+            if acc_dtype == jnp.bfloat16:
+                # differentiate wrt the bf16 compute copy: grad transients
+                # and the accumulator are bf16 (1 GiB each saved on the
+                # 140B MoE models); Adam still sees f32 at update time
+                pc = T.cast_params(params, compute_dtype)
+
+                def mb_loss(pc_, m_batch):
+                    return model.loss(pc_, m_batch, shard=hints, remat=remat)
+
+                def acc_step(carry, m_batch):
+                    loss_acc, g_acc = carry
+                    l, g = jax.value_and_grad(mb_loss)(pc, m_batch)
+                    g_acc = jax.tree.map(lambda ga, gi: ga + gi, g_acc, g)
+                    return (loss_acc + l, g_acc), None
+
+                zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), pc)
+            else:
+                def acc_step(carry, m_batch):
+                    loss_acc, g_acc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, m_batch)
+                    g_acc = jax.tree.map(
+                        lambda ga, gi: ga + gi.astype(acc_dtype), g_acc, g)
+                    return (loss_acc + l, g_acc), None
+
+                zeros = jax.tree.map(
+                    lambda a: jnp.zeros(a.shape, acc_dtype), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_shard, o_shard, b_shard),
+                 out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+                 donate_argnums=(0, 1))
+    return BuiltStep(fn=fn,
+                     abstract_args=(abstract_params, abstract_opt, batch_abs),
+                     in_shardings=(p_shard, o_shard, b_shard), cfg=cfg)
+
+
+def make_decode_step(arch: str, mesh: Mesh, *,
+                     shape: Optional[InputShape] = None,
+                     policy: Optional[sh.ActivationPolicy] = None) -> BuiltStep:
+    shape = shape or SHAPES["decode_32k"]
+    cfg = effective_config(arch, shape.name)
+    policy = policy or sh.ActivationPolicy(
+        seq_shard_residual=False, kv_seq_shard=True)
+    model = build_model(cfg)
+
+    abstract_params, p_shard = _param_shardings(model, mesh, jnp.bfloat16,
+                                                serve=True)
+    cache_abs = abstract_cache(cfg, shape)
+    c_specs = sh.cache_specs(cache_abs, mesh, batch=shape.global_batch,
+                             policy=policy)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+    dp = sh.batch_axes(mesh)
+    tok_sh = NamedSharding(mesh, sh.resolve_spec(
+        P(dp if len(dp) > 1 else (dp[0] if dp else None)),
+        (shape.global_batch, 1), mesh))
+    hints = policy.hints(mesh, batch=shape.global_batch, decode=True)
+
+    def serve_step(params, token, cache):
+        logits, new_cache = model.decode_step(params, token, cache,
+                                              shard=hints)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, tok_sh, c_shard),
+                 out_shardings=(tok_sh, c_shard),
+                 donate_argnums=(2,))
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return BuiltStep(fn=fn, abstract_args=(abstract_params, tok_abs, cache_abs),
+                     in_shardings=(p_shard, tok_sh, c_shard), cfg=cfg)
+
+
+def make_prefill_step(arch: str, mesh: Mesh, *,
+                      shape: Optional[InputShape] = None,
+                      policy: Optional[sh.ActivationPolicy] = None) -> BuiltStep:
+    shape = shape or SHAPES["prefill_32k"]
+    cfg = effective_config(arch, shape.name)
+    policy = policy or sh.ActivationPolicy(kv_seq_shard=True)
+    model = build_model(cfg)
+
+    abstract_params, p_shard = _param_shardings(model, mesh, jnp.bfloat16,
+                                                serve=True)
+    batch_abs = train_input_specs(cfg, shape)
+    del batch_abs["labels"]
+    cache_abs = abstract_cache(cfg, shape)
+    c_specs = sh.cache_specs(cache_abs, mesh, batch=shape.global_batch,
+                             policy=policy)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+    dp = sh.batch_axes(mesh)
+    b_shard = jax.tree.map(
+        lambda a: NamedSharding(mesh, sh.resolve_spec(
+            P(dp if len(dp) > 1 else (dp[0] if dp else None)), a.shape, mesh)),
+        batch_abs)
+    hints = policy.hints(mesh, batch=shape.global_batch)
+
+    def prefill_step(params, batch, cache):
+        logits, new_cache = model.prefill(params, batch, cache, shard=hints)
+        return logits, new_cache
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(p_shard, b_shard, c_shard),
+                 out_shardings=(None, c_shard),
+                 donate_argnums=(2,))
+    return BuiltStep(fn=fn, abstract_args=(abstract_params, batch_abs, cache_abs),
+                     in_shardings=(p_shard, b_shard, c_shard), cfg=cfg)
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh,
+               policy: Optional[sh.ActivationPolicy] = None) -> BuiltStep:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_train_step(arch, mesh, shape=shape, policy=policy)
+    if shape.kind == "prefill":
+        return make_prefill_step(arch, mesh, shape=shape, policy=policy)
+    return make_decode_step(arch, mesh, shape=shape, policy=policy)

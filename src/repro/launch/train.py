@@ -1,0 +1,43 @@
+"""Training launcher.
+
+CPU-scale real run (reduced config, real data pipeline + checkpoints):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 100
+
+Production-mesh compile check for the full config (no allocation):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --dry-run
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_one
+        from repro.launch.mesh import make_production_mesh
+        rec = run_one(args.arch, "train_4k", make_production_mesh())
+        print({k: rec[k] for k in ("arch", "compile_s", "fits_hbm", "dominant",
+                                   "compute_s", "memory_s", "collective_s")})
+        return
+
+    from repro.configs import get_config, reduced
+    from repro.training.loop import train
+    cfg = reduced(get_config(args.arch), layers=2, d_model=256)
+    report = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                   ckpt_dir=args.ckpt_dir)
+    print(f"done: final loss {report.losses[-1]:.4f} "
+          f"({report.tokens_per_s:,.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import transformer, zoo  # noqa: F401

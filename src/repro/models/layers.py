@@ -1,0 +1,184 @@
+"""Core layers: norms, MLPs, embeddings, parameter init.
+
+Parameters are plain nested dicts of jnp arrays.  Every ``init_*`` has a
+``specs_*`` twin that returns an identically-structured tree of
+*logical-axis* PartitionSpecs (resolved to mesh axes by
+``repro.distributed.sharding``).  Tests assert the trees stay in sync.
+
+Logical axes used for params:
+  "fsdp"  -- sharded over the data axis (ZeRO-style)
+  "tp"    -- tensor-parallel over the model axis
+  "exp"   -- expert dimension (resolved to the model axis when divisible)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def linear(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, d, *, with_bias=False):
+    del key
+    p = {"scale": jnp.zeros((d,), jnp.float32) if not with_bias else jnp.ones((d,), jnp.float32)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def specs_norm(*, with_bias=False):
+    p = {"scale": P(None)}
+    if with_bias:
+        p["bias"] = P(None)
+    return p
+
+
+def apply_norm(p, x, eps=1e-5):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, ff, act_fn: str = "silu"):
+    ks = jax.random.split(key, 3)
+    if act_fn == "silu":
+        return {
+            "w_gate": _dense_init(ks[0], (d, ff)),
+            "w_up": _dense_init(ks[1], (d, ff)),
+            "w_down": _dense_init(ks[2], (ff, d), in_axis=0),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, ff)),
+        "b_up": jnp.zeros((ff,), jnp.float32),
+        "w_down": _dense_init(ks[1], (ff, d)),
+        "b_down": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def specs_mlp(act_fn: str = "silu"):
+    if act_fn == "silu":
+        return {"w_gate": P("fsdp", "tp"), "w_up": P("fsdp", "tp"),
+                "w_down": P("tp", "fsdp")}
+    return {"w_up": P("fsdp", "tp"), "b_up": P("tp"),
+            "w_down": P("tp", "fsdp"), "b_down": P(None)}
+
+
+def apply_mlp(p, x, act_fn: str = "silu"):
+    if act_fn == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": _dense_init(key, (vocab, d), in_axis=1)}
+
+
+def specs_embedding():
+    return {"table": P("tp", "fsdp")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Logits via the (possibly tied) embedding table: (..., d) -> (..., V)."""
+    return x @ p["table"].T
+
+
+def init_head(key, d, vocab):
+    return {"w": _dense_init(key, (d, vocab))}
+
+
+def specs_head():
+    return {"w": P("fsdp", "tp")}
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings (whisper-style sinusoidal)
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(n_pos: int, d: int, offset=0):
+    pos = jnp.arange(n_pos, dtype=jnp.float32) + offset
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10_000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (avoids materializing (B,S,V) logits in full)
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(x, table, labels, *, chunk: int = 512,
+                          logits_spec: Optional[P] = None):
+    """Mean token cross-entropy computed over sequence chunks.
+
+    x: (B, S, D) final hidden states; table: (V, D) unembedding;
+    labels: (B, S) int32.  Returns scalar mean loss (f32).
+    """
+    B, S, D = x.shape
+    n = max(1, S // chunk)
+    while S % n:
+        n -= 1
+    xs = x.reshape(B, n, S // n, D).swapaxes(0, 1)       # (n, B, s, D)
+    ls = labels.reshape(B, n, S // n).swapaxes(0, 1)
+
+    def body(carry, xl):
+        xc, lc = xl
+        logits = (xc.astype(jnp.float32) @ table.T.astype(jnp.float32))
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)

@@ -1,0 +1,232 @@
+"""Mixture-of-Experts layer (Mixtral/DBRX style top-k routing).
+
+Design notes (TPU/GSPMD-aware):
+
+* Dispatch is *per batch row* and *per sequence chunk*: we scan over the
+  sequence in chunks and build a (B, S_c, E, C) dispatch tensor with
+  capacity C = ceil(S_c * top_k * cf / E).  All dispatch tensors keep the
+  batch dim leading, so GSPMD shards every intermediate over the batch
+  axes and never all-gathers tokens.  Chunking bounds both the dispatch
+  einsum FLOPs (~cf * top_k/E relative overhead) and its memory.
+* Expert weights are (E, D, F) with F tensor-parallel over "tp" and D
+  over "fsdp"; each device computes all experts on its batch shard with
+  its F-slice (expert compute shards over tp exactly like a dense MLP).
+* Dropping semantics: per-(row, chunk) capacity; dropped assignments
+  contribute nothing (combine weights are zero), matching GShard/Switch.
+* Aux load-balance loss (Switch style): E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init
+
+
+def init_moe(key, cfg):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sh = cfg.expert_shards
+    Ev, Fv = E * sh, ff // sh       # virtual experts (F-split; sh=1 = off)
+    assert ff % sh == 0
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, E)),
+        "w_gate": _dense_init(ks[1], (Ev, d, Fv), in_axis=1),
+        "w_up": _dense_init(ks[2], (Ev, d, Fv), in_axis=1),
+        "w_down": _dense_init(ks[3], (Ev, Fv, d), in_axis=1),
+    }
+
+
+def specs_moe(cfg):
+    del cfg
+    return {
+        "router": P(None, None),
+        "w_gate": P("exp", "fsdp", "tp"),
+        "w_up": P("exp", "fsdp", "tp"),
+        "w_down": P("exp", "tp", "fsdp"),
+    }
+
+
+def _route(router_w, x, top_k: int):
+    """x: (..., D) -> (top-k ids, normalized gates, full probs)."""
+    logits = (x.astype(jnp.float32) @ router_w)               # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)                  # (..., K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return ids, gates, probs
+
+
+def _dispatch_combine(ids, gates, E: int, C: int, ks: int = 1):
+    """Build dispatch/combine tensors for one chunk.
+
+    ids, gates: (B, S, K).  Returns dispatch (B,S,E*ks,C) bool-ish f32 and
+    combine (B,S,E*ks,C) f32 (gate-weighted).  ks > 1 repeats every
+    assignment across the ks F-split virtual shards of its expert (SwiGLU
+    sums exactly over F, so gate-weighted shard outputs add to the full
+    expert output).
+    Position within expert = running count over (s, k) order per row.
+    """
+    B, S, K = ids.shape
+    oh = jax.nn.one_hot(ids, E, dtype=jnp.float32)            # (B,S,K,E)
+    if ks > 1:
+        oh = jnp.repeat(oh, ks, axis=-1)                      # (B,S,K,E*ks)
+        E = E * ks
+    flat = oh.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # (B,S*K,E) position
+    pos = jnp.sum(pos * flat, axis=-1)                        # (B,S*K)
+    keep = pos < C
+    posc = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # (B,S*K,E,C)
+    dc = flat[..., :, None] * posc[..., None, :]
+    dc = dc.reshape(B, S, K, E, C)
+    dispatch = jnp.sum(dc, axis=2)                            # (B,S,E,C)
+    combine = jnp.sum(dc * gates[..., None, None], axis=2)
+    return dispatch, combine
+
+
+def apply_moe_ep(p, x, cfg, *, mesh, ep_axis: str = "data",
+                 batch_axes=("data",), tp_axis: str = "model",
+                 chunk: int = 4096):
+    """Expert-parallel MoE: tokens move (all-to-all), weights stay resident.
+
+    Requires n_experts == mesh.shape[ep_axis] (e.g. dbrx's 16 experts on
+    the 16-way data axis).  Layout (EXPERIMENTS.md §Perf pair 2 it. 6):
+
+      * x arrives sequence-sharded over the tp axis (the residual's
+        layout), so each (data, model) rank dispatches only its own
+        S-chunk — no duplicated dispatch compute;
+      * token blocks all-to-all over the ep axis to the expert owner;
+      * the owner all-gathers tokens over tp, runs the F-tensor-parallel
+        expert FFN, and psum_scatters the partial outputs back to each
+        tp rank's own token chunk (one reduce, half an all-reduce);
+      * blocks all-to-all back and combine locally.
+
+    Per-step weight traffic of the FSDP path disappears entirely; the
+    moved bytes are capacity-padded tokens instead.
+    """
+    from jax.sharding import PartitionSpec
+    B, S, D = x.shape
+    E, K, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    ksh = cfg.expert_shards
+    Ev = E * ksh
+    assert Ev == mesh.shape[ep_axis], (Ev, dict(mesh.shape))
+    M = mesh.shape.get(tp_axis, 1)
+    dtype = x.dtype
+
+    ids_all, gates_all, probs_all = _route(p["router"], x, K)
+    frac = jnp.mean(jax.nn.one_hot(ids_all[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = jnp.mean(probs_all, axis=(0, 1))
+    aux = E * jnp.sum(frac * prob) * cfg.router_aux_loss
+
+    manual = tuple(dict.fromkeys((ep_axis, tp_axis) + tuple(batch_axes)))
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+    seq_ok = S % M == 0
+
+    def local_fn(xb, idb, gtb, wg, wu, wd):
+        # xb: (B_loc, S_loc, D); wg/wu: (1, D, F_loc); wd: (1, F_loc, D)
+        Bl, Sl, _ = xb.shape
+        C = max(K, int(math.ceil(Sl * K * cf / E)))
+        dispatch, combine = _dispatch_combine(idb, gtb, E, C, ksh)
+        send = jnp.einsum("bsd,bsec->ebcd", xb, dispatch.astype(xb.dtype))
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=True)              # (E_src,Bl,C,D)
+        toks = jax.lax.all_gather(recv, tp_axis, axis=0, tiled=True)
+        flat = toks.reshape(-1, D)                         # (M*E*Bl*C, D)
+        h = jax.nn.silu(flat @ wg[0]) * (flat @ wu[0])     # F_loc columns
+        out = (h @ wd[0]).reshape((M * Ev,) + recv.shape[1:])  # partial/tp
+        red = jax.lax.psum_scatter(out, tp_axis, scatter_dimension=0,
+                                   tiled=True)             # (E_src,Bl,C,D)
+        back = jax.lax.all_to_all(red.astype(xb.dtype), ep_axis,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        y = jnp.einsum("ebcd,bsec->bsd", back, combine.astype(xb.dtype))
+        return y
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(PartitionSpec(bspec, tp_axis if seq_ok else None, None),
+                  PartitionSpec(bspec, tp_axis if seq_ok else None, None),
+                  PartitionSpec(bspec, tp_axis if seq_ok else None, None),
+                  PartitionSpec(ep_axis, None, tp_axis),
+                  PartitionSpec(ep_axis, None, tp_axis),
+                  PartitionSpec(ep_axis, tp_axis, None)),
+        out_specs=PartitionSpec(bspec, tp_axis if seq_ok else None, None),
+        axis_names=set(manual),
+    )
+    y = fn(x, ids_all, gates_all,
+           p["w_gate"].astype(dtype), p["w_up"].astype(dtype),
+           p["w_down"].astype(dtype))
+    return y, aux
+
+
+def apply_moe(p, x, cfg, *, chunk: int = 512, w_specs=(None, None)):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    w_specs: resolved PartitionSpecs for the bf16 expert weights after the
+    explicit once-per-layer gather (perf iteration, EXPERIMENTS.md §Perf:
+    without this, the chunk-rematted scan re-gathered the f32 master
+    weights PER CHUNK, ~7 TB of ICI bytes per mixtral train step)."""
+    B, S, D = x.shape
+    E, K, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    ksh = cfg.expert_shards
+    dtype = x.dtype
+    # adaptive chunking (perf iteration, EXPERIMENTS.md §Perf): under
+    # gradient accumulation the per-microbatch batch is small, so one
+    # 4096-token chunk is affordable — and every extra chunk costs a
+    # per-chunk all-reduce of the expert weight-gradient partials in the
+    # backward pass (~1 TB/chunk/step for mixtral at 16 microbatches).
+    chunk = max(chunk, min(S, 4096))
+
+    ids_all, gates_all, probs_all = _route(p["router"], x, K)
+
+    # Switch aux loss over the full sequence (f32)
+    frac = jnp.mean(jax.nn.one_hot(ids_all[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = jnp.mean(probs_all, axis=(0, 1))
+    aux = E * jnp.sum(frac * prob) * cfg.router_aux_loss
+
+    n = max(1, S // chunk)
+    while S % n:
+        n -= 1
+    Sc = S // n
+    C = max(K, int(math.ceil(Sc * K * cf / E)))
+
+    xs = x.reshape(B, n, Sc, D).swapaxes(0, 1)                # (n,B,Sc,D)
+    ids_c = ids_all.reshape(B, n, Sc, K).swapaxes(0, 1)
+    gates_c = gates_all.reshape(B, n, Sc, K).swapaxes(0, 1)
+
+    # cast the SHARD to bf16 first, then gather once per layer (fsdp axis
+    # dropped by the hint spec); the chunk scan closes over gathered bf16
+    wg = p["w_gate"].astype(dtype)
+    wu = p["w_up"].astype(dtype)
+    wd = p["w_down"].astype(dtype)
+    w_in_spec, w_out_spec = w_specs
+    if w_in_spec is not None:
+        wg = jax.lax.with_sharding_constraint(wg, w_in_spec)
+        wu = jax.lax.with_sharding_constraint(wu, w_in_spec)
+    if w_out_spec is not None:
+        wd = jax.lax.with_sharding_constraint(wd, w_out_spec)
+
+    def body(carry, inp):
+        xc, idc, gtc = inp                                    # (B,Sc,D),(B,Sc,K)
+        dispatch, combine = _dispatch_combine(idc, gtc, E, C, ksh)
+        xe = jnp.einsum("bsd,bsec->becd", xc, dispatch.astype(dtype))
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg))
+        h = h * jnp.einsum("becd,edf->becf", xe, wu)
+        oe = jnp.einsum("becf,efd->becd", h, wd)
+        yc = jnp.einsum("becd,bsec->bsd", oe, combine.astype(dtype))
+        return carry, yc
+
+    if n == 1:
+        one = jax.checkpoint(lambda inp: body(0, inp)[1])
+        y = one((xs[0], ids_c[0], gates_c[0])).reshape(B, S, D)
+        return y, aux
+    # chunk-level remat: backward recomputes dispatch/expert activations
+    # instead of saving (n, B, E, C, F) intermediates per chunk
+    body = jax.checkpoint(body)
+    _, ys = jax.lax.scan(body, 0, (xs, ids_c, gates_c))       # (n,B,Sc,D)
+    y = ys.swapaxes(0, 1).reshape(B, S, D)
+    return y, aux

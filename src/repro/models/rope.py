@@ -1,0 +1,71 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency bands into (temporal, height,
+width) sections; each section rotates by its own coordinate.  Text tokens
+use t == h == w == position, so M-RoPE degrades gracefully to 1-D RoPE on
+pure text [arXiv:2409.12191].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    dim = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * dim / head_dim)          # (hd/2,)
+
+
+def _rotate(x, cos, sin):
+    # x: (..., hd) with interleaved halves [x1; x2]
+    hd = x.shape[-1]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    if theta <= 0:
+        return x
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_m_rope(x, positions_thw, theta: float,
+                 sections: Tuple[int, int, int]):
+    """x: (B, S, H, hd); positions_thw: (B, S, 3) int32 (t, h, w coords).
+
+    sections are frequency-band counts summing to hd/2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                             # (hd/2,)
+    # section id per frequency band: 0 -> t, 1 -> h, 2 -> w
+    sec = jnp.concatenate([
+        jnp.full((sections[0],), 0), jnp.full((sections[1],), 1),
+        jnp.full((sections[2],), 2)]).astype(jnp.int32)       # (hd/2,)
+    coords = positions_thw.astype(jnp.float32)[..., sec]      # (B, S, hd/2)
+    ang = coords * freqs                                       # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_positions_thw(positions):
+    """Text tokens: t == h == w == pos. positions: (B, S) -> (B, S, 3)."""
+    return jnp.stack([positions, positions, positions], axis=-1)
+
+
+def vision_positions_thw(batch: int, n_patches: int, t0: int = 0):
+    """Patch grid coordinates for the VLM stub: one frame, sqrt grid."""
+    side = max(1, int(n_patches ** 0.5))
+    idx = jnp.arange(n_patches)
+    h = idx // side
+    w = idx % side
+    t = jnp.full((n_patches,), t0)
+    thw = jnp.stack([t, h, w], axis=-1)                        # (P, 3)
+    return jnp.broadcast_to(thw[None], (batch, n_patches, 3)).astype(jnp.int32)

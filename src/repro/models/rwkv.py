@@ -1,0 +1,243 @@
+"""RWKV6 "Finch" block — data-dependent decay linear attention.
+[arXiv:2404.05892]
+
+Time-mix: data-dependent token-shift (ddlerp with low-rank adjustments),
+per-channel decay w_t = exp(-exp(w0 + lora(x))) and bonus u; recurrence
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t),   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+computed in chunks: intra-chunk via a stable (Q,Q,hd) decay-ratio
+contraction in f32, inter-chunk via a `lax.scan` carrying the (hd,hd)
+state per head.  Channel-mix: squared-ReLU MLP with token shift.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init
+
+LORA_R = 32
+DECAY_R = 64
+
+
+def init_rwkv6(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((6, d), jnp.float32),   # shift mixes: base,r,k,v,w,g
+        "tm_w1": _dense_init(ks[0], (d, 5 * LORA_R)),
+        "tm_w2": 0.01 * jax.random.normal(ks[1], (5, LORA_R, d), jnp.float32),
+        "w0": -6.0 + jax.random.normal(ks[2], (d,), jnp.float32) * 0.3,
+        "dw1": _dense_init(ks[3], (d, DECAY_R)),
+        "dw2": 0.01 * jax.random.normal(ks[4], (DECAY_R, d), jnp.float32),
+        "u": 0.1 * jax.random.normal(ks[5], (H, hd), jnp.float32),
+        "wr": _dense_init(ks[6], (d, d)),
+        "wk": _dense_init(ks[7], (d, d)),
+        "wv": _dense_init(ks[8], (d, d)),
+        "wg": _dense_init(ks[9], (d, d)),
+        "wo": _dense_init(ks[10], (d, d)),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        # channel-mix
+        "mu_ck": 0.5 * jnp.ones((d,), jnp.float32),
+        "mu_cr": 0.5 * jnp.ones((d,), jnp.float32),
+        "cm_k": _dense_init(ks[11], (d, ff)),
+        "cm_v": _dense_init(jax.random.fold_in(key, 99), (ff, d)),
+        "cm_r": _dense_init(jax.random.fold_in(key, 98), (d, d)),
+    }
+
+
+def specs_rwkv6(cfg):
+    del cfg
+    return {
+        "mu": P(None, None), "tm_w1": P("fsdp", None), "tm_w2": P(None, None, None),
+        "w0": P(None), "dw1": P("fsdp", None), "dw2": P(None, None),
+        "u": P(None, None),
+        "wr": P("fsdp", "tp"), "wk": P("fsdp", "tp"), "wv": P("fsdp", "tp"),
+        "wg": P("fsdp", "tp"), "wo": P("tp", "fsdp"), "ln_x": P(None),
+        "mu_ck": P(None), "mu_cr": P(None),
+        "cm_k": P("fsdp", "tp"), "cm_v": P("tp", "fsdp"), "cm_r": P("fsdp", "tp"),
+    }
+
+
+class RWKVCache(NamedTuple):
+    x_tm: jax.Array    # (B, d) previous token input (time-mix shift)
+    x_cm: jax.Array    # (B, d) previous token input (channel-mix shift)
+    state: jax.Array   # (B, H, hd, hd) recurrent state (f32)
+
+
+def init_rwkv_cache(batch, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return RWKVCache(
+        x_tm=jnp.zeros((batch, d), dtype),
+        x_cm=jnp.zeros((batch, d), dtype),
+        state=jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )
+
+
+def _shifted(x, x_prev):
+    """(B,S,d) -> previous-token tensor, seeded with x_prev (B,d)."""
+    return jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent token-shift for r,k,v,w,g. Returns 5 mixed tensors."""
+    dx = xs - x
+    base = x + dx * p["mu"][0]
+    lora = jnp.tanh(base @ p["tm_w1"])                       # (B,S,5R)
+    B_, S = x.shape[0], x.shape[1]
+    lora = lora.reshape(B_, S, 5, LORA_R)
+    adj = jnp.einsum("bsfr,frd->bsfd", lora, p["tm_w2"])     # (B,S,5,d)
+    outs = []
+    for i in range(5):
+        m = p["mu"][i + 1] + adj[:, :, i, :]
+        outs.append(x + dx * m)
+    return outs                                              # xr, xk, xv, xw, xg
+
+
+def _rkvwg(p, x, xs, cfg):
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    B_, S = x.shape[0], x.shape[1]
+    r = (xr @ p["wr"]).reshape(B_, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B_, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B_, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["dw1"]) @ p["dw2"])        # (B,S,d) < 0
+    logw = jnp.maximum(logw, LOGW_CLAMP)   # shared decay floor (see wkv_chunked)
+    logw = logw.reshape(B_, S, H, hd)
+    return r, k, v, g, logw
+
+
+LOGW_CLAMP = -2.0    # per-step decay floor inside a chunk: contributions
+                     # below e^(CLAMP*Q) are numerically zero anyway, and the
+                     # clamp keeps the factorized intra-chunk matmul in f32
+                     # range (exp(|CLAMP|*Q) = e^64 << f32 max for Q=32).
+
+
+def wkv_chunked(r, k, v, logw, u, *, q: int = 32, s0=None,
+                remat_chunks: bool = True):
+    """Chunked RWKV6 recurrence (factorized, matmul-friendly).
+
+    r,k,v,logw: (B,S,H,hd) (logw = log decay, < 0); u: (H,hd).
+    Returns (y (B,S,H,hd) f32, final state (B,H,hd,hd) f32).
+
+    Intra-chunk scores use the exact factorization
+        r_t.k_s * exp(cum_{t-1} - cum_s)
+          = (r_t * exp(cum_{t-1} - cum_Q)) . (k_s * exp(cum_Q - cum_s))
+    so the (Q,Q) score matrix comes from ONE (Q,hd)x(hd,Q) matmul per
+    (batch, head) instead of materializing a (B,Q,Q,H,hd) tensor.  logw is
+    clamped to LOGW_CLAMP to bound exp(cum_Q - cum_s).
+    """
+    B_, S, H, hd = r.shape
+    nq = max(1, S // q)
+    while S % nq:
+        nq -= 1
+    Q = S // nq
+
+    def resh(t):
+        return t.astype(jnp.float32).reshape((B_, nq, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    logw = jnp.maximum(logw.astype(jnp.float32), LOGW_CLAMP)  # idempotent guard
+    rq, kq, vq, lwq = resh(r), resh(k), resh(v), resh(logw)
+    uf = u.astype(jnp.float32)
+    tri = (jnp.arange(Q)[:, None] > jnp.arange(Q)[None, :])[None, None]  # (1,1,t,s)
+
+    def chunk(S0, inp):
+        rc, kc, vc, lwc = inp                          # (B,Q,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)                  # cum_t = sum_{s<=t} lw_s
+        cum_prev = cum - lwc
+        tot = cum[:, -1:, :, :]                        # (B,1,H,hd)
+        r_f = rc * jnp.exp(cum_prev - tot)             # <= r (decaying)
+        k_f = kc * jnp.exp(tot - cum)                  # bounded by clamp
+        scores = jnp.einsum("bthd,bshd->bhts", r_f, k_f)
+        diag = jnp.einsum("bthd,bthd->bth", rc, uf[None, None] * kc)
+        scores = jnp.where(tri, scores, 0.0)
+        scores = scores + jnp.moveaxis(
+            diag[:, :, None, :] * jnp.eye(Q)[None, :, :, None], 3, 1)
+        y = jnp.einsum("bhts,bshe->bthe", scores, vc)
+        # carried-state contribution: r_t * exp(cum_prev_t) @ S0
+        y = y + jnp.einsum("bthd,bhde->bthe", rc * jnp.exp(cum_prev), S0)
+        # state update: S = diag(exp(cum_Q)) S0 + sum_s exp(cum_Q - cum_s) k (x) v
+        S_new = S0 * jnp.exp(tot[:, 0])[..., None] + jnp.einsum(
+            "bshd,bshe->bhde", k_f, vc)
+        return S_new, y
+
+    if remat_chunks:
+        chunk = jax.checkpoint(chunk)
+    if s0 is None:
+        s0 = jnp.zeros((B_, H, hd, hd), jnp.float32)
+    s_fin, yq = jax.lax.scan(chunk, s0, (rq, kq, vq, lwq))
+    y = yq.swapaxes(0, 1).reshape(B_, S, H, hd)
+    return y, s_fin
+
+
+def _group_norm(y, scale, H, eps=64e-5):
+    """Per-head group norm used by RWKV (ln_x)."""
+    B_, S, _, hd = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return yn.reshape(B_, S, H * hd) * scale
+
+
+def time_mix(p, x, cfg, *, x_prev=None, s0=None, chunk: int = 32):
+    """Full-sequence time-mix. Returns (out, (last_x, state))."""
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    xs = _shifted(x, x_prev if x_prev is not None else jnp.zeros_like(x[:, 0]))
+    r, k, v, g, logw = _rkvwg(p, x, xs, cfg)
+    y, s_fin = wkv_chunked(r, k, v, logw, p["u"], q=chunk, s0=s0)
+    y = _group_norm(y, p["ln_x"], H).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, (x[:, -1, :], s_fin)
+
+
+def channel_mix(p, x, cfg, *, x_prev=None):
+    xs = _shifted(x, x_prev if x_prev is not None else jnp.zeros_like(x[:, 0]))
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"]), x[:, -1, :]
+
+
+def apply_rwkv6(p, x, cfg, *, chunk: int = 32):
+    """Train forward for one block (time-mix + channel-mix, pre-norm handled
+    by the caller)."""
+    tm, _ = time_mix(p, x, cfg, chunk=chunk)
+    return tm
+
+
+def rwkv6_decode(p, x, cfg, cache: RWKVCache):
+    """One-token decode for the time-mix half. x: (B,1,d)."""
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    xs = cache.x_tm[:, None, :].astype(x.dtype)
+    r, k, v, g, logw = _rkvwg(p, x, xs, cfg)
+    r1, k1, v1, lw1 = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]   # (B,H,hd)
+    S0 = cache.state
+    kv = jnp.einsum("bhd,bhe->bhde", k1.astype(jnp.float32), v1.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", r1.astype(jnp.float32),
+                   S0 + p["u"][None, :, :, None] * kv)
+    S_new = S0 * jnp.exp(lw1.astype(jnp.float32))[..., None] + kv
+    y = _group_norm(y[:, None], p["ln_x"], H).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, cache._replace(x_tm=x[:, 0, :].astype(cache.x_tm.dtype), state=S_new)
+
+
+def channel_mix_decode(p, x, cfg, cache: RWKVCache):
+    xs = cache.x_cm[:, None, :].astype(x.dtype)
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+    return out, cache._replace(x_cm=x[:, 0, :].astype(cache.x_cm.dtype))

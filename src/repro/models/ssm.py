@@ -1,0 +1,219 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+Faithful to Mamba2 [arXiv:2405.21060] as used by Zamba2 [arXiv:2411.15242]:
+in_proj -> [z | xBC | dt], causal depthwise conv over xBC, scalar-decay
+SSD per head, gated RMSNorm, out_proj.
+
+Train/prefill uses the chunked SSD algorithm: O(S*Q) intra-chunk matmuls
+plus an O(S/Q) sequential inter-chunk state recurrence (`lax.scan`), so
+no O(S * hd * N) state tensor ever materializes per time step.  Decode is
+a single-step state update carrying (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init, rms_norm
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or (d_in // cfg.ssm_head_dim)
+    G, N = 1, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    return d_in, heads, G, N, conv_dim
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * G * N + H
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                 math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj": _dense_init(ks[0], (d, proj_out)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.d_conv, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # inverse-softplus init
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[3], (d_in, d)),
+    }
+
+
+def specs_mamba2(cfg):
+    del cfg
+    return {
+        "in_proj": P("fsdp", "tp"),
+        "conv_w": P(None, "tp"),
+        "conv_b": P("tp"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": P("tp"),
+        "out_proj": P("tp", "fsdp"),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim) trailing inputs
+    ssm: jax.Array     # (B, H, hd, N) state
+
+
+def init_mamba_cache(batch, cfg, dtype=jnp.float32):
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    hd = d_in // H
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, hd, N), jnp.float32),
+    )
+
+
+def _split_proj(p, x, cfg):
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in: d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, prev=None):
+    """Depthwise causal conv. xBC: (B, S, C); w: (taps, C)."""
+    taps = w.shape[0]
+    pad = xBC if prev is None else jnp.concatenate([prev.astype(xBC.dtype), xBC], axis=1)
+    if prev is None:
+        pad = jnp.pad(xBC, ((0, 0), (taps - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    y = sum(pad[:, i: i + S, :] * w[i] for i in range(taps))
+    return jax.nn.silu(y + b)
+
+
+def _ssm_inputs(p, xBC, dt, cfg):
+    """Returns xh (B,S,H,hd); Bm, Cm in GROUP form (B,S,N) (G=1 — all heads
+    share B/C; never broadcast to heads before the chunk scan)."""
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    hd = d_in // H
+    B_, S = xBC.shape[0], xBC.shape[1]
+    xh = xBC[..., :d_in].reshape(B_, S, H, hd)
+    Bm = xBC[..., d_in: d_in + G * N].reshape(B_, S, N)
+    Cm = xBC[..., d_in + G * N:].reshape(B_, S, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                             # (H,)
+    dA = dt * A                                                          # (B,S,H) <= 0
+    return xh, Bm, Cm, dt, dA
+
+
+def ssd_chunked(xh, Bm, Cm, dt, dA, D, *, q: int = 128, h0=None,
+                remat_chunks: bool = True):
+    """Chunked SSD scan.  Shapes: xh (B,S,H,hd); Bm,Cm (B,S,N) group form;
+    dt,dA (B,S,H).  Returns (y (B,S,H,hd), h_final (B,H,hd,N))."""
+    B_, S, H, hd = xh.shape
+    N = Bm.shape[-1]
+    nq = max(1, S // q)
+    while S % nq:
+        nq -= 1
+    Q = S // nq
+
+    def r(t, extra=()):  # (B,S,...) -> (nq,B,Q,...)
+        return t.reshape((B_, nq, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    # keep the big stacked xs in their input dtype; upcast per chunk in VMEM
+    xq, Bq, Cq = r(xh), r(Bm), r(Cm)
+    dtq, dAq = r(dt), r(dA)
+
+    def chunk(h, inp):
+        xc, Bc, Cc, dtc, dAc = inp          # (B,Q,H,hd),(B,Q,N),(B,Q,H)
+        # decay path in f32 (cumsum of logs); token tensors stay in their
+        # storage dtype so the big matmuls read bf16 with f32 accumulation
+        # (perf iteration, EXPERIMENTS.md §Perf zamba train)
+        cdt = xc.dtype
+        dAc = dAc.astype(jnp.float32)
+        cum = jnp.cumsum(dAc, axis=1)                                    # (B,Q,H)
+        # intra-chunk: L[t,s] = exp(cum_t - cum_s) * (s <= t)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]                   # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))[None, :, :, None]
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))                          # group form
+        scores = (cb[..., None] * L).astype(cdt)                         # (B,Q,Q,H)
+        xdt = xc * dtc.astype(cdt)[..., None]                            # (B,Q,H,hd)
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, xdt,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state h (B,H,hd,N)
+        decay_t = jnp.exp(cum)                                           # (B,Q,H)
+        y_inter = jnp.einsum("btn,bhdn->bthd", Cc.astype(jnp.float32),
+                             h) * decay_t[..., None]
+        # new state: h * exp(total) + sum_s exp(total - cum_s) * xdt_s (x) B_s
+        total = cum[:, -1:, :]                                           # (B,1,H)
+        w = jnp.exp(total - cum)                                         # (B,Q,H)
+        dh = jnp.einsum("bshd,bsn,bsh->bhdn",
+                        xdt.astype(jnp.float32),
+                        Bc.astype(jnp.float32), w)
+        h_new = h * jnp.exp(total[:, 0, :])[..., None, None] + dh
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, hd, N), jnp.float32)
+    if remat_chunks:
+        # chunk-level remat: keep only the (B,H,hd,N) carry per chunk
+        chunk = jax.checkpoint(chunk)
+    h_fin, yq = jax.lax.scan(chunk, h0, (xq, Bq, Cq, dtq, dAq))
+    y = yq.swapaxes(0, 1).reshape(B_, S, H, hd)
+    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
+    return y, h_fin
+
+
+def apply_mamba2(p, x, cfg, *, chunk: int = 128):
+    """Train/prefill forward. x: (B,S,D) -> (B,S,D)."""
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"].astype(xBC.dtype), p["conv_b"].astype(xBC.dtype))
+    xh, Bm, Cm, dtf, dA = _ssm_inputs(p, xBC, dt, cfg)
+    y, _ = ssd_chunked(xh, Bm, Cm, dtf, dA, p["D"], q=chunk)
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_prefill(p, x, cfg, cache: MambaCache, *, chunk: int = 128):
+    """Prefill that also returns the final recurrent state + conv tail."""
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    z, xBC, dt = _split_proj(p, x, cfg)
+    tail = xBC[:, -(cfg.d_conv - 1):, :]
+    xBC = _causal_conv(xBC, p["conv_w"].astype(xBC.dtype), p["conv_b"].astype(xBC.dtype))
+    xh, Bm, Cm, dtf, dA = _ssm_inputs(p, xBC, dt, cfg)
+    y, h_fin = ssd_chunked(xh, Bm, Cm, dtf, dA, p["D"], q=chunk, h0=cache.ssm)
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    new_cache = MambaCache(conv=tail.astype(cache.conv.dtype), ssm=h_fin)
+    return y @ p["out_proj"], new_cache
+
+
+def mamba2_decode(p, x, cfg, cache: MambaCache):
+    """One-step decode. x: (B,1,D)."""
+    d_in, H, G, N, conv_dim = _dims(cfg)
+    hd = d_in // H
+    z, xBC, dt = _split_proj(p, x, cfg)
+    window = jnp.concatenate([cache.conv.astype(xBC.dtype), xBC], axis=1)  # (B,d_conv,C)
+    w = p["conv_w"].astype(xBC.dtype)
+    y_conv = jnp.einsum("btc,tc->bc", window, w) + p["conv_b"].astype(xBC.dtype)
+    xBC1 = jax.nn.silu(y_conv)[:, None, :]                                # (B,1,C)
+    xh, Bm, Cm, dtf, dA = _ssm_inputs(p, xBC1, dt, cfg)
+    xdt = (xh * dtf[..., None])[:, 0]                                     # (B,H,hd)
+    decay = jnp.exp(dA[:, 0])                                             # (B,H)
+    h = cache.ssm * decay[..., None, None] + jnp.einsum(
+        "bhd,bn->bhdn", xdt.astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xh[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    new_cache = MambaCache(conv=window[:, 1:, :].astype(cache.conv.dtype), ssm=h)
+    return y @ p["out_proj"], new_cache

@@ -1,0 +1,647 @@
+"""Composable model assembly for all assigned architecture families.
+
+Families -> assembly strategy:
+  dense/moe/vlm ("attn" pattern)  : stacked params + lax.scan over layers
+  ssm ("rwkv6" / "mamba2")        : stacked params + lax.scan
+  hybrid (zamba2)                 : python loop (shared-attn interleave)
+  encdec (whisper)                : encoder scan + decoder scan (w/ cross-attn)
+
+Params are nested dicts; per-layer blocks are stacked along a leading L
+axis.  ``param_specs`` mirrors the structure with logical PartitionSpecs
+(stacked blocks get a leading None axis).
+
+Entry points:
+  init_params / param_specs / abstract_params
+  train_loss(params, cfg, batch)                     -> scalar loss
+  forward(params, cfg, batch)                        -> last hidden states
+  init_cache(cfg, batch, max_len, dtype)             -> decode cache
+  prefill(params, cfg, batch, cache)                 -> (logits_last, cache)
+  decode_step(params, cfg, token, cache)             -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rope as rope_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingHints:
+    """Resolved PartitionSpecs injected by the launch layer (None on CPU)."""
+    residual: Optional[P] = None      # (B, S, D)
+    logits: Optional[P] = None        # (B, s_chunk, V)
+    kv: Optional[P] = None            # (B, S, KV, hd)
+    # MoE: specs for the per-layer bf16 expert weights AFTER the explicit
+    # once-per-layer gather (fsdp dropped, tp kept) — see moe.apply_moe
+    moe_w_in: Optional[P] = None      # (E, D, F)
+    moe_w_out: Optional[P] = None     # (E, F, D)
+    # expert parallelism (tokens move): (mesh, ep_axis, batch_axes) or None
+    moe_ep: Optional[tuple] = None
+
+
+def _c(x, spec):
+    return x if spec is None else jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / specs
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, *, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    ln_bias = cfg.family == "encdec"
+    if kind == "attn":
+        p = {
+            "ln1": L.init_norm(ks[0], cfg.d_model, with_bias=ln_bias),
+            "attn": attn_lib.init_attention(ks[1], cfg),
+            "ln2": L.init_norm(ks[2], cfg.d_model, with_bias=ln_bias),
+        }
+        if cfg.is_moe:
+            p["moe"] = moe_lib.init_moe(ks[3], cfg)
+        else:
+            p["ffn"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act_fn)
+        if cross:
+            p["ln_c"] = L.init_norm(ks[4], cfg.d_model, with_bias=ln_bias)
+            p["cross"] = attn_lib.init_attention(ks[5], cfg, cross=True)
+        return p
+    if kind == "mamba2":
+        return {"ln1": L.init_norm(ks[0], cfg.d_model),
+                "mamba": ssm_lib.init_mamba2(ks[1], cfg)}
+    if kind == "rwkv6":
+        return {"ln1": L.init_norm(ks[0], cfg.d_model, with_bias=True),
+                "ln2": L.init_norm(ks[1], cfg.d_model, with_bias=True),
+                "rwkv": rwkv_lib.init_rwkv6(ks[2], cfg)}
+    raise ValueError(kind)
+
+
+def _specs_block(cfg: ArchConfig, kind: str, *, cross: bool = False):
+    ln_bias = cfg.family == "encdec"
+    if kind == "attn":
+        p = {
+            "ln1": L.specs_norm(with_bias=ln_bias),
+            "attn": attn_lib.specs_attention(cfg),
+            "ln2": L.specs_norm(with_bias=ln_bias),
+        }
+        if cfg.is_moe:
+            p["moe"] = moe_lib.specs_moe(cfg)
+        else:
+            p["ffn"] = L.specs_mlp(cfg.act_fn)
+        if cross:
+            p["ln_c"] = L.specs_norm(with_bias=ln_bias)
+            p["cross"] = attn_lib.specs_attention(cfg, cross=True)
+        return p
+    if kind == "mamba2":
+        return {"ln1": L.specs_norm(), "mamba": ssm_lib.specs_mamba2(cfg)}
+    if kind == "rwkv6":
+        return {"ln1": L.specs_norm(with_bias=True),
+                "ln2": L.specs_norm(with_bias=True),
+                "rwkv": rwkv_lib.specs_rwkv6(cfg)}
+    raise ValueError(kind)
+
+
+def _stack_blocks(key, cfg, kind, n, **kw):
+    blocks = [_init_block(k, cfg, kind, **kw) for k in jax.random.split(key, n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def _stacked_specs(cfg, kind, **kw):
+    spec = _specs_block(cfg, kind, **kw)
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _uniform_kind(cfg: ArchConfig) -> str:
+    kinds = set(cfg.pattern)
+    assert len(kinds) == 1, f"non-uniform pattern unsupported: {kinds}"
+    return next(iter(kinds))
+
+
+# ---------------------------------------------------------------------------
+# Model init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    kind = _uniform_kind(cfg)
+    p: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": L.init_norm(ks[1], cfg.d_model,
+                                  with_bias=cfg.family == "encdec"),
+        "blocks": _stack_blocks(ks[2], cfg, kind, cfg.n_layers,
+                                cross=cfg.cross_attention),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_head(ks[3], cfg.d_model, cfg.vocab_size)
+    if cfg.shared_attn_every:
+        p["shared_attn"] = _init_block(ks[4], cfg, "attn")
+    if cfg.encoder_layers:
+        p["encoder"] = _stack_blocks(ks[5], cfg, "attn", cfg.encoder_layers)
+        p["enc_norm"] = L.init_norm(ks[6], cfg.d_model, with_bias=True)
+    if cfg.frontend == "vision" and cfg.frontend_dim:
+        p["vis_proj"] = {"w": L._dense_init(ks[7], (cfg.frontend_dim, cfg.d_model)),
+                         "b": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    kind = _uniform_kind(cfg)
+    s: Dict[str, Any] = {
+        "embed": L.specs_embedding(),
+        "final_norm": L.specs_norm(with_bias=cfg.family == "encdec"),
+        "blocks": _stacked_specs(cfg, kind, cross=cfg.cross_attention),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = L.specs_head()
+    if cfg.shared_attn_every:
+        s["shared_attn"] = _specs_block(cfg, "attn")
+    if cfg.encoder_layers:
+        s["encoder"] = _stacked_specs(cfg, "attn")
+        s["enc_norm"] = L.specs_norm(with_bias=True)
+    if cfg.frontend == "vision" and cfg.frontend_dim:
+        s["vis_proj"] = {"w": P("fsdp", "tp"), "b": P(None)}
+    return s
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the params without allocating (for dry-run)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, dtype if a.ndim >= 2 else a.dtype),
+        shapes)
+
+
+def cast_params(params, dtype):
+    """bf16 compute cast: matrices cast, vectors (norm scales etc.) stay f32."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.ndim >= 2 and a.dtype == jnp.float32 else a,
+        params)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / frontends
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, batch, shard: ShardingHints):
+    """Token embeddings + modality-stub merge.  Returns (x, positions,
+    positions_thw)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    positions_thw = None
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = batch["patches"]
+        Pn = pe.shape[1]
+        if "vis_proj" in params:
+            pe = pe @ params["vis_proj"]["w"] + params["vis_proj"]["b"]
+        pe = pe.astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, Pn:, :]], axis=1)
+        if cfg.m_rope:
+            vis = rope_lib.vision_positions_thw(B, Pn)
+            side = max(1, int(Pn ** 0.5))
+            txt_pos = positions[:, Pn:] - Pn + side  # text starts after grid
+            txt = rope_lib.text_positions_thw(txt_pos)
+            positions_thw = jnp.concatenate([vis, txt], axis=1)
+    if cfg.family == "encdec":  # whisper: sinusoidal absolute positions
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    x = _c(x, shard.residual)
+    return x, positions, positions_thw
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block_fwd(bp, x, cfg, *, positions, positions_thw, shard,
+                    enc_out=None, causal=True):
+    h = attn_lib.attention_forward(
+        bp["attn"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, positions_thw=positions_thw, causal=causal,
+        seq_spec=shard.residual)
+    x = _c(x + h, shard.residual)
+    if enc_out is not None:
+        h = attn_lib.attention_forward(
+            bp["cross"], L.apply_norm(bp["ln_c"], x, cfg.norm_eps), cfg,
+            positions=positions, causal=False, x_kv=enc_out,
+            seq_spec=shard.residual)
+        x = _c(x + h, shard.residual)
+    aux = jnp.zeros((), jnp.float32)
+    xin = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        if shard.moe_ep is not None:
+            mesh, ep_axis, baxes = shard.moe_ep
+            h, aux = moe_lib.apply_moe_ep(bp["moe"], xin, cfg, mesh=mesh,
+                                          ep_axis=ep_axis, batch_axes=baxes)
+        else:
+            h, aux = moe_lib.apply_moe(
+                bp["moe"], xin, cfg,
+                w_specs=(shard.moe_w_in, shard.moe_w_out))
+    else:
+        h = L.apply_mlp(bp["ffn"], xin, cfg.act_fn)
+    x = _c(x + h, shard.residual)
+    return x, aux
+
+
+def _rwkv_block_fwd(bp, x, cfg, shard):
+    h, _ = rwkv_lib.time_mix(bp["rwkv"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg)
+    x = _c(x + h, shard.residual)
+    h, _ = rwkv_lib.channel_mix(bp["rwkv"], L.apply_norm(bp["ln2"], x, cfg.norm_eps), cfg)
+    return _c(x + h, shard.residual)
+
+
+def _mamba_block_fwd(bp, x, cfg, shard):
+    h = ssm_lib.apply_mamba2(bp["mamba"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg)
+    return _c(x + h, shard.residual)
+
+
+def _encoder_forward(params, cfg, frames, shard: ShardingHints, remat: bool):
+    """Whisper encoder over precomputed frame embeddings (B, S_enc, D)."""
+    x = frames + L.sinusoidal_positions(frames.shape[1], cfg.d_model
+                                        ).astype(frames.dtype)[None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+    def body(x, bp):
+        y, _ = _attn_block_fwd(bp, x, cfg, positions=positions,
+                               positions_thw=None, shard=shard, causal=False)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, batch, *, shard: ShardingHints = ShardingHints(),
+            remat: bool = False):
+    """Full-sequence decoder forward -> (hidden (B,S,D), aux_loss)."""
+    x, positions, positions_thw = _embed_inputs(params, cfg, batch, shard)
+    kind = _uniform_kind(cfg)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encoder_forward(params, cfg, batch["frames"].astype(x.dtype),
+                                   shard, remat)
+
+    if cfg.shared_attn_every:  # zamba2: scan over [shared-attn + k mamba] groups
+        every = cfg.shared_attn_every
+        assert cfg.n_layers % every == 0, "shared_attn_every must divide n_layers"
+        groups = cfg.n_layers // every
+        gp = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]),
+                          params["blocks"])
+        shared = params["shared_attn"]
+
+        def gbody(x, bp_g):
+            x = _attn_block_fwd(shared, x, cfg, positions=positions,
+                                positions_thw=None, shard=shard)[0]
+            for i in range(every):
+                bp = jax.tree.map(lambda a, i=i: a[i], bp_g)
+                blk = lambda bp_, x_: _mamba_block_fwd(bp_, x_, cfg, shard)
+                if remat:  # nested: one mamba layer live at a time in bwd
+                    blk = jax.checkpoint(blk)
+                x = blk(bp, x)
+            return x, None
+
+        if remat:
+            gbody = jax.checkpoint(gbody)
+        x, _ = jax.lax.scan(gbody, x, gp)
+        hidden = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return hidden, jnp.zeros((), jnp.float32)
+
+    def body(carry, bp):
+        x, aux = carry
+        if kind == "attn":
+            x, a = _attn_block_fwd(bp, x, cfg, positions=positions,
+                                   positions_thw=positions_thw, shard=shard,
+                                   enc_out=enc_out)
+            aux = aux + a
+        elif kind == "rwkv6":
+            x = _rwkv_block_fwd(bp, x, cfg, shard)
+        elif kind == "mamba2":
+            x = _mamba_block_fwd(bp, x, cfg, shard)
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return L.apply_norm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def train_loss(params, cfg: ArchConfig, batch, *,
+               shard: ShardingHints = ShardingHints(), remat: bool = True):
+    hidden, aux = forward(params, cfg, batch, shard=shard, remat=remat)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["w"].T)
+    ce = L.chunked_cross_entropy(hidden, table, batch["labels"],
+                                 logits_spec=shard.logits)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, *,
+               dtype=jnp.bfloat16, window: Optional[int] = None):
+    """Build the (abstract-friendly) decode cache for an arch."""
+    kind = _uniform_kind(cfg)
+    window = window if window is not None else cfg.sliding_window
+    cache: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.m_rope:
+        # M-RoPE text-position offset set at prefill (vision grid compression)
+        cache["mrope_delta"] = jnp.zeros((), jnp.int32)
+    if kind == "attn":
+        one = attn_lib.init_kv_cache(batch_size, max_len, cfg, window=window,
+                                     dtype=dtype)
+        cache["layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+    elif kind == "mamba2":
+        one = ssm_lib.init_mamba_cache(batch_size, cfg, dtype=dtype)
+        cache["layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+    elif kind == "rwkv6":
+        one = rwkv_lib.init_rwkv_cache(batch_size, cfg, dtype=dtype)
+        cache["layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+    if cfg.shared_attn_every:
+        n_app = (cfg.n_layers + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        # hybrid long-context: shared attn block runs windowed (DESIGN.md)
+        w = window if window is not None else (4096 if max_len > 65536 else None)
+        sa = attn_lib.init_kv_cache(batch_size, max_len, cfg, window=w, dtype=dtype)
+        cache["shared"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_app,) + a.shape), sa)
+    if cfg.encoder_layers:
+        # cross-attention K/V per decoder layer, computed at prefill
+        shape = (cfg.n_layers, batch_size, cfg.encoder_seq_len,
+                 cfg.n_kv_heads, cfg.hd)
+        cache["cross_k"] = jnp.zeros(shape, dtype)
+        cache["cross_v"] = jnp.zeros(shape, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step (and prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block_decode(bp, x, cfg, kv: KVCache, *, positions_thw=None,
+                       cross_kv=None):
+    h, kv, token_kv = attn_lib.attention_decode(
+        bp["attn"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg, kv,
+        positions_thw=positions_thw)
+    x = x + h
+    if cross_kv is not None:
+        h, _, _ = attn_lib.attention_decode(
+            bp["cross"], L.apply_norm(bp["ln_c"], x, cfg.norm_eps), cfg, kv,
+            cross_kv=cross_kv)
+        x = x + h
+    xin = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        h, _ = moe_lib.apply_moe(bp["moe"], xin, cfg, chunk=1)
+    else:
+        h = L.apply_mlp(bp["ffn"], xin, cfg.act_fn)
+    return x + h, kv, token_kv
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, *,
+                shard: ShardingHints = ShardingHints()):
+    """token: (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token)
+    kind = _uniform_kind(cfg)
+    step = cache["step"]
+    positions_thw = None
+    if cfg.m_rope:
+        p_eff = step + cache.get("mrope_delta", jnp.zeros((), jnp.int32))
+        pos = jnp.broadcast_to(p_eff[None, None], (B, 1)).astype(jnp.int32)
+        positions_thw = rope_lib.text_positions_thw(pos)
+    if cfg.family == "encdec":
+        dim = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+        inv = jnp.exp(-jnp.log(10_000.0) * dim / max(cfg.d_model // 2 - 1, 1))
+        ang = step.astype(jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pe.astype(x.dtype)
+
+    new_cache = dict(cache)
+    if cfg.shared_attn_every:  # zamba2: scan over [shared-attn + k mamba] groups
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // every
+        gp = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]),
+                          params["blocks"])
+        gc = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]),
+                          cache["layers"])
+        shared = params["shared_attn"]
+
+        def gbody(x, xs):
+            bp_g, lc_g, sc = xs
+            h, sc, _ = attn_lib.attention_decode(
+                shared["attn"], L.apply_norm(shared["ln1"], x, cfg.norm_eps),
+                cfg, sc)
+            x = x + h
+            x = x + L.apply_mlp(shared["ffn"],
+                                L.apply_norm(shared["ln2"], x, cfg.norm_eps),
+                                cfg.act_fn)
+            new_lcs = []
+            for i in range(every):
+                bp = jax.tree.map(lambda a, i=i: a[i], bp_g)
+                lc = jax.tree.map(lambda a, i=i: a[i], lc_g)
+                h, lc = ssm_lib.mamba2_decode(
+                    bp["mamba"], L.apply_norm(bp["ln1"], x, cfg.norm_eps),
+                    cfg, lc)
+                x = x + h
+                new_lcs.append(lc)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lcs)
+            return x, (stacked, sc)
+
+        x, (new_g, new_shared) = jax.lax.scan(
+            gbody, x, (gp, gc, cache["shared"]))
+        new_cache["layers"] = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_g)
+        new_cache["shared"] = new_shared
+    else:
+        cross = cfg.encoder_layers > 0
+
+        # The stacked per-layer cache rides in the scan CARRY and is updated
+        # via dynamic_update_index_in_dim at the loop counter — XLA keeps the
+        # while-loop state in place, so the multi-GB KV buffers are never
+        # double-buffered per step (cf. xs/ys scan which allocates a fresh
+        # stacked output).
+        def body(carry, xs):
+            x, layers, i = carry
+            if cross:
+                bp, ck, cv = xs
+            else:
+                bp = xs
+            lc = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                layers)
+            token_kv = None
+            if kind == "attn":
+                x, lc, token_kv = _attn_block_decode(
+                    bp, x, cfg, lc, positions_thw=positions_thw,
+                    cross_kv=(ck, cv) if cross else None)
+            elif kind == "mamba2":
+                h, lc = ssm_lib.mamba2_decode(
+                    bp["mamba"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg, lc)
+                x = x + h
+            elif kind == "rwkv6":
+                h, lc = rwkv_lib.rwkv6_decode(
+                    bp["rwkv"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg, lc)
+                x = x + h
+                h, lc = rwkv_lib.channel_mix_decode(
+                    bp["rwkv"], L.apply_norm(bp["ln2"], x, cfg.norm_eps), cfg, lc)
+                x = x + h
+            # NOTE (perf iteration #2, REFUTED — see EXPERIMENTS.md §Perf):
+            # writing only the new token column into the stacked cache via a
+            # doubly-dynamic DUS (layer i + sharded position idx) makes the
+            # SPMD partitioner fall back to a masked full-buffer rewrite
+            # (~27 GB/layer).  The full-slice write-back at a static layer
+            # axis stays in place and is the fastest variant measured.
+            del token_kv
+            layers = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), i, 0), layers, lc)
+            return (x, layers, i + 1), None
+
+        xs = ((params["blocks"], cache["cross_k"], cache["cross_v"])
+              if cross else params["blocks"])
+        (x, new_layers, _), _ = jax.lax.scan(
+            body, (x, cache["layers"], jnp.zeros((), jnp.int32)), xs)
+        new_cache["layers"] = new_layers
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["w"].T)
+    logits = (x.astype(jnp.float32) @ table.T.astype(jnp.float32))
+    logits = _c(logits, shard.logits)
+    new_cache["step"] = step + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, batch, cache, *,
+            shard: ShardingHints = ShardingHints()):
+    """Run the prompt through the model in ONE pass, producing both the
+    last-token logits and the filled decode cache (QKV projections are
+    shared between the attention output and the cache write)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    kind = _uniform_kind(cfg)
+    x, positions, positions_thw = _embed_inputs(params, cfg, batch, shard)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encoder_forward(params, cfg, batch["frames"].astype(x.dtype),
+                                   shard, False)
+    new_cache = dict(cache)
+    if cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        groups = cfg.n_layers // every
+        gp = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]),
+                          params["blocks"])
+        gc = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]),
+                          cache["layers"])
+        shared = params["shared_attn"]
+
+        def gbody(x, xs):
+            bp_g, lc_g, sc = xs
+            xin = L.apply_norm(shared["ln1"], x, cfg.norm_eps)
+            h, sc = attn_lib.attention_prefill(shared["attn"], xin, cfg, sc,
+                                               positions=positions)
+            x = x + h
+            x = x + L.apply_mlp(shared["ffn"],
+                                L.apply_norm(shared["ln2"], x, cfg.norm_eps),
+                                cfg.act_fn)
+            new_lcs = []
+            for i in range(every):
+                bp = jax.tree.map(lambda a, i=i: a[i], bp_g)
+                lc = jax.tree.map(lambda a, i=i: a[i], lc_g)
+                h, lc = ssm_lib.mamba2_prefill(
+                    bp["mamba"], L.apply_norm(bp["ln1"], x, cfg.norm_eps),
+                    cfg, lc)
+                x = x + h
+                new_lcs.append(lc)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lcs)
+            return x, (stacked, sc)
+
+        x, (new_g, new_shared) = jax.lax.scan(
+            gbody, x, (gp, gc, cache["shared"]))
+        new_cache["layers"] = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_g)
+        new_cache["shared"] = new_shared
+    else:
+        def body(x, xs):
+            bp, lc = xs
+            if kind == "attn":
+                xin = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+                h, lc = attn_lib.attention_prefill(
+                    bp["attn"], xin, cfg, lc, positions=positions,
+                    positions_thw=positions_thw, seq_spec=shard.residual)
+                x = _c(x + h, shard.residual)
+                if cfg.encoder_layers:
+                    xc = L.apply_norm(bp["ln_c"], x, cfg.norm_eps)
+                    x = x + attn_lib.attention_forward(
+                        bp["cross"], xc, cfg, positions=positions, causal=False,
+                        x_kv=enc_out, seq_spec=shard.residual)
+                xin2 = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+                if cfg.is_moe:
+                    h, _ = moe_lib.apply_moe(bp["moe"], xin2, cfg)
+                else:
+                    h = L.apply_mlp(bp["ffn"], xin2, cfg.act_fn)
+                x = _c(x + h, shard.residual)
+            elif kind == "mamba2":
+                h, lc = ssm_lib.mamba2_prefill(
+                    bp["mamba"], L.apply_norm(bp["ln1"], x, cfg.norm_eps), cfg, lc)
+                x = _c(x + h, shard.residual)
+            elif kind == "rwkv6":
+                xin = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+                h, (last_x, s_fin) = rwkv_lib.time_mix(
+                    bp["rwkv"], xin, cfg, s0=lc.state)
+                x = _c(x + h, shard.residual)
+                xin2 = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+                h, last_cm = rwkv_lib.channel_mix(bp["rwkv"], xin2, cfg)
+                x = _c(x + h, shard.residual)
+                lc = rwkv_lib.RWKVCache(
+                    x_tm=last_x.astype(lc.x_tm.dtype),
+                    x_cm=last_cm.astype(lc.x_cm.dtype), state=s_fin)
+            return x, lc
+
+        # whisper: also fill cross K/V from encoder output
+        if cfg.encoder_layers:
+            def fill_cross(bp):
+                k = enc_out @ bp["cross"]["wk"]
+                v = enc_out @ bp["cross"]["wv"]
+                if cfg.qkv_bias:
+                    k, v = k + bp["cross"]["bk"], v + bp["cross"]["bv"]
+                Se = enc_out.shape[1]
+                k = k.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+                v = v.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+                return k, v
+            ck, cv = jax.lax.map(fill_cross, params["blocks"])
+            new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+            new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+
+        x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        new_cache["layers"] = new_layers
+
+    new_cache["step"] = jnp.asarray(S, jnp.int32)
+    if cfg.m_rope and "patches" in batch:
+        Pn = batch["patches"].shape[1]
+        side = max(1, int(Pn ** 0.5))
+        new_cache["mrope_delta"] = jnp.asarray(side - Pn, jnp.int32)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["w"].T)
+    hidden = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    last = hidden[:, -1, :]
+    logits = last.astype(jnp.float32) @ table.T.astype(jnp.float32)
+    return logits, new_cache

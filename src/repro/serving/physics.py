@@ -1,0 +1,132 @@
+"""Ground-truth co-location physics for the cluster simulator.
+
+Deliberately *richer* than the iGniter analytical model (see DESIGN.md):
+
+  * dispatch queueing is mildly super-linear in the co-location count and
+    jittered per pass;
+  * bandwidth contention saturates (power-law inflation of the memory
+    portion once aggregate demand crosses a knee) instead of being linear
+    in the summed neighbor utilization;
+  * the frequency/power relation has a soft exponent and a floor, plus
+    lognormal measurement noise.
+
+The iGniter model (Eqs. 1-11) is fit *against* this physics from 11 solo
+profiles — prediction error is therefore a real quantity, as on hardware.
+Base per-model quantities (FLOPs, bytes, kernel counts, IO sizes) come
+from the real architecture configs via `repro.profiling.metrics`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import HardwareSpec
+from repro.profiling.metrics import ServedModelDesc
+
+BW_KNEE = 0.58        # aggregate bandwidth demand where contention kicks in
+BW_EXP = 1.15         # saturation exponent
+SCHED_COLOC_SLOPE = 0.65
+SCHED_COLOC_EXP = 1.06
+FREQ_EXP = 1.05
+NOISE_SIGMA = 0.015
+ACTIVE_W_SCALE = 1.35  # peak active draw = scale * power_cap (forces
+                       # throttling under heavy co-location, cf. Fig. 7)
+
+
+@dataclass(frozen=True)
+class TrueState:
+    """Ground-truth instantaneous state of one workload on a device."""
+    t_load: float
+    t_sched: float
+    t_act: float          # after contention, before frequency scaling
+    t_feedback: float
+    t_gpu: float
+    t_inf: float
+    power: float          # this workload's draw [W]
+    cache_util: float     # solo bandwidth demand fraction
+    freq: float           # device frequency [MHz]
+    device_power: float
+
+
+def solo_terms(desc: ServedModelDesc, b: int, r: float, hw: HardwareSpec
+               ) -> Tuple[float, float, float, float, float, float]:
+    """(t_load, k_disp, t_compute, t_mem, power, cache_util) solo, no noise.
+
+    Fractional allocation r is an MXU *time share*: both compute and HBM
+    streams of this workload only progress during its share.
+    """
+    t_load = desc.d_load_mb * b / hw.pcie_bw                       # ms
+    t_feedback = desc.d_feedback_mb * b / hw.pcie_bw
+    flops = desc.flops_per_item * b
+    # small super-linear term (attention/batch effects) to keep Eq.11's
+    # quadratic honest-but-approximate
+    flops *= (1.0 + 0.004 * b)
+    bytes_ = desc.weight_bytes + desc.act_bytes_per_item * b
+    t_compute = flops / (hw.peak_flops * hw.mxu_efficiency) * 1e3  # ms
+    t_mem = bytes_ / hw.hbm_bw * 1e3
+    r_eff = max(r, 1e-3)
+    t_c = t_compute / r_eff
+    t_m = t_mem / r_eff
+    t_act = max(t_c, t_m) + 0.35 * min(t_c, t_m) + 0.05            # overlap-ish
+    # bandwidth demand while active: bytes over active time
+    cache_util = min(1.0, (bytes_ / (t_act * 1e-3)) / hw.hbm_bw)
+    # power: active draw proportional to share * utilization
+    util = t_c / t_act
+    p = hw.power_cap * ACTIVE_W_SCALE * r_eff * (0.35 + 0.65 * util)
+    per_kernel = 0.002 + 5e-6 * desc.n_kernels                     # ms/kernel solo
+    return t_load, per_kernel, t_c, t_m, p, cache_util, t_feedback
+
+
+def device_state(entries: Sequence[Tuple[ServedModelDesc, int, float]],
+                 hw: HardwareSpec,
+                 rng: Optional[np.random.Generator] = None
+                 ) -> List[TrueState]:
+    """Ground truth for a full co-location state.
+
+    entries: (desc, batch, r) per workload on the device.
+    """
+    n = len(entries)
+    # over-subscription: if Sum r > 1 the scheduler time-slices everyone
+    # down proportionally AND pays context-thrash overhead (the long-tail
+    # SM contention of the paper's Sec. 2.3 GSLICE example)
+    total_r = sum(r for (_, _, r) in entries)
+    shrink = max(1.0, total_r)
+    thrash = 1.0 + 0.6 * max(0.0, total_r - 1.0)
+    entries = [(d, b, r / shrink) for (d, b, r) in entries]
+    solos = [solo_terms(d, b, r, hw) for (d, b, r) in entries]
+    total_bw = sum(s[5] for s in solos)
+
+    # power/frequency
+    device_power = hw.idle_power + sum(s[4] for s in solos)
+    if device_power <= hw.power_cap:
+        freq = hw.max_freq
+    else:
+        excess = device_power - hw.power_cap
+        freq = max(hw.max_freq + hw.alpha_f * (excess ** FREQ_EXP),
+                   0.6 * hw.max_freq)
+    slow = freq / hw.max_freq
+
+    out = []
+    for (desc, b, r), (t_load, per_k, t_c, t_m, p, c, t_fb) in zip(entries, solos):
+        # dispatch: round-robin growth with co-location
+        per_kernel = per_k * (1.0 + SCHED_COLOC_SLOPE *
+                              max(0.0, (n - 1)) ** SCHED_COLOC_EXP)
+        t_sched = per_kernel * desc.n_kernels
+        # bandwidth contention: inflate the memory-bound portion
+        infl = 1.0
+        if total_bw > BW_KNEE:
+            infl = (total_bw / BW_KNEE) ** BW_EXP
+        t_act = (max(t_c, t_m * infl) + 0.35 * min(t_c, t_m * infl) + 0.05) \
+            * thrash
+        if rng is not None:
+            t_act *= float(rng.lognormal(0.0, NOISE_SIGMA))
+            t_sched *= float(rng.lognormal(0.0, 2 * NOISE_SIGMA))
+        t_gpu = (t_sched + t_act) / slow
+        out.append(TrueState(
+            t_load=t_load, t_sched=t_sched, t_act=t_act, t_feedback=t_fb,
+            t_gpu=t_gpu, t_inf=t_load + t_gpu + t_fb,
+            power=p, cache_util=c, freq=freq, device_power=device_power))
+    return out

@@ -1,0 +1,245 @@
+"""Discrete-event GPU-cluster serving simulator (ground truth).
+
+Two roles:
+
+1. **ProfilingTestbed** (`SimTestbed`): what Nsight Systems/Compute +
+   nvidia-smi provide on hardware — solo and co-located steady-state runs
+   returning per-phase latencies, power, bandwidth utilization.  The
+   iGniter coefficients are fit against these.
+
+2. **Serving simulation** (`simulate_plan`): event-driven request/batch/
+   serve loop per workload with constant-rate (or Poisson) arrivals,
+   greedy dynamic batching up to the configured batch size, spatial
+   co-location physics from `repro.serving.physics`, per-request latency
+   records (P99), the GSLICE-style reactive controller hook, and the
+   iGniter shadow-instance failover (Sec. 4.2).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.coefficients import ProfileSample
+from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
+from repro.profiling.metrics import ServedModelDesc
+from repro.serving import physics
+
+
+# ---------------------------------------------------------------------------
+# Profiling testbed
+# ---------------------------------------------------------------------------
+
+class SimTestbed:
+    """ProfilingTestbed over the ground-truth physics (deterministic:
+    profiling averages away noise on real hardware too)."""
+
+    def __init__(self, models: Dict[str, ServedModelDesc], hw: HardwareSpec,
+                 noisy: bool = False, seed: int = 0):
+        self.models = models
+        self.hw = hw
+        self.rng = np.random.default_rng(seed) if noisy else None
+
+    def _sample(self, desc: ServedModelDesc, b: int, st: physics.TrueState
+                ) -> ProfileSample:
+        return ProfileSample(
+            model=desc.name, batch=b, r=0.0,
+            t_load=st.t_load, t_sched=st.t_sched, t_act=st.t_act,
+            t_feedback=st.t_feedback, power=st.power,
+            cache_util=st.cache_util, n_kernels=desc.n_kernels,
+            d_load=desc.d_load_mb * b, d_feedback=desc.d_feedback_mb * b,
+            device_freq=st.freq, device_power=st.device_power)
+
+    def run_solo(self, model: str, batch: int, r: float) -> ProfileSample:
+        desc = self.models[model]
+        st = physics.device_state([(desc, batch, r)], self.hw, self.rng)[0]
+        s = self._sample(desc, batch, st)
+        return ProfileSample(**{**s.__dict__, "r": r})
+
+    def run_colocated(self, entries: Sequence[Tuple[str, int, float]]
+                      ) -> List[ProfileSample]:
+        ds = [(self.models[m], b, r) for (m, b, r) in entries]
+        sts = physics.device_state(ds, self.hw, self.rng)
+        out = []
+        for (m, b, r), st in zip(entries, sts):
+            s = self._sample(self.models[m], b, st)
+            out.append(ProfileSample(**{**s.__dict__, "r": r}))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event serving simulation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServedInstance:
+    """One serving process (Triton-process analogue) on a device."""
+    spec: WorkloadSpec
+    desc: ServedModelDesc
+    r: float
+    batch: int
+    gpu: int
+    shadow_r: float = 0.0        # extra resources granted when shadow active
+    shadow_active: bool = False
+    queue: List[float] = field(default_factory=list)   # arrival times
+    busy_until: float = 0.0
+    latencies: List[float] = field(default_factory=list)
+    completed: int = 0
+
+    @property
+    def r_eff(self) -> float:
+        return self.r + (self.shadow_r if self.shadow_active else 0.0)
+
+
+@dataclass
+class SimResult:
+    per_workload: Dict[str, Dict[str, float]]
+    timeline: List[Dict] = field(default_factory=list)
+
+    def violations(self, specs: Dict[str, WorkloadSpec]) -> List[str]:
+        out = []
+        for name, m in self.per_workload.items():
+            s = specs[name]
+            if m["p99_ms"] > s.slo_ms + 1e-9 or m["rps"] < 0.95 * s.rate_rps:
+                out.append(name)
+        return out
+
+
+AdjustFn = Callable[[float, List[ServedInstance]], None]
+# called every `adjust_period` sim-seconds with (now, instances)
+
+
+def simulate_plan(plan: ProvisioningPlan,
+                  models: Dict[str, ServedModelDesc],
+                  hw: HardwareSpec, *,
+                  duration_s: float = 30.0,
+                  seed: int = 0,
+                  poisson: bool = False,
+                  shadow: bool = False,
+                  shadow_extra: float = 0.10,
+                  monitor_period_s: float = 0.5,
+                  adjust_fn: Optional[AdjustFn] = None,
+                  adjust_period_s: float = 1.0,
+                  record_timeline: bool = False) -> SimResult:
+    """Run the serving cluster for `duration_s` simulated seconds."""
+    rng = np.random.default_rng(seed)
+    instances: List[ServedInstance] = []
+    for p in plan.placements:
+        instances.append(ServedInstance(
+            spec=p.workload, desc=models[p.workload.model], r=p.r,
+            batch=max(1, p.batch), gpu=p.gpu))
+    by_gpu: Dict[int, List[ServedInstance]] = {}
+    for inst in instances:
+        by_gpu.setdefault(inst.gpu, []).append(inst)
+
+    if shadow:
+        for inst in instances:
+            used = sum(i.r for i in by_gpu[inst.gpu])
+            inst.shadow_r = min(shadow_extra, max(0.0, 1.0 - used))
+
+    horizon = duration_s * 1000.0                      # ms
+    events: List[Tuple[float, int, str, int]] = []     # (t, seq, kind, idx)
+    seq = 0
+
+    def push(t, kind, idx):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, idx))
+        seq += 1
+
+    # request arrivals
+    for i, inst in enumerate(instances):
+        period = 1000.0 / inst.spec.rate_rps
+        t = float(rng.uniform(0, period))
+        while t < horizon:
+            push(t, "arrival", i)
+            t += float(rng.exponential(period)) if poisson else period
+
+    for t in np.arange(monitor_period_s * 1000.0, horizon,
+                       monitor_period_s * 1000.0):
+        push(float(t), "monitor", -1)
+    if adjust_fn is not None:
+        for t in np.arange(adjust_period_s * 1000.0, horizon,
+                           adjust_period_s * 1000.0):
+            push(float(t), "adjust", -1)
+
+    timeline: List[Dict] = []
+    recent: Dict[int, List[Tuple[float, float]]] = {i: [] for i in range(len(instances))}
+
+    def pass_latency(inst: ServedInstance, nb: int) -> physics.TrueState:
+        peers = [(i.desc, i.batch, i.r_eff) for i in by_gpu[inst.gpu]
+                 if i is not inst]
+        entries = [(inst.desc, nb, inst.r_eff)] + peers
+        return physics.device_state(entries, hw, rng)[0]
+
+    def try_serve(i: int, now: float):
+        inst = instances[i]
+        if not inst.queue or inst.busy_until > now + 1e-12:
+            return
+        nb = min(inst.batch, len(inst.queue))
+        taken, inst.queue = inst.queue[:nb], inst.queue[nb:]
+        st = pass_latency(inst, nb)
+        done = now + st.t_inf
+        inst.busy_until = done
+        for arr in taken:
+            lat = done - arr
+            inst.latencies.append(lat)
+            recent[i].append((done, lat))
+        inst.completed += nb
+        push(done, "done", i)
+
+    while events:
+        now, _, kind, idx = heapq.heappop(events)
+        if kind == "arrival":
+            instances[idx].queue.append(now)
+            try_serve(idx, now)
+        elif kind == "done":
+            try_serve(idx, now)
+        elif kind == "monitor":
+            for i, inst in enumerate(instances):
+                window = [l for (t, l) in recent[i] if t > now - 1000.0]
+                if record_timeline:
+                    st = pass_latency(inst, inst.batch)
+                    timeline.append({
+                        "t_s": now / 1000.0, "workload": inst.spec.name,
+                        "p99_1s": float(np.percentile(window, 99)) if window else 0.0,
+                        "avg_1s": float(np.mean(window)) if window else 0.0,
+                        "r": inst.r_eff, "batch": inst.batch,
+                        "rps_1s": len(window) / 1.0,
+                        "shadow": inst.shadow_active,
+                    })
+                if shadow and window and not inst.shadow_active:
+                    if float(np.percentile(window, 99)) > inst.spec.slo_ms:
+                        # switch to the pre-launched shadow process (Sec. 4.2)
+                        inst.shadow_active = True
+        elif kind == "adjust" and adjust_fn is not None:
+            adjust_fn(now / 1000.0, instances)
+
+    per = {}
+    for inst in instances:
+        lats = np.array(inst.latencies) if inst.latencies else np.array([np.inf])
+        per[inst.spec.name] = {
+            "p99_ms": float(np.percentile(lats, 99)),
+            "p50_ms": float(np.percentile(lats, 50)),
+            "avg_ms": float(np.mean(lats)),
+            "rps": inst.completed / duration_s,
+            "r_final": inst.r_eff,
+            "batch_final": inst.batch,
+            "shadow_used": inst.shadow_active,
+        }
+    return SimResult(per_workload=per, timeline=timeline)
+
+
+def measure_steady(entries, models, hw):
+    """GSLICE's measurement callback: steady-state avg latency + achievable
+    throughput for each entry co-located on one device."""
+    ds = [(models[e[0].model], e[2], e[3]) for e in entries]
+    sts = physics.device_state(ds, hw)
+    out = []
+    for e, st in zip(entries, sts):
+        b = e[2]
+        thr = 1000.0 * b / (st.t_gpu + st.t_feedback)
+        out.append((st.t_inf, thr))
+    return out

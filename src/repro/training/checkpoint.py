@@ -1,0 +1,81 @@
+"""Checkpointing: msgpack-serialized pytrees with metadata + atomic swap.
+
+(orbax is not available offline; this implements the same contract:
+save(step) / restore_latest / retention.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(a):
+    a = np.asarray(a)
+    return {
+        b"dtype": a.dtype.str if a.dtype != np.dtype("bfloat16") else "bf16",
+        b"shape": list(a.shape),
+        b"data": (a.astype(np.float32).tobytes() if a.dtype == jnp.bfloat16
+                  else a.tobytes()),
+    }
+
+
+def _unpack_leaf(d):
+    dtype = d[b"dtype"]
+    if dtype == "bf16" or dtype == b"bf16":
+        arr = np.frombuffer(d[b"data"], np.float32).reshape(d[b"shape"])
+        return jnp.asarray(arr, jnp.bfloat16)
+    arr = np.frombuffer(d[b"data"], np.dtype(dtype)).reshape(d[b"shape"])
+    return jnp.asarray(arr)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    leaves, treedef = jax.tree.flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "leaves.msgpack"), "wb") as f:
+        f.write(msgpack.packb([_pack_leaf(l) for l in leaves]))
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "n_leaves": len(leaves)}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    # retention
+    all_ckpts = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                       and not d.endswith(".tmp"))
+    for old in all_ckpts[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, old))
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (shape/dtype template)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "leaves.msgpack"), "rb") as f:
+        packed = msgpack.unpackb(f.read())
+    leaves = [_unpack_leaf(d) for d in packed]
+    _, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(treedef, leaves), step
+
+
+def restore_latest(ckpt_dir: str, like: Any) -> Optional[Tuple[Any, int]]:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return restore(ckpt_dir, step, like)

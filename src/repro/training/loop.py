@@ -1,0 +1,73 @@
+"""Training loop: jitted step + data pipeline + checkpointing + logging."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import transformer as T
+from repro.models.zoo import build_model
+from repro.training import checkpoint as ckpt_lib
+from repro.training.optimizer import AdamW
+
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: List[float]
+    tokens_per_s: float
+    steps: int
+
+
+def train(cfg: ArchConfig, *, steps: int = 200, batch: int = 8, seq: int = 128,
+          seed: int = 0, opt: Optional[AdamW] = None,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+          log_every: int = 20,
+          log_fn: Callable[[str], None] = print) -> TrainReport:
+    """Single-host training driver (CPU smoke / example scale)."""
+    model = build_model(cfg)
+    opt = opt or AdamW(lr=1e-3, warmup_steps=20, total_steps=steps,
+                       weight_decay=0.01)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    opt_state = opt.init(params)
+    start_step = 0
+    if ckpt_dir:
+        restored = ckpt_lib.restore_latest(ckpt_dir, (params, opt_state))
+        if restored:
+            (params, opt_state), start_step = restored
+            log_fn(f"restored checkpoint at step {start_step}")
+
+    compute_dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            pc = T.cast_params(p, compute_dtype)
+            return model.loss(pc, batch, remat=False)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    data = make_pipeline(cfg, batch, seq, seed=seed)
+    losses: List[float] = []
+    t0 = time.time()
+    n_tokens = 0
+    for i in range(start_step, steps):
+        b = next(data)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, loss = step_fn(params, opt_state, b)
+        losses.append(float(loss))
+        n_tokens += batch * seq
+        if (i + 1) % log_every == 0:
+            log_fn(f"step {i+1:5d} loss {np.mean(losses[-log_every:]):.4f}")
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            ckpt_lib.save(ckpt_dir, i + 1, (params, opt_state))
+    dt = time.time() - t0
+    return TrainReport(losses=losses, tokens_per_s=n_tokens / max(dt, 1e-9),
+                       steps=steps)

@@ -1,0 +1,72 @@
+"""Coefficient acquisition: the 11-config least-squares fit must recover a
+known Eq.-11 surface, and the full pipeline must fit the simulator within
+paper-like error."""
+import numpy as np
+import pytest
+
+from repro.core import coefficients as C
+from repro.core import perf_model as pm
+from repro.core.types import V5E
+from repro.serving.simulator import SimTestbed
+from repro.serving.workload import models
+
+
+def test_fit_k_act_recovers_known_surface():
+    k1, k2, k3, k4, k5 = 0.02, 1.5, 4.0, 0.05, 0.2
+    samples = []
+    for (b, r) in C.ELEVEN_CONFIGS:
+        t = (k1 * b * b + k2 * b + k3) / (r + k4) + k5
+        samples.append(C.ProfileSample(
+            model="m", batch=b, r=r, t_load=0, t_sched=0, t_act=t,
+            t_feedback=0, power=0, cache_util=0, n_kernels=100,
+            d_load=0.1 * b, d_feedback=0.01 * b))
+    f1, f2, f3, f4, f5 = C.fit_k_act(samples)
+    # the surface must be recovered pointwise (k-params can trade off)
+    for (b, r) in [(3, 0.33), (12, 0.77), (24, 0.15)]:
+        truth = (k1 * b * b + k2 * b + k3) / (r + k4) + k5
+        fit = (f1 * b * b + f2 * b + f3) / (r + f4) + f5
+        assert abs(fit - truth) / truth < 0.02
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    mods = models()
+    tb = SimTestbed(mods, V5E)
+    hw = C.fit_hardware("qwen2-vl-7b", V5E, tb)
+    profiles = {m: C.fit_workload(m, hw, tb) for m in mods}
+    return tb, hw, profiles
+
+
+def test_solo_prediction_error_paper_range(fitted):
+    """Held-out solo configs: avg error must be in the paper's range
+    (their Figs. 11-12: ~0.04-9.3%)."""
+    tb, hw, profiles = fitted
+    for name, c in profiles.items():
+        errs = []
+        for (b, r) in [(2, 0.25), (6, 0.45), (12, 0.7), (24, 0.9), (3, 0.15)]:
+            s = tb.run_solo(name, b, r)
+            obs = s.t_load + s.t_sched + s.t_act + s.t_feedback
+            pred = pm.predict_device(
+                [pm.PlacedWorkload(c, b, r)], hw).per_workload[0].t_inf
+            errs.append(abs(pred - obs) / obs)
+        assert np.mean(errs) < 0.10, (name, errs)
+
+
+def test_colocated_prediction_error(fitted):
+    """4-way co-location (paper Fig. 13): error within ~12%."""
+    tb, hw, profiles = fitted
+    entries = [("rwkv6-1.6b", 4, 0.25), ("qwen1.5-4b", 4, 0.25),
+               ("qwen2-vl-7b", 3, 0.25), ("whisper-large-v3", 2, 0.2)]
+    obs = tb.run_colocated(entries)
+    placed = [pm.PlacedWorkload(profiles[m], b, r) for (m, b, r) in entries]
+    pred = pm.predict_device(placed, hw)
+    for (m, b, r), o, p in zip(entries, obs, pred.per_workload):
+        observed = o.t_load + (o.t_sched + o.t_act) * (hw.max_freq / o.device_freq) + o.t_feedback
+        err = abs(p.t_inf - observed) / observed
+        assert err < 0.15, (m, err, p.t_inf, observed)
+
+
+def test_fit_hardware_recovers_sched_slope(fitted):
+    tb, hw, profiles = fitted
+    assert hw.alpha_sch > 0          # co-location slows dispatch
+    assert abs(hw.beta_sch) < 0.05

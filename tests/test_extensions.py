@@ -1,0 +1,155 @@
+"""Beyond-paper extensions: 8-bit Adam, Poisson-arrival robustness,
+serving engine integration, launchers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.optimizer import (AdamW, QuantState, _dequantize,
+                                      _quantize, choose_block, quantizable)
+
+
+def test_quant_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 3.0
+    qs = _quantize(x)
+    back = _dequantize(qs, x.shape)
+    # blockwise absmax int8: error <= scale/2 = max|block|/254
+    assert float(jnp.max(jnp.abs(back - x))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+def test_choose_block_alignment():
+    assert choose_block((8, 16384)) == 256
+    # dbrx F=10752: 672 per 16-way shard -> block must divide 672
+    b = choose_block((16, 6144, 10752))
+    assert b is not None and 10752 % b == 0 and (10752 // 16) % b == 0
+    assert choose_block((100,)) is None          # vectors never quantized
+
+
+def test_quantized_adam_converges_like_f32():
+    def run(quant):
+        opt = AdamW(lr=0.05, warmup_steps=1, total_steps=400,
+                    weight_decay=0.0, grad_clip=None,
+                    quant_min_size=16 if quant else None)
+        params = {"w": jnp.ones((4, 512)) * 2.0}
+        st = opt.init(params)
+        for _ in range(100):
+            g = {"w": 2 * params["w"]}
+            params, st = opt.update(g, st, params)
+        return float(jnp.abs(params["w"]).max())
+    f32 = run(False)
+    q8 = run(True)
+    assert q8 < 0.2 and abs(q8 - f32) < 0.15
+
+
+def test_quant_state_is_pytree_and_checkpointable():
+    import tempfile
+    from repro.training import checkpoint as ckpt
+    opt = AdamW(quant_min_size=16)
+    params = {"w": jnp.ones((4, 512))}
+    st = opt.init(params)
+    assert isinstance(st.mu["w"], QuantState)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, st)
+        restored, _ = ckpt.restore_latest(d, st)
+        np.testing.assert_array_equal(np.asarray(restored.mu["w"].q),
+                                      np.asarray(st.mu["w"].q))
+
+
+def test_poisson_fragility_documented():
+    """Beyond-paper FINDING (EXPERIMENTS.md §Repro-validation notes):
+    iGniter sizes b_appr to *just meet* the mean arrival rate and spends
+    the full T/2 latency budget on the batch pass — utilization -> 1 and
+    zero tail slack.  Under Poisson arrivals the M/D/1-style queue pushes
+    essentially every workload over its P99 SLO, so the paper's
+    constant-rate client (Sec. 5.1) is a load-bearing assumption.
+
+    Provisioning against a tightened SLO (x0.55) buys back some slack but
+    does NOT fully fix the tails: a principled fix needs a queueing-delay
+    term in the Eq. 14 budget split (future work, DESIGN.md §8)."""
+    import dataclasses
+    from repro.core import provisioner as prov
+    from repro.core.experiments import fitted_context
+    from repro.serving.simulator import simulate_plan
+    from repro.serving.workload import models, specs_by_name, twelve_workloads
+    ctx = fitted_context()
+    specs = twelve_workloads()
+    sb = specs_by_name()
+
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    res = simulate_plan(plan, models(), ctx.hw, duration_s=20.0,
+                        poisson=True, shadow=False, seed=3)
+    naive = res.violations(sb)
+    assert len(naive) >= 8              # the fragility is real and large
+
+    tight = [dataclasses.replace(s, slo_ms=s.slo_ms * 0.55) for s in specs]
+    plan2 = prov.provision(tight, ctx.profiles, ctx.hw)
+    res2 = simulate_plan(plan2, models(), ctx.hw, duration_s=20.0,
+                         poisson=True, shadow=True, seed=3)
+    viols2 = [w for w, m in res2.per_workload.items()
+              if m["p99_ms"] > sb[w].slo_ms
+              or m["rps"] < 0.9 * sb[w].rate_rps]
+    assert len(viols2) < len(naive)     # partial mitigation only
+
+
+def test_serving_engine_batched():
+    import time
+    from repro.configs import REGISTRY, reduced
+    from repro.serving.engine import Request, ServingEngine
+    cfg = reduced(REGISTRY["qwen3-4b"], layers=2, d_model=128)
+    eng = ServingEngine(cfg, batch_size=2, prompt_len=16, decode_tokens=2)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(rid=i, tokens=rng.integers(
+            3, cfg.vocab_size, size=16).astype(np.int32),
+            arrival_s=time.time()))
+    out = eng.pump() + eng.pump()
+    assert len(out) == 4
+    assert all(c.tokens.shape == (2,) for c in out)
+    assert eng.p99_ms() > 0
+
+
+def test_gslice_reactive_oscillation_visible():
+    """Fig. 15/16: GSLICE+'s threshold tuning must actually move r/b."""
+    import functools
+    from repro.core import baselines as B
+    from repro.core.experiments import fitted_context
+    from repro.serving.simulator import measure_steady
+    from repro.serving.workload import models, twelve_workloads
+    ctx = fitted_context()
+    mfn = functools.partial(measure_steady, models=models(), hw=ctx.hw)
+    plan = B.provision_gslice(twelve_workloads(), ctx.profiles, ctx.hw, mfn)
+    # batches were reactively grown from 1
+    assert any(p.batch > 1 for p in plan.placements)
+
+
+def test_expert_parallel_matches_dense_dispatch():
+    """apply_moe_ep (shard_map all-to-all EP) must equal apply_moe exactly
+    in the dropless regime.  Runs in a subprocess with 8 host devices so
+    the 4-way data (EP) x 2-way model (TP) mesh is real."""
+    import subprocess
+    import sys
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.configs import REGISTRY, reduced
+from repro.models import moe as M
+cfg = reduced(REGISTRY["dbrx-132b"]).replace(n_experts=4, top_k=2,
+                                             capacity_factor=8.0)
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+p = M.init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model), jnp.float32)
+with mesh:
+    y_ref, _ = jax.jit(lambda p, x: M.apply_moe(p, x, cfg, chunk=32))(p, x)
+    y_ep, _ = jax.jit(lambda p, x: M.apply_moe_ep(p, x, cfg, mesh=mesh,
+                                                  chunk=32))(p, x)
+err = float(jnp.max(jnp.abs(y_ref - y_ep)))
+assert err < 1e-5, err
+print("OK", err)
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, cwd=".", timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,146 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles in repro.kernels.ref (brief requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+@pytest.mark.parametrize("S,H,KV,hd", [
+    (128, 4, 4, 64),      # MHA
+    (256, 8, 2, 64),      # GQA 4:1
+    (256, 4, 1, 128),     # MQA, wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_attention(S, H, KV, hd, dtype, causal, window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64,
+                        interpret=True)
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("S,H,KV,hd,bk", [
+    (512, 4, 2, 64, 128),
+    (1024, 8, 8, 64, 256),
+    (256, 4, 1, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 128])
+def test_decode_attention(S, H, KV, hd, bk, dtype, window):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, 1, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    qpos = jnp.asarray([S // 2, S - 1], jnp.int32)
+    kvpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    o = decode_attention(q, k, v, qpos, kvpos, window=window, bk=bk,
+                         interpret=True)
+    o_ref = ref.decode_attention_ref(q, k, v, qpos, kvpos, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_rolling_slots():
+    """-1 (unwritten) rolling slots must be masked out."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, hd = 1, 128, 2, 2, 64
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kvpos = jnp.where(jnp.arange(S) < 100, jnp.arange(S), -1)[None]
+    qpos = jnp.asarray([99], jnp.int32)
+    o = decode_attention(q, k, v, qpos, kvpos.astype(jnp.int32), bk=64,
+                         interpret=True)
+    o_ref = ref.decode_attention_ref(q, k, v, qpos, kvpos.astype(jnp.int32))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("S,H,hd,q_chunk", [
+    (128, 2, 32, 32), (256, 4, 64, 64), (64, 2, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(S, H, hd, q_chunk, dtype):
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    B = 2
+    r = (0.5 * jax.random.normal(ks[0], (B, S, H, hd))).astype(dtype)
+    k = (0.5 * jax.random.normal(ks[1], (B, S, H, hd))).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd)).astype(dtype)
+    logw = jnp.maximum(
+        -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5 - 1.5),
+        -2.0).astype(dtype)
+    u = (0.3 * jax.random.normal(ks[4], (H, hd))).astype(dtype)
+    y, sf = rwkv6_scan(r, k, v, logw, u, q_chunk=q_chunk, interpret=True)
+    y_ref, sf_ref = ref.rwkv6_ref(r, k, v, logw, u)
+    tol = 5 * _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("S,H,hd,N,q_chunk", [
+    (128, 2, 32, 16, 32), (256, 4, 64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(S, H, hd, N, q_chunk, dtype):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    B = 2
+    xdt = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    Bm = (0.5 * jax.random.normal(ks[1], (B, S, H, N))).astype(dtype)
+    Cm = (0.5 * jax.random.normal(ks[2], (B, S, H, N))).astype(dtype)
+    dA = -jnp.exp(jax.random.normal(ks[3], (B, S, H)) * 0.5 - 1.5)
+    y, h = ssd_scan(xdt, Bm, Cm, dA, q_chunk=q_chunk, interpret=True)
+    y_ref, h_ref = ref.ssd_ref(xdt, Bm, Cm, dA)
+    tol = 5 * _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_model_wkv_matches_kernel():
+    """The model's jnp chunked WKV (factorized) == the Pallas kernel =="""
+    from repro.models.rwkv import wkv_chunked
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 5)
+    B, S, H, hd = 2, 128, 2, 32
+    r = 0.5 * jax.random.normal(ks[0], (B, S, H, hd))
+    k = 0.5 * jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    logw = jnp.maximum(-jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) - 1.5),
+                       -2.0)
+    u = 0.3 * jax.random.normal(ks[4], (H, hd))
+    y1, s1 = wkv_chunked(r, k, v, logw, u, q=32)
+    y2, s2 = rwkv6_scan(r, k, v, logw, u, q_chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)

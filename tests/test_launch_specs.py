@@ -1,0 +1,38 @@
+"""input_specs construction for every (arch x shape) — cheap (no mesh,
+no compile), guards the dry-run entry API."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.launch.shapes import SHAPES, applicable
+from repro.launch.steps import input_specs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_construct(arch, shape):
+    if not applicable(arch, shape):
+        pytest.skip("long_500k inapplicable (DESIGN.md)")
+    specs = input_specs(arch, shape)
+    leaves = jax.tree.leaves(specs)
+    assert leaves, (arch, shape)
+    for a in leaves:
+        assert isinstance(a, jax.ShapeDtypeStruct)
+        assert all(d >= 0 for d in a.shape)
+    kind = SHAPES[shape].kind
+    if kind == "train":
+        assert specs["tokens"].shape == (SHAPES[shape].global_batch,
+                                         SHAPES[shape].seq_len)
+    elif kind == "decode":
+        assert specs["token"].shape == (SHAPES[shape].global_batch, 1)
+        assert "cache" in specs
+    else:
+        assert "batch" in specs and "cache" in specs
+
+
+def test_decode_cache_is_heads_major():
+    specs = input_specs("qwen3-4b", "decode_32k")
+    k = specs["cache"]["layers"].k
+    cfg_kv, S = 8, 32768
+    assert k.shape == (36, 128, cfg_kv, S, 128)

@@ -1,0 +1,133 @@
+"""iGniter performance model (Eqs. 1-11) + Theorem 1 — unit and
+hypothesis property tests on the system's invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import perf_model as pm
+from repro.core import provisioner as prov
+from repro.core.types import V5E, WorkloadCoefficients, WorkloadSpec
+
+
+def make_coeffs(k1=0.01, k2=2.0, k3=3.0, k4=0.02, k5=0.1, alpha_cache=0.1):
+    return WorkloadCoefficients(
+        model="m", hardware="hw", d_load=0.5, d_feedback=0.01,
+        n_kernels=400, k_sch=0.005,
+        k1=k1, k2=k2, k3=k3, k4=k4, k5=k5,
+        alpha_power=500.0, beta_power=5.0,
+        alpha_cacheutil=1.2, beta_cacheutil=0.02, alpha_cache=alpha_cache)
+
+
+# ---------------------------------------------------------------------------
+# Eq.-level unit tests
+# ---------------------------------------------------------------------------
+
+def test_eq11_monotonicity():
+    c = make_coeffs()
+    # more resources -> faster; bigger batch -> slower
+    assert c.k_act(8, 0.8) < c.k_act(8, 0.4)
+    assert c.k_act(16, 0.5) > c.k_act(4, 0.5)
+
+
+def test_eq6_scheduling_delay():
+    assert pm.delta_sch(V5E, 1) == 0.0
+    d2, d5 = pm.delta_sch(V5E, 2), pm.delta_sch(V5E, 5)
+    assert d5 > d2 > 0.0
+
+
+def test_eq9_frequency_throttling():
+    assert pm.gpu_frequency(V5E, V5E.power_cap - 1) == V5E.max_freq
+    f = pm.gpu_frequency(V5E, V5E.power_cap + 50)
+    assert f < V5E.max_freq
+    assert f >= 0.3 * V5E.max_freq
+
+
+def test_interference_increases_latency():
+    """Fig. 3 property: co-location strictly increases predicted latency."""
+    c = make_coeffs()
+    solo = pm.predict_device([pm.PlacedWorkload(c, 8, 0.2)], V5E)
+    prev = solo.per_workload[0].t_inf
+    for n in (2, 3, 4, 5):
+        multi = pm.predict_device([pm.PlacedWorkload(c, 8, 0.2)] * n, V5E)
+        cur = multi.per_workload[0].t_inf
+        assert cur > prev - 1e-12
+        prev = cur
+
+
+def test_eq8_neighbor_cache_sensitivity():
+    c = make_coeffs(alpha_cache=0.5)
+    light = pm.PlacedWorkload(make_coeffs(), 1, 0.1)
+    heavy = pm.PlacedWorkload(make_coeffs(), 8, 0.8)
+    me = pm.PlacedWorkload(c, 4, 0.2)
+    t_light = pm.predict_workload(me, [light], V5E).t_act
+    t_heavy = pm.predict_workload(me, [heavy], V5E).t_act
+    assert t_heavy > t_light
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(slo=st.floats(20.0, 400.0), rate=st.floats(5.0, 400.0))
+def test_theorem1_batch_meets_rate(slo, rate):
+    """b_appr is the SMALLEST batch whose throughput can cover the rate
+    within T_slo/2 (Eq. 17 derivation property)."""
+    c = make_coeffs()
+    spec = WorkloadSpec("w", "m", slo, rate)
+    b = prov.appropriate_batch(spec, c, V5E, b_max=10_000)
+    r_ms = rate / 1000.0
+    # with t_gpu = T/2 - t_load - t_feedback, throughput b / (t_gpu + t_fb) >= R
+    t_budget = slo / 2.0 - c.t_load(b, V5E.pcie_bw)
+    assert b >= r_ms * t_budget - 1.0 - 1e-6   # ceil within 1
+    if b > 1:
+        t_budget_prev = slo / 2.0 - c.t_load(b - 1, V5E.pcie_bw)
+        assert (b - 1) < r_ms * t_budget_prev + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(slo=st.floats(30.0, 400.0), rate=st.floats(5.0, 200.0))
+def test_theorem1_r_lower_meets_slo(slo, rate):
+    """Running alone with r_lower, predicted latency fits T_slo/2; with one
+    r_unit less it would not (minimality), modulo the k4 offset.
+
+    NOTE (paper fidelity): the Appendix-A proof of Eq. 18 drops the f/F
+    frequency factor, i.e. Theorem 1 only guarantees the bound when the
+    solo power demand stays under the cap.  We test exactly that regime
+    (Alg. 2 re-checks the full model with throttling at placement time,
+    which covers the residual) — see EXPERIMENTS.md notes.
+    """
+    c = make_coeffs()
+    spec = WorkloadSpec("w", "m", slo, rate)
+    try:
+        b = prov.appropriate_batch(spec, c, V5E)
+        rl = prov.resource_lower_bound(spec, c, V5E, b)
+    except prov.InfeasibleError:
+        return
+    pred = pm.predict_device([pm.PlacedWorkload(c, b, rl)], V5E)
+    if pred.p_demand > V5E.power_cap:
+        return   # outside Theorem 1's assumption (see docstring)
+    assert pred.per_workload[0].t_inf <= slo / 2.0 + 1e-6
+    if rl > V5E.r_unit + 1e-9:
+        pred2 = pm.predict_device(
+            [pm.PlacedWorkload(c, b, rl - V5E.r_unit)], V5E)
+        assert pred2.per_workload[0].t_inf > slo / 2.0 - 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 64), r=st.floats(0.05, 1.0))
+def test_solo_characteristics_positive(b, r):
+    c = make_coeffs()
+    assert c.k_act(b, r) > 0
+    assert c.power(b, r) > 0
+    assert 0 <= c.cache_util(b, r) <= 10.0
+
+
+def test_throughput_eq2():
+    c = make_coeffs()
+    pred = pm.predict_device([pm.PlacedWorkload(c, 8, 0.5)], V5E)
+    w = pred.per_workload[0]
+    assert w.throughput == pytest.approx(
+        1000.0 * 8 / (w.t_gpu + w.t_feedback))

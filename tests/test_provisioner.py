@@ -1,0 +1,161 @@
+"""Provisioning strategy invariants (Alg. 1 / Alg. 2) — unit + hypothesis."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines as B
+from repro.core import perf_model as pm
+from repro.core import provisioner as prov
+from repro.core.types import V5E, WorkloadSpec
+from tests.test_perf_model import make_coeffs
+
+
+def _profiles():
+    return {
+        "light": make_coeffs(k1=0.002, k2=0.4, k3=0.8, k5=0.05),
+        "mid": make_coeffs(k1=0.01, k2=2.0, k3=3.0),
+        "heavy": make_coeffs(k1=0.02, k2=5.0, k3=8.0, k5=0.3),
+    }
+
+
+workload_st = st.lists(
+    st.tuples(st.sampled_from(["light", "mid", "heavy"]),
+              st.floats(60.0, 400.0), st.floats(5.0, 80.0)),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ws=workload_st)
+def test_provision_invariants(ws):
+    specs = [WorkloadSpec(f"W{i}", m, slo, rate)
+             for i, (m, slo, rate) in enumerate(ws)]
+    profiles = _profiles()
+    try:
+        plan = prov.provision(specs, profiles, V5E)
+    except prov.InfeasibleError:
+        return
+    # every workload placed exactly once (Eq. 16)
+    placed = sorted(p.workload.name for p in plan.placements)
+    assert placed == sorted(s.name for s in specs)
+    # capacity constraint per device (Eq. 15)
+    for g in range(plan.n_gpus):
+        assert plan.total_allocated(g) <= 1.0 + 1e-9
+    # allocations in r_unit grid, positive
+    for p in plan.placements:
+        assert p.r > 0
+        assert abs(p.r / V5E.r_unit - round(p.r / V5E.r_unit)) < 1e-6
+        assert p.batch >= 1
+    # the analytical model predicts every SLO met (Constraint 14)
+    for g, pls in plan.by_gpu().items():
+        placed_w = [pm.PlacedWorkload(profiles[p.workload.model], p.batch, p.r)
+                    for p in pls]
+        pred = pm.predict_device(placed_w, V5E)
+        for p, wp in zip(pls, pred.per_workload):
+            assert wp.t_inf <= p.workload.slo_ms / 2.0 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(ws=workload_st)
+def test_ffd_uses_fewer_or_equal_devices_than_singletons(ws):
+    specs = [WorkloadSpec(f"W{i}", m, slo, rate)
+             for i, (m, slo, rate) in enumerate(ws)]
+    profiles = _profiles()
+    try:
+        plan = B.provision_ffd(specs, profiles, V5E)
+    except prov.InfeasibleError:
+        return
+    assert plan.n_gpus <= len(specs)
+
+
+def test_alloc_gpus_grows_on_violation():
+    """Alg. 2: co-locating a heavy neighbor grants extra resources to the
+    originally-placed workload when its SLO would be violated."""
+    profiles = _profiles()
+    hw = V5E
+    s1 = WorkloadSpec("a", "mid", 100.0, 40.0)
+    s2 = WorkloadSpec("b", "heavy", 150.0, 30.0)
+    b1 = prov.appropriate_batch(s1, profiles["mid"], hw)
+    r1 = prov.resource_lower_bound(s1, profiles["mid"], hw, b1)
+    dev = prov._Dev(entries=[(s1, profiles["mid"], b1, r1)])
+    b2 = prov.appropriate_batch(s2, profiles["heavy"], hw)
+    r2 = prov.resource_lower_bound(s2, profiles["heavy"], hw, b2)
+    r_a = prov.alloc_gpus(dev, s2, profiles["heavy"], b2, r2, hw)
+    if r_a is not None:
+        assert r_a[0] >= r1 - 1e-9          # never shrinks the original
+        assert r_a[-1] >= r2 - 1e-9
+        assert sum(r_a) <= 1.0 + 1e-9
+
+
+def test_gpulets_at_most_two_per_device():
+    specs = [WorkloadSpec(f"W{i}", "light", 120.0, 30.0) for i in range(7)]
+    plan = B.provision_gpulets(specs, _profiles(), V5E)
+    for g, pls in plan.by_gpu().items():
+        assert len(pls) <= 2
+        for p in pls:
+            assert p.r in (0.2, 0.4, 0.5, 0.6, 0.8)
+
+
+def test_heterogeneous_selection_picks_cheaper():
+    from repro.core.types import V4
+    specs = [WorkloadSpec("W0", "light", 150.0, 20.0),
+             WorkloadSpec("W1", "mid", 200.0, 20.0)]
+    profiles = {"tpu-v5e": _profiles(), "tpu-v4": _profiles()}
+    plan, hw = prov.provision_cheapest(specs, profiles, [V5E, V4])
+    # same coefficient surface on both -> cheaper per-device price must win
+    assert hw.name == "tpu-v5e"
+
+
+def test_sorted_descending_placement_order():
+    """Alg. 1 line 3: larger r_lower placed first (ANYFIT constraint)."""
+    profiles = _profiles()
+    specs = [WorkloadSpec("small", "light", 300.0, 10.0),
+             WorkloadSpec("big", "heavy", 80.0, 50.0)]
+    try:
+        plan = prov.provision(specs, profiles, V5E)
+    except prov.InfeasibleError:
+        return
+    by = {p.workload.name: p for p in plan.placements}
+    assert by["big"].gpu == 0     # the big workload anchored the first device
+
+
+def test_online_add_workload_adjusts_originals():
+    """Sec. 2.3's gpu-lets critique: iGniter must be able to grow the
+    ORIGINALLY-placed workloads' allocations when a newcomer lands."""
+    profiles = _profiles()
+    base_specs = [WorkloadSpec("W0", "mid", 150.0, 40.0),
+                  WorkloadSpec("W1", "light", 200.0, 30.0)]
+    plan = prov.provision(base_specs, profiles, V5E)
+    before = {p.workload.name: p.r for p in plan.placements}
+
+    new = WorkloadSpec("W2", "heavy", 200.0, 30.0)
+    plan2 = prov.add_workload(plan, new, profiles, V5E)
+    names = sorted(p.workload.name for p in plan2.placements)
+    assert names == ["W0", "W1", "W2"]
+    # capacity + predicted SLOs still hold
+    for g, pls in plan2.by_gpu().items():
+        assert sum(p.r for p in pls) <= 1.0 + 1e-9
+        placed = [pm.PlacedWorkload(profiles[p.workload.model], p.batch, p.r)
+                  for p in pls]
+        pred = pm.predict_device(placed, V5E)
+        for p, wp in zip(pls, pred.per_workload):
+            assert wp.t_inf <= p.workload.slo_ms / 2.0 + 1e-6
+    # originals never shrink (Alg. 2 only grows)
+    after = {p.workload.name: p.r for p in plan2.placements}
+    for n in before:
+        assert after[n] >= before[n] - 1e-9
+
+
+def test_online_add_matches_batch_quality():
+    """A stream of online arrivals should not use wildly more devices
+    than provisioning the same set at once."""
+    import numpy as np
+    profiles = _profiles()
+    rng = np.random.default_rng(1)
+    specs = [WorkloadSpec(f"W{i}", ["light", "mid", "heavy"][i % 3],
+                          float(rng.uniform(150, 350)),
+                          float(rng.uniform(10, 40))) for i in range(8)]
+    batch_plan = prov.provision(specs, profiles, V5E)
+    online = prov.provision(specs[:1], profiles, V5E)
+    for s in specs[1:]:
+        online = prov.add_workload(online, s, profiles, V5E)
+    assert online.n_gpus <= batch_plan.n_gpus + 2

@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system (replaces scaffold)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.experiments import fitted_context
+from repro.core import provisioner as prov
+from repro.core.types import WorkloadSpec
+from repro.profiling.metrics import forward_flops, kernel_count, serving_models
+from repro.configs import ASSIGNED, REGISTRY, get_config
+from repro.launch.shapes import SHAPES, applicable, effective_config
+
+
+def test_paper_table1_analogue():
+    """Sec. 2.3 illustrative example: iGniter hosts the 3-workload set on
+    few devices with all SLOs predicted met."""
+    from repro.serving.workload import three_workloads
+    ctx = fitted_context()
+    plan = prov.provision(three_workloads(), ctx.profiles, ctx.hw)
+    assert plan.n_gpus <= 3
+    metrics = prov.predicted_plan_metrics(plan, ctx.profiles, ctx.hw)
+    for p in plan.placements:
+        assert metrics[p.workload.name].t_inf <= p.workload.slo_ms / 2 + 1e-6
+
+
+def test_runtime_overhead_paper_claim():
+    """Sec. 5.4: Alg. 1 runs in seconds even for hundreds of workloads."""
+    import time
+    ctx = fitted_context()
+    rng = np.random.default_rng(0)
+    mods = list(ctx.profiles)
+    specs = [WorkloadSpec(f"W{i}", mods[i % len(mods)],
+                          float(rng.uniform(120, 400)),
+                          float(rng.uniform(5, 40)))
+             for i in range(100)]
+    t0 = time.time()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    dt = time.time() - t0
+    assert dt < 30.0                    # paper: 4.61 s at m=1000 (C++ server)
+    assert plan.n_gpus >= 1
+
+
+def test_workload_metrics_sane():
+    """Analytic FLOPs/bytes against configuration arithmetic."""
+    for name, d in serving_models().items():
+        cfg = get_config(d.arch)
+        # flops within sane multiple of 2*N*prompt
+        lo = 1.5 * cfg.n_active_params() * d.prompt_len
+        hi = 40 * cfg.n_active_params() * d.prompt_len
+        assert lo <= d.flops_per_item <= hi, name
+        assert d.n_kernels == kernel_count(cfg)
+        assert d.weight_bytes == 2.0 * cfg.n_active_params()
+
+
+def test_all_arch_shape_applicability_table():
+    """DESIGN.md skip table: exactly the subquadratic archs run long_500k."""
+    runs = {a for a in ASSIGNED if applicable(a, "long_500k")}
+    assert runs == {"rwkv6-1.6b", "zamba2-2.7b", "qwen3-4b", "mixtral-8x22b"}
+    for a in ASSIGNED:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(a, s)
+
+
+def test_effective_config_long_context():
+    cfg = effective_config("qwen3-4b", "long_500k")
+    assert cfg.sliding_window == 4096          # beyond-paper SWA variant
+    cfg = effective_config("zamba2-2.7b", "long_500k")
+    assert cfg.sliding_window == 4096          # shared-attn block windowed
+    cfg = effective_config("mixtral-8x22b", "decode_32k")
+    assert cfg.sliding_window == 4096          # native
+
+
+def test_n_params_analytic_matches_init():
+    """Config-level parameter arithmetic vs actual initialized trees."""
+    import jax
+    from repro.configs import reduced
+    from repro.models.zoo import build_model
+    for arch in ("yi-6b", "mixtral-8x22b", "rwkv6-1.6b", "zamba2-2.7b"):
+        cfg = reduced(REGISTRY[arch])
+        model = build_model(cfg)
+        n_actual = sum(x.size for x in jax.tree.leaves(
+            model.abstract_params()))
+        n_analytic = cfg.n_params()
+        assert abs(n_actual - n_analytic) / n_actual < 0.25, (
+            arch, n_actual, n_analytic)
