@@ -13,13 +13,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import ablation, accuracy, interference, \
-        kernels_micro, provisioning, roofline, runtime_behavior
+        kernels_micro, provisioning, roofline, runtime_behavior, scale_sweep
 
     modules = [
         ("interference(Figs3-9)", interference),
         ("accuracy(Figs11-13)", accuracy),
         ("provisioning(Table1,Figs14-19)", provisioning),
         ("runtime(Figs15-21)", runtime_behavior),
+        ("scale_sweep(Sec5.4,quick)", scale_sweep),
         ("kernels_micro", kernels_micro),
         ("interference_ablation", ablation),
         ("roofline", roofline),

@@ -1,0 +1,142 @@
+"""Sec. 5.4 scalability sweep: the paper claims Algorithm 1 provisions
+m = 1000 workloads in 4.61 s (the interference model is called O(m^2)
+times).  This benchmark tracks that bound against the vectorized engine:
+
+  * m in {10, 100, 500, 1000} synthetic workloads (jittered App-table
+    mixes) provisioned over heterogeneous hardware (TPU v5e + v4) via
+    `provision_cheapest`,
+  * reported per m: provisioning wall-clock, devices used, chosen
+    hardware, plan cost, and the model-predicted SLO-violation count,
+  * for small m: the scalar-oracle wall-clock and a plan-identity check,
+  * a sampled discrete-event simulation of a few devices (exact per
+    device) as a ground-truth spot check.
+
+Run:  PYTHONPATH=src python -m benchmarks.scale_sweep [--quick] [--check]
+      --quick    m <= 100 only (CI per-PR smoke; uploads results artifact)
+      --check    exit non-zero if the m=1000 wall-clock exceeds TARGET_S
+
+Writes a JSON row dump (default benchmarks/scale_sweep_results.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SIZES_FULL = (10, 100, 500, 1000)
+SIZES_QUICK = (10, 100)
+TARGET_S = 10.0          # CI bound for m=1000 (paper: 4.61 s)
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "scale_sweep_results.json")
+
+
+def _context():
+    from repro.core.experiments import fitted_context
+    ctx5 = fitted_context("tpu-v5e")
+    ctx4 = fitted_context("tpu-v4")
+    profiles_by_hw = {ctx5.hw.name: ctx5.profiles,
+                      ctx4.hw.name: ctx4.profiles}
+    return profiles_by_hw, [ctx5.hw, ctx4.hw]
+
+
+def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
+          sim_max_m: int = 500, sim_devices: int = 4,
+          sim_duration_s: float = 5.0):
+    from repro.core import provisioner as prov
+    from repro.serving.simulator import simulate_device_sample
+    from repro.serving.workload import models, synthetic_workloads
+
+    profiles_by_hw, hardware = _context()
+    mods = models()
+    rows = []
+    for m in sizes:
+        specs = synthetic_workloads(m, seed)
+        t0 = time.perf_counter()
+        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+        wall = time.perf_counter() - t0
+        viol = prov.predicted_violations(plan, profiles_by_hw[hw.name], hw)
+        row = {
+            "bench": "scale_sweep", "m": m,
+            "wall_s": round(wall, 3),
+            "n_devices": plan.n_gpus,
+            "hardware": hw.name,
+            "cost_per_hour": round(plan.cost_per_hour(), 2),
+            "predicted_violations": len(viol),
+            "target_s": TARGET_S if m == 1000 else None,
+        }
+        if m <= oracle_max_m:
+            t0 = time.perf_counter()
+            oracle, hw_o = prov.provision_cheapest(
+                specs, profiles_by_hw, hardware, engine="scalar")
+            row["scalar_wall_s"] = round(time.perf_counter() - t0, 3)
+            row["matches_scalar_oracle"] = (
+                hw_o.name == hw.name
+                and [(p.workload.name, p.gpu, round(p.r, 9), p.batch)
+                     for p in oracle.placements]
+                == [(p.workload.name, p.gpu, round(p.r, 9), p.batch)
+                    for p in plan.placements])
+        if m <= sim_max_m:
+            res, gpus = simulate_device_sample(
+                plan, mods, hw, max_devices=sim_devices,
+                duration_s=sim_duration_s, seed=seed)
+            simulated = {w: s for w, s in
+                         ((p.workload.name, p.workload)
+                          for p in plan.placements if p.gpu in set(gpus))}
+            row["sim_devices"] = len(gpus)
+            row["sim_workloads"] = len(simulated)
+            row["sim_violations"] = len(res.violations(simulated))
+        rows.append(row)
+        print(",".join(f"{k}={v}" for k, v in row.items() if v is not None),
+              flush=True)
+    return rows
+
+
+def run():
+    """benchmarks.run integration: the quick tier only."""
+    return sweep(SIZES_QUICK)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="m <= 100 only (per-PR CI smoke)")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated m values (overrides --quick)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    ap.add_argument("--check", action="store_true",
+                    help="fail if m=1000 exceeds the %.0f s target"
+                         % TARGET_S)
+    args = ap.parse_args(argv)
+
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = SIZES_QUICK if args.quick else SIZES_FULL
+    if args.check and 1000 not in sizes:
+        print("error: --check requires m=1000 in the sweep "
+              f"(selected sizes: {sizes})", file=sys.stderr)
+        return 2
+    rows = sweep(sizes, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+    status = 0
+    for row in rows:
+        if row["m"] == 1000:
+            ok = row["wall_s"] < TARGET_S
+            print(f"# m=1000 wall-clock {row['wall_s']:.2f}s "
+                  f"{'<' if ok else '>='} {TARGET_S:.0f}s target "
+                  f"({'PASS' if ok else 'FAIL'}; paper reports 4.61s)")
+            if args.check and not ok:
+                status = 1
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

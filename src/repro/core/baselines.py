@@ -17,7 +17,10 @@ from __future__ import annotations
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import perf_model as pm
+from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
@@ -31,15 +34,13 @@ R_MAX = 1.0
 
 def provision_ffd(specs: Sequence[WorkloadSpec],
                   profiles: Dict[str, WorkloadCoefficients],
-                  hw: HardwareSpec, *, use_alloc_gpus: bool = False
-                  ) -> ProvisioningPlan:
-    prepared = []
-    for s in specs:
-        c = profiles[s.model]
-        b = prov.appropriate_batch(s, c, hw)
-        rl = prov.resource_lower_bound(s, c, hw, b)
-        prepared.append((s, c, b, rl))
-    prepared.sort(key=lambda t: -t[3])
+                  hw: HardwareSpec, *, use_alloc_gpus: bool = False,
+                  engine: str = "vec") -> ProvisioningPlan:
+    if engine not in ("vec", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}")
+    prepared = prov._prepare(specs, profiles, hw)
+    if use_alloc_gpus and engine == "vec":
+        return _provision_ffd_vec(prepared, hw)
 
     devs: List[prov._Dev] = []
     for (s, c, b, rl) in prepared:
@@ -67,6 +68,32 @@ def provision_ffd(specs: Sequence[WorkloadSpec],
         for (s, c, b, r) in dev.entries:
             plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
     plan.n_gpus = len(devs)
+    return plan
+
+
+def _provision_ffd_vec(prepared, hw: HardwareSpec) -> ProvisioningPlan:
+    """FFD++ through the batched scorer: Alg. 2 runs against every open
+    device in one call, first-fit picks the earliest feasible one."""
+    cl = pmv.VecCluster(hw)
+    for (s, c, b, rl) in prepared:
+        q_fit = -1
+        if cl.d:
+            feasible, rr, rn, _ = cl.alloc_all(s, c, b, rl)
+            fit = np.where(feasible)[0]
+            q_fit = int(fit[0]) if fit.size else -1
+        if q_fit == -1:
+            q = cl.add_device()
+            cl.add_entry(q, s, c, b, rl)
+        else:
+            cl.set_row_r(q_fit, rr[q_fit])
+            cl.add_entry(q_fit, s, c, b, float(rn[q_fit]))
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g in range(cl.d):
+        for i, (s, c, b) in enumerate(cl.entries[g]):
+            plan.placements.append(
+                Placement(workload=s, gpu=g, r=float(cl.r[g, i]), batch=b))
+    plan.n_gpus = cl.d
     return plan
 
 
@@ -183,25 +210,26 @@ def provision_gpulets(specs: Sequence[WorkloadSpec],
 
     # best-fit with at most 2 workloads per device; pairwise interference
     # check for the NEW workload only (the original is never re-checked).
+    # All candidate devices are scored through one batched-model call.
     devs: List[List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]] = []
     for (s, c, b, r) in prepared:
+        me = pm.PlacedWorkload(coeffs=c, batch=b, r=r)
+        cand = [i for i, entries in enumerate(devs)
+                if len(entries) < 2
+                and sum(e[3] for e in entries) + r <= R_MAX + 1e-9]
         best_i, best_left = -1, None
-        for i, entries in enumerate(devs):
-            if len(entries) >= 2:
-                continue
-            used = sum(e[3] for e in entries)
-            if used + r > R_MAX + 1e-9:
-                continue
-            # pairwise latency estimate for the newcomer
-            placed = [pm.PlacedWorkload(coeffs=e[1], batch=e[2], r=e[3])
-                      for e in entries]
-            me = pm.PlacedWorkload(coeffs=c, batch=b, r=r)
-            lat = pm.predict_workload(me, placed, hw).t_inf
-            if lat > s.slo_ms / 2.0:
-                continue
-            left = R_MAX - used - r
-            if best_left is None or left < best_left:
-                best_i, best_left = i, left
+        if cand:
+            batch_pred = pmv.predict_device_batch(
+                [[pm.PlacedWorkload(coeffs=e[1], batch=e[2], r=e[3])
+                  for e in devs[i]] + [me] for i in cand], hw)
+            for q, i in enumerate(cand):
+                # newcomer occupies the last slot of candidate device q
+                lat = float(batch_pred.t_inf[q, len(devs[i])])
+                if lat > s.slo_ms / 2.0:
+                    continue
+                left = R_MAX - sum(e[3] for e in devs[i]) - r
+                if best_left is None or left < best_left:
+                    best_i, best_left = i, left
         if best_i == -1:
             devs.append([(s, c, b, r)])
         else:

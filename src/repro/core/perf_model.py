@@ -13,8 +13,11 @@ Implements Eqs. (1)-(11) exactly:
   p_demand = p_idle + sum_i p_i                                         (10)
   k_act  = (k1 b^2 + k2 b + k3) / (r + k4) + k5                         (11)
 
-The module is pure Python/numpy over small lists — the provisioner calls
-it O(m^2) times, which the paper bounds at 4.61 s for m=1000.
+The module is pure Python over small lists and serves as the reference
+oracle.  The provisioner calls the model O(m^2) times, which the paper
+bounds at 4.61 s for m=1000 — that bound is met by the vectorized
+implementation in `repro.core.perf_model_vec` (the provisioner's default
+engine); `tests/test_perf_model_vec.py` pins the two to <= 1e-9.
 """
 from __future__ import annotations
 

@@ -4,6 +4,17 @@ Implements Theorem 1 (appropriate batch size b_appr, Eq. 17; resource
 lower bound r_lower, Eq. 18), Algorithm 2 (`alloc_gpus`) and Algorithm 1
 (`provision`) faithfully, including the ANYFIT new-device rule and the
 greedy minimum-interference device selection.
+
+Two interchangeable engines drive the algorithms:
+
+  * ``engine="vec"`` (default): the vectorized/batched performance model
+    from `repro.core.perf_model_vec` — Alg. 2 scores ALL open devices in
+    one call per placement with incrementally cached device invariants.
+    This is the path that meets the paper's m=1000-in-seconds bound
+    (Sec. 5.4); `benchmarks/scale_sweep.py` tracks it.
+  * ``engine="scalar"``: the original pure-Python reference, kept as the
+    cross-check oracle (`tests/test_perf_model_vec.py` asserts both
+    engines emit identical plans).
 """
 from __future__ import annotations
 
@@ -11,7 +22,10 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import perf_model as pm
+from repro.core import perf_model_vec as pmv
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
 
@@ -117,19 +131,36 @@ def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
 # Algorithm 1: iGniter provisioning
 # ---------------------------------------------------------------------------
 
-def provision(specs: Sequence[WorkloadSpec],
-              profiles: Dict[str, WorkloadCoefficients],
-              hw: HardwareSpec) -> ProvisioningPlan:
-    """Cost-efficient interference-aware provisioning (Alg. 1)."""
-    # line 2: b_appr, r_lower per workload
+def _prepare(specs: Sequence[WorkloadSpec],
+             profiles: Dict[str, WorkloadCoefficients],
+             hw: HardwareSpec
+             ) -> List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]:
+    """Alg. 1 lines 2-3: (b_appr, r_lower) per workload, sorted by
+    r_lower descending."""
     prepared = []
     for s in specs:
         c = profiles[s.model]
         b = appropriate_batch(s, c, hw)
         rl = resource_lower_bound(s, c, hw, b)
         prepared.append((s, c, b, rl))
-    # line 3: sort by r_lower descending
     prepared.sort(key=lambda t: -t[3])
+    return prepared
+
+
+def provision(specs: Sequence[WorkloadSpec],
+              profiles: Dict[str, WorkloadCoefficients],
+              hw: HardwareSpec, *, engine: str = "vec") -> ProvisioningPlan:
+    """Cost-efficient interference-aware provisioning (Alg. 1).
+
+    ``engine="vec"`` scores all open devices through the batched model in
+    one call per placement; ``engine="scalar"`` is the reference
+    per-device loop (identical output, kept as the oracle).
+    """
+    if engine == "vec":
+        return _provision_vec(specs, profiles, hw)
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
+    prepared = _prepare(specs, profiles, hw)
 
     devs: List[_Dev] = [_Dev()]
     for (s, c, b, rl) in prepared:
@@ -165,6 +196,45 @@ def provision(specs: Sequence[WorkloadSpec],
     return plan
 
 
+def _argmin_inter(r_inter: "np.ndarray") -> int:
+    """Alg. 1 line 8 fold: earliest device whose score is more than 1e-12
+    below every earlier candidate (replicates the scalar `<` fold)."""
+    best_q, best = -1, R_MAX + 1.0
+    for q, ri in enumerate(r_inter):
+        if ri < best - 1e-12:
+            best_q, best = q, float(ri)
+    return best_q
+
+
+def _provision_vec(specs: Sequence[WorkloadSpec],
+                   profiles: Dict[str, WorkloadCoefficients],
+                   hw: HardwareSpec) -> ProvisioningPlan:
+    """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
+    scores every open device per placement, and the chosen device's
+    invariants are refreshed incrementally."""
+    prepared = _prepare(specs, profiles, hw)
+
+    cl = pmv.VecCluster(hw)
+    cl.add_device()
+    for (s, c, b, rl) in prepared:
+        feasible, rr, rn, r_inter = cl.alloc_all(s, c, b, rl)
+        best_q = _argmin_inter(r_inter) if feasible.any() else -1
+        if best_q == -1:
+            q = cl.add_device()                                  # line 14
+            cl.add_entry(q, s, c, b, rl)
+        else:
+            cl.set_row_r(best_q, rr[best_q])
+            cl.add_entry(best_q, s, c, b, float(rn[best_q]))
+
+    plan = ProvisioningPlan(hardware=hw)
+    for g in range(cl.d):
+        for i, (s, c, b) in enumerate(cl.entries[g]):
+            plan.placements.append(
+                Placement(workload=s, gpu=g, r=float(cl.r[g, i]), batch=b))
+    plan.n_gpus = sum(1 for g in range(cl.d) if cl.entries[g])
+    return plan
+
+
 # ---------------------------------------------------------------------------
 # Online arrival (paper Sec. 4.2: iGniter is "periodically executed to
 # provision GPU resources for newly-arrived inference workloads").
@@ -174,10 +244,11 @@ def provision(specs: Sequence[WorkloadSpec],
 
 def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  profiles: Dict[str, WorkloadCoefficients],
-                 hw: HardwareSpec) -> ProvisioningPlan:
+                 hw: HardwareSpec, *, engine: str = "vec") -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
-    with Alg. 2 reallocation, or a fresh device."""
+    with Alg. 2 reallocation, or a fresh device.  The vec engine scores
+    every existing device in a single `alloc_all` call."""
     c = profiles[spec.model]
     b = appropriate_batch(spec, c, hw)
     rl = resource_lower_bound(spec, c, hw, b)
@@ -188,14 +259,31 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
             (p.workload, profiles[p.workload.model], p.batch, p.r))
 
     best_q, best_alloc, best_inter = -1, None, R_MAX + 1.0
-    for q, dev in sorted(devs.items()):
-        r_a = alloc_gpus(dev, spec, c, b, rl, hw)
-        if r_a is None:
-            continue
-        old = [e[3] for e in dev.entries] + [rl]
-        r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
-        if r_inter < best_inter - 1e-12:
-            best_q, best_alloc, best_inter = q, r_a, r_inter
+    if engine == "vec":
+        cl = pmv.VecCluster(hw)
+        gpu_ids = sorted(devs)
+        for g in gpu_ids:
+            q = cl.add_device()
+            for (s, cc, bb, r) in devs[g].entries:
+                cl.add_entry(q, s, cc, bb, r)
+        if gpu_ids:
+            feasible, rr, rn, r_inter = cl.alloc_all(spec, c, b, rl)
+            row = _argmin_inter(r_inter) if feasible.any() else -1
+            if row != -1:
+                best_q = gpu_ids[row]
+                k = int(cl.n[row])
+                best_alloc = [float(x) for x in rr[row, :k]] + [float(rn[row])]
+    elif engine == "scalar":
+        for q, dev in sorted(devs.items()):
+            r_a = alloc_gpus(dev, spec, c, b, rl, hw)
+            if r_a is None:
+                continue
+            old = [e[3] for e in dev.entries] + [rl]
+            r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
+            if r_inter < best_inter - 1e-12:
+                best_q, best_alloc, best_inter = q, r_a, r_inter
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
 
     new_plan = ProvisioningPlan(hardware=plan.hardware or hw)
     if best_q == -1:
@@ -222,14 +310,16 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
 def provision_cheapest(specs: Sequence[WorkloadSpec],
                        profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
-                       hardware: Sequence[HardwareSpec]
+                       hardware: Sequence[HardwareSpec], *,
+                       engine: str = "vec"
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
     """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
     errors = []
     for hw in hardware:
         try:
-            plan = provision(specs, profiles_by_hw[hw.name], hw)
+            plan = provision(specs, profiles_by_hw[hw.name], hw,
+                             engine=engine)
         except InfeasibleError as e:
             errors.append(str(e))
             continue
@@ -243,12 +333,27 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
 def predicted_plan_metrics(plan: ProvisioningPlan,
                            profiles: Dict[str, WorkloadCoefficients],
                            hw: HardwareSpec):
-    """Model-predicted latency/throughput for every placement in a plan."""
+    """Model-predicted latency/throughput for every placement in a plan
+    (all devices evaluated through the batched model in one call)."""
+    by_gpu = sorted(plan.by_gpu().items())
+    devices = [[pm.PlacedWorkload(coeffs=profiles[p.workload.model],
+                                  batch=p.batch, r=p.r) for p in pls]
+               for _, pls in by_gpu]
+    batch = pmv.predict_device_batch(devices, hw)
     out = {}
-    for g, pls in plan.by_gpu().items():
-        placed = [pm.PlacedWorkload(coeffs=profiles[p.workload.model],
-                                    batch=p.batch, r=p.r) for p in pls]
-        pred = pm.predict_device(placed, hw)
+    for q, (g, pls) in enumerate(by_gpu):
+        pred = batch.device(q)
         for p, wp in zip(pls, pred.per_workload):
             out[p.workload.name] = wp
     return out
+
+
+def predicted_violations(plan: ProvisioningPlan,
+                         profiles: Dict[str, WorkloadCoefficients],
+                         hw: HardwareSpec) -> List[str]:
+    """Workloads whose model-predicted t_inf exceeds their T_slo/2 budget
+    (Constraint 14 check used by the scale sweep)."""
+    metrics = predicted_plan_metrics(plan, profiles, hw)
+    sb = {p.workload.name: p.workload for p in plan.placements}
+    return [name for name, wp in metrics.items()
+            if wp.t_inf > sb[name].slo_ms / 2.0 + 1e-6]

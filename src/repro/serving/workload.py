@@ -47,6 +47,26 @@ def models() -> Dict[str, ServedModelDesc]:
     return serving_models()
 
 
+def synthetic_workloads(m: int, seed: int = 0) -> List[WorkloadSpec]:
+    """m synthetic workloads for the large-cluster scale sweep (paper
+    Sec. 5.4 claims Alg. 1 provisions m=1000 in 4.61 s).
+
+    Each workload is a jittered sample of an `APP_TABLE` row — SLO x
+    U[0.8, 1.6), rate x U[0.5, 1.5) — so the mix stays feasible on the
+    fitted profiles while exercising heterogeneous SLO/rate pressure.
+    """
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(m):
+        model, slo, rate = APP_TABLE[int(rng.integers(len(APP_TABLE)))]
+        out.append(WorkloadSpec(
+            name=f"S{i}", model=model,
+            slo_ms=round(float(slo * rng.uniform(0.8, 1.6)), 1),
+            rate_rps=round(float(rate * rng.uniform(0.5, 1.5)), 1)))
+    return out
+
+
 # The illustrative 3-workload example of paper Sec. 2.3 (Table 1).
 def three_workloads() -> List[WorkloadSpec]:
     return [

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ASSIGNED, REGISTRY, reduced
 from repro.models.zoo import build_model
 
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
+
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_forward_and_train_step(arch):

@@ -10,6 +10,9 @@ from repro.data.pipeline import DocumentSource, PackedBatcher, make_pipeline
 from repro.training import checkpoint as ckpt
 from repro.training.loop import train
 from repro.training.optimizer import AdamW
+import pytest
+
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
 
 
 def test_packing_shapes_and_labels():

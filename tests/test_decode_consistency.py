@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ASSIGNED, REGISTRY, reduced
 from repro.models.zoo import build_model
 
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
+
 
 def _full_logits(model, cfg, params, batch, pos):
     hidden, _ = model.forward(params, batch)

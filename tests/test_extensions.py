@@ -8,6 +8,8 @@ import pytest
 from repro.training.optimizer import (AdamW, QuantState, _dequantize,
                                       _quantize, choose_block, quantizable)
 
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
+
 
 def test_quant_roundtrip_error_bounded():
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 3.0

@@ -11,6 +11,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels.ssd_scan import ssd_scan
 
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

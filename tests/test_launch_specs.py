@@ -8,6 +8,8 @@ from repro.configs import ASSIGNED
 from repro.launch.shapes import SHAPES, applicable
 from repro.launch.steps import input_specs
 
+pytestmark = pytest.mark.jax  # full CI tier only
+
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 @pytest.mark.parametrize("shape", list(SHAPES))

@@ -1,7 +1,11 @@
 """Provisioning strategy invariants (Alg. 1 / Alg. 2) — unit + hypothesis."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # bare env: property tests skip, unit tests run
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core import baselines as B
 from repro.core import perf_model as pm

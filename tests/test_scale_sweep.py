@@ -1,0 +1,88 @@
+"""Large-cluster scale sweep: synthetic workload generation, sampled
+device simulation, and the benchmarks.scale_sweep entry point."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core.experiments import fitted_context
+from repro.serving.simulator import simulate_device_sample, subplan
+from repro.serving.workload import models, synthetic_workloads
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _hetero():
+    ctx5 = fitted_context("tpu-v5e")
+    ctx4 = fitted_context("tpu-v4")
+    return ({ctx5.hw.name: ctx5.profiles, ctx4.hw.name: ctx4.profiles},
+            [ctx5.hw, ctx4.hw])
+
+
+def test_synthetic_workloads_deterministic_and_valid():
+    a = synthetic_workloads(50, seed=7)
+    b = synthetic_workloads(50, seed=7)
+    assert [(w.name, w.model, w.slo_ms, w.rate_rps) for w in a] \
+        == [(w.name, w.model, w.slo_ms, w.rate_rps) for w in b]
+    assert len({w.name for w in a}) == 50
+    mods = models()
+    for w in a:
+        assert w.model in mods
+        assert w.slo_ms > 0 and w.rate_rps > 0
+    # a different seed gives a different mix
+    c = synthetic_workloads(50, seed=8)
+    assert [(w.model, w.slo_ms) for w in a] != [(w.model, w.slo_ms) for w in c]
+
+
+def test_provision_cheapest_synthetic_scale():
+    profiles_by_hw, hardware = _hetero()
+    specs = synthetic_workloads(40, seed=0)
+    plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+    assert len(plan.placements) == 40
+    assert plan.n_gpus >= 1
+    for g in {p.gpu for p in plan.placements}:
+        assert plan.total_allocated(g) <= 1.0 + 1e-9
+    # vec and scalar engines agree end-to-end through the hetero selector
+    oracle, hw_o = prov.provision_cheapest(specs, profiles_by_hw, hardware,
+                                           engine="scalar")
+    assert hw_o.name == hw.name
+    assert [(p.workload.name, p.gpu, round(p.r, 9)) for p in oracle.placements] \
+        == [(p.workload.name, p.gpu, round(p.r, 9)) for p in plan.placements]
+
+
+def test_subplan_and_device_sample():
+    profiles_by_hw, hardware = _hetero()
+    specs = synthetic_workloads(25, seed=1)
+    plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+    gpus = sorted({p.gpu for p in plan.placements})
+    sub = subplan(plan, gpus[:2])
+    assert {p.gpu for p in sub.placements} <= set(gpus[:2])
+    assert sub.n_gpus == len({p.gpu for p in sub.placements})
+
+    res, sampled = simulate_device_sample(plan, models(), hw,
+                                          max_devices=3, duration_s=2.0)
+    assert len(sampled) <= 3
+    hosted = {p.workload.name for p in plan.placements if p.gpu in set(sampled)}
+    assert set(res.per_workload) == hosted
+    for m in res.per_workload.values():
+        assert m["rps"] > 0
+        assert np.isfinite(m["p99_ms"])
+
+
+def test_scale_sweep_quick_rows(tmp_path):
+    from benchmarks import scale_sweep
+    rows = scale_sweep.sweep((10,), sim_duration_s=1.0)
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["m"] == 10
+    assert row["wall_s"] >= 0
+    assert row["n_devices"] >= 1
+    assert row["matches_scalar_oracle"] is True
+    assert "predicted_violations" in row and "sim_violations" in row
+
+    out = tmp_path / "results.json"
+    status = scale_sweep.main(["--sizes", "10", "--out", str(out)])
+    assert status == 0
+    assert out.exists()

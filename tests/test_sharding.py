@@ -9,6 +9,8 @@ from repro.distributed import sharding as sh
 from repro.models import transformer as T
 from repro.profiling import hlo_analysis as H
 
+pytestmark = [pytest.mark.jax, pytest.mark.slow]  # full CI tier only
+
 
 @pytest.fixture(scope="module")
 def mesh():
