@@ -127,6 +127,21 @@ def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
     return r_a
 
 
+def self_grant(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
+               batch: int, r_lower: float, hw: HardwareSpec) -> float:
+    """Alg. 2 run for a workload opening a FRESH device (beyond-paper fix,
+    see ROADMAP): Theorem 1's Eq. (18) drops the f/F throttling factor,
+    so a solo anchor at r_lower can exceed T_slo/2 once its power demand
+    crosses the cap.  Grant +r_unit until the model predicts t_inf <=
+    T_slo/2 — exactly what `alloc_gpus` already does for the FIRST
+    workload (devs[0] starts empty), now applied to line-14 devices too.
+    Falls back to the full device when even r=1 cannot meet the budget
+    (the residual is then reported honestly by `predicted_violations`).
+    """
+    r_a = alloc_gpus(_Dev(), spec, coeffs, batch, r_lower, hw)
+    return r_a[-1] if r_a is not None else R_MAX
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1: iGniter provisioning
 # ---------------------------------------------------------------------------
@@ -179,7 +194,8 @@ def provision(specs: Sequence[WorkloadSpec],
                 best_q = q
                 best_alloc = r_a
         if best_q == -1:
-            devs.append(_Dev(entries=[(s, c, b, rl)]))     # line 14
+            devs.append(_Dev(                              # line 14
+                entries=[(s, c, b, self_grant(s, c, b, rl, hw))]))
         else:
             dev = devs[best_q]
             new_entries = []
@@ -221,7 +237,7 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
         best_q = _argmin_inter(r_inter) if feasible.any() else -1
         if best_q == -1:
             q = cl.add_device()                                  # line 14
-            cl.add_entry(q, s, c, b, rl)
+            cl.add_entry(q, s, c, b, self_grant(s, c, b, rl, hw))
         else:
             cl.set_row_r(best_q, rr[best_q])
             cl.add_entry(best_q, s, c, b, float(rn[best_q]))
@@ -289,7 +305,8 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     if best_q == -1:
         g_new = (max(devs) + 1) if devs else 0
         new_plan.placements = list(plan.placements) + [
-            Placement(workload=spec, gpu=g_new, r=rl, batch=b)]
+            Placement(workload=spec, gpu=g_new,
+                      r=self_grant(spec, c, b, rl, hw), batch=b)]
     else:
         for p in plan.placements:
             if p.gpu != best_q:

@@ -1,6 +1,6 @@
 """Discrete-event GPU-cluster serving simulator (ground truth).
 
-Two roles:
+Three roles:
 
 1. **ProfilingTestbed** (`SimTestbed`): what Nsight Systems/Compute +
    nvidia-smi provide on hardware — solo and co-located steady-state runs
@@ -12,12 +12,39 @@ Two roles:
    greedy dynamic batching up to the configured batch size, spatial
    co-location physics from `repro.serving.physics`, per-request latency
    records (P99), the GSLICE-style reactive controller hook, and the
-   iGniter shadow-instance failover (Sec. 4.2).
+   iGniter shadow-instance failover (Sec. 4.2).  Two engines:
+
+   * ``engine="vec"`` (default): devices are independent, and between
+     monitor/adjust epochs a device's co-location state is static, so
+     each instance's pass latency over effective batch nb in [1, b] is
+     precomputed in ONE `physics.device_state_batch` call and the event
+     loop runs per device as a pass recurrence over pre-generated
+     arrival arrays — no global million-entry heap, no per-event
+     physics call.  Noise is applied as sampled multipliers on the
+     cached base values.  Tables are invalidated on shadow activation
+     and after every `adjust_fn` call, so GSLICE/shadow scenarios stay
+     exact.
+   * ``engine="scalar"``: the original global-heap event loop, kept as
+     the oracle — same seed => byte-identical per-request latency
+     streams and SimResult metrics (`tests/test_sim_equivalence.py`).
+
+   Both engines draw from per-instance RNG streams
+   (``default_rng([seed, i, k])``: k=0 arrivals, k=1 active-time noise,
+   k=2 dispatch noise) so no draw depends on cross-device event
+   interleaving — that is what makes the per-device loop exact.
+
+3. **Full-cluster validation** (`simulate_full`): every device of an
+   m=1000-scale plan simulated at ground truth with events/sec
+   throughput reported in `SimResult.stats` — tracked per PR by
+   `benchmarks/scale_sweep.py` next to the model-predicted violations.
 """
 from __future__ import annotations
 
 import heapq
 import math
+import time as _time
+from bisect import bisect_right
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -27,6 +54,8 @@ from repro.core.coefficients import ProfileSample
 from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
 from repro.profiling.metrics import ServedModelDesc
 from repro.serving import physics
+
+MONITOR_WINDOW_MS = 1000.0       # P99 monitor lookback (1 s, paper Sec. 4.2)
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +127,8 @@ class ServedInstance:
 class SimResult:
     per_workload: Dict[str, Dict[str, float]]
     timeline: List[Dict] = field(default_factory=list)
+    request_latencies: Dict[str, np.ndarray] = field(default_factory=dict)
+    stats: Dict[str, float] = field(default_factory=dict)
 
     def violations(self, specs: Dict[str, WorkloadSpec]) -> List[str]:
         out = []
@@ -109,38 +140,157 @@ class SimResult:
 
 
 AdjustFn = Callable[[float, List[ServedInstance]], None]
-# called every `adjust_period` sim-seconds with (now, instances)
+# Called every `adjust_period` sim-seconds with (now, instances).  The
+# scalar engine passes ALL instances; the vec engine calls it once per
+# device with that device's instances — for the engines to agree the
+# callback must act on each instance independently (GSLICE-style).  It
+# may mutate r / batch / shadow_r (latency tables are rebuilt); queue,
+# latencies, busy_until and completed are synced read-only views.
 
 
-def simulate_plan(plan: ProvisioningPlan,
-                  models: Dict[str, ServedModelDesc],
-                  hw: HardwareSpec, *,
-                  duration_s: float = 30.0,
-                  seed: int = 0,
-                  poisson: bool = False,
-                  shadow: bool = False,
-                  shadow_extra: float = 0.10,
-                  monitor_period_s: float = 0.5,
-                  adjust_fn: Optional[AdjustFn] = None,
-                  adjust_period_s: float = 1.0,
-                  record_timeline: bool = False) -> SimResult:
-    """Run the serving cluster for `duration_s` simulated seconds."""
-    rng = np.random.default_rng(seed)
+# ---------------------------------------------------------------------------
+# Shared helpers (both engines): arrivals, noise, setup, read-out.  These
+# being shared is what pins scalar and vec to identical RNG streams.
+# ---------------------------------------------------------------------------
+
+def _gen_arrivals(rate_rps: float, horizon_ms: float, poisson: bool,
+                  rng: np.random.Generator) -> np.ndarray:
+    """All arrival times in [0, horizon) for one instance, pre-generated
+    with vectorized RNG.  The stream depends only on (seed, instance)."""
+    period = 1000.0 / rate_rps
+    t0 = float(rng.uniform(0, period))
+    if t0 >= horizon_ms:
+        return np.empty(0)
+    if not poisson:
+        n = int(math.ceil((horizon_ms - t0) / period))
+        ts = t0 + period * np.arange(n + 1)
+        return ts[ts < horizon_ms]
+    chunks = [np.array([t0])]
+    last = t0
+    est = max(16, int((horizon_ms - t0) / period * 1.2))
+    while last < horizon_ms:
+        gaps = rng.exponential(period, size=est)
+        ts = last + np.cumsum(gaps)
+        chunks.append(ts)
+        last = float(ts[-1])
+        est = max(16, est // 4)
+    arr = np.concatenate(chunks)
+    return arr[arr < horizon_ms]
+
+
+class _NoiseStream:
+    """Chunk-buffered lognormal multipliers.  Both engines consume the
+    same stream through the same chunking, so values match bitwise."""
+    __slots__ = ("rng", "sigma", "buf", "k")
+    CHUNK = 512
+
+    def __init__(self, rng: np.random.Generator, sigma: float):
+        self.rng = rng
+        self.sigma = sigma
+        self.buf: List[float] = []
+        self.k = 0
+
+    def next(self) -> float:
+        if self.k >= len(self.buf):
+            self.buf = self.rng.lognormal(0.0, self.sigma, self.CHUNK).tolist()
+            self.k = 0
+        v = self.buf[self.k]
+        self.k += 1
+        return v
+
+
+def _noisy_t_inf(t_load: float, t_sch: float, t_act: float, t_fb: float,
+                 slow: float, na: float, ns: float) -> float:
+    """One serving pass latency from noise-free base values + sampled
+    multipliers (na on active time, ns on dispatch)."""
+    return t_load + (t_sch * ns + t_act * na) / slow + t_fb
+
+
+def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
+           shadow: bool, shadow_extra: float, horizon_ms: float,
+           poisson: bool, seed: int):
+    """Instances, device grouping, per-instance arrival arrays and noise
+    streams — identical for both engines."""
     instances: List[ServedInstance] = []
     for p in plan.placements:
         instances.append(ServedInstance(
             spec=p.workload, desc=models[p.workload.model], r=p.r,
             batch=max(1, p.batch), gpu=p.gpu))
-    by_gpu: Dict[int, List[ServedInstance]] = {}
-    for inst in instances:
-        by_gpu.setdefault(inst.gpu, []).append(inst)
+    by_gpu: Dict[int, List[int]] = {}
+    for i, inst in enumerate(instances):
+        by_gpu.setdefault(inst.gpu, []).append(i)
 
     if shadow:
         for inst in instances:
-            used = sum(i.r for i in by_gpu[inst.gpu])
+            used = sum(instances[k].r for k in by_gpu[inst.gpu])
             inst.shadow_r = min(shadow_extra, max(0.0, 1.0 - used))
 
+    arrivals = [_gen_arrivals(inst.spec.rate_rps, horizon_ms, poisson,
+                              np.random.default_rng([seed, i, 0]))
+                for i, inst in enumerate(instances)]
+    noise_a = [_NoiseStream(np.random.default_rng([seed, i, 1]),
+                            physics.NOISE_SIGMA)
+               for i in range(len(instances))]
+    noise_s = [_NoiseStream(np.random.default_rng([seed, i, 2]),
+                            2 * physics.NOISE_SIGMA)
+               for i in range(len(instances))]
+    return instances, by_gpu, arrivals, noise_a, noise_s
+
+
+def _epoch_times(horizon_ms: float, monitor_period_s: float,
+                 adjust_fn: Optional[AdjustFn], adjust_period_s: float
+                 ) -> Tuple[List[float], List[float]]:
+    mon = [float(t) for t in np.arange(monitor_period_s * 1000.0, horizon_ms,
+                                       monitor_period_s * 1000.0)]
+    adj = []
+    if adjust_fn is not None:
+        adj = [float(t) for t in np.arange(adjust_period_s * 1000.0,
+                                           horizon_ms,
+                                           adjust_period_s * 1000.0)]
+    return mon, adj
+
+
+def _stats(n_requests: int, n_passes: int, peak_window: int,
+           wall0: float) -> Dict[str, float]:
+    wall = _time.perf_counter() - wall0
+    return {"n_requests": n_requests, "n_passes": n_passes,
+            "n_events": n_requests + n_passes, "wall_s": wall,
+            "events_per_s": (n_requests + n_passes) / max(wall, 1e-9),
+            "peak_window": peak_window}
+
+
+def _finalize(instances: List[ServedInstance], duration_s: float,
+              timeline: List[Dict], stats: Dict[str, float]) -> SimResult:
+    per = {}
+    req = {}
+    for inst in instances:
+        lats = np.array(inst.latencies) if inst.latencies else np.array([np.inf])
+        per[inst.spec.name] = {
+            "p99_ms": float(np.percentile(lats, 99)),
+            "p50_ms": float(np.percentile(lats, 50)),
+            "avg_ms": float(np.mean(lats)),
+            "rps": inst.completed / duration_s,
+            "r_final": inst.r_eff,
+            "batch_final": inst.batch,
+            "shadow_used": inst.shadow_active,
+        }
+        req[inst.spec.name] = np.asarray(inst.latencies)
+    return SimResult(per_workload=per, timeline=timeline,
+                     request_latencies=req, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Scalar oracle engine: one global event heap, one physics call per pass.
+# ---------------------------------------------------------------------------
+
+def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
+                     shadow_extra, monitor_period_s, adjust_fn,
+                     adjust_period_s, record_timeline) -> SimResult:
+    wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0                      # ms
+    instances, by_gpu, arrivals, noise_a, noise_s = _setup(
+        plan, models, shadow, shadow_extra, horizon, poisson, seed)
+
     events: List[Tuple[float, int, str, int]] = []     # (t, seq, kind, idx)
     seq = 0
 
@@ -149,45 +299,51 @@ def simulate_plan(plan: ProvisioningPlan,
         heapq.heappush(events, (t, seq, kind, idx))
         seq += 1
 
-    # request arrivals
-    for i, inst in enumerate(instances):
-        period = 1000.0 / inst.spec.rate_rps
-        t = float(rng.uniform(0, period))
-        while t < horizon:
+    for i, arr in enumerate(arrivals):
+        for t in arr.tolist():
             push(t, "arrival", i)
-            t += float(rng.exponential(period)) if poisson else period
-
-    for t in np.arange(monitor_period_s * 1000.0, horizon,
-                       monitor_period_s * 1000.0):
-        push(float(t), "monitor", -1)
-    if adjust_fn is not None:
-        for t in np.arange(adjust_period_s * 1000.0, horizon,
-                           adjust_period_s * 1000.0):
-            push(float(t), "adjust", -1)
+    mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
+                            adjust_period_s)
+    for t in mon:
+        push(t, "monitor", -1)
+    for t in adj:
+        push(t, "adjust", -1)
 
     timeline: List[Dict] = []
-    recent: Dict[int, List[Tuple[float, float]]] = {i: [] for i in range(len(instances))}
+    # last-window latencies, pruned each monitor tick (bounded deque, NOT
+    # an ever-growing list): (done_time, latency) per request
+    recent: List[deque] = [deque() for _ in instances]
+    n_passes = 0
+    peak_window = 0
 
     def pass_latency(inst: ServedInstance, nb: int) -> physics.TrueState:
-        peers = [(i.desc, i.batch, i.r_eff) for i in by_gpu[inst.gpu]
-                 if i is not inst]
-        entries = [(inst.desc, nb, inst.r_eff)] + peers
-        return physics.device_state(entries, hw, rng)[0]
+        peers = [instances[k] for k in by_gpu[inst.gpu]
+                 if instances[k] is not inst]
+        entries = [(inst.desc, nb, inst.r_eff)] + \
+            [(p.desc, p.batch, p.r_eff) for p in peers]
+        return physics.device_state(entries, hw)[0]
 
     def try_serve(i: int, now: float):
+        nonlocal n_passes
         inst = instances[i]
-        if not inst.queue or inst.busy_until > now + 1e-12:
+        if not inst.queue or inst.busy_until > now:
             return
         nb = min(inst.batch, len(inst.queue))
         taken, inst.queue = inst.queue[:nb], inst.queue[nb:]
         st = pass_latency(inst, nb)
-        done = now + st.t_inf
+        slow = st.freq / hw.max_freq
+        na = noise_a[i].next()
+        ns = noise_s[i].next()
+        t_inf = _noisy_t_inf(st.t_load, st.t_sched, st.t_act, st.t_feedback,
+                             slow, na, ns)
+        done = now + t_inf
         inst.busy_until = done
         for arr in taken:
             lat = done - arr
             inst.latencies.append(lat)
             recent[i].append((done, lat))
         inst.completed += nb
+        n_passes += 1
         push(done, "done", i)
 
     while events:
@@ -198,10 +354,14 @@ def simulate_plan(plan: ProvisioningPlan,
         elif kind == "done":
             try_serve(idx, now)
         elif kind == "monitor":
+            cutoff = now - MONITOR_WINDOW_MS
             for i, inst in enumerate(instances):
-                window = [l for (t, l) in recent[i] if t > now - 1000.0]
+                dq = recent[i]
+                while dq and dq[0][0] <= cutoff:
+                    dq.popleft()
+                window = [l for (_, l) in dq]
+                peak_window = max(peak_window, len(window))
                 if record_timeline:
-                    st = pass_latency(inst, inst.batch)
                     timeline.append({
                         "t_s": now / 1000.0, "workload": inst.spec.name,
                         "p99_1s": float(np.percentile(window, 99)) if window else 0.0,
@@ -217,19 +377,240 @@ def simulate_plan(plan: ProvisioningPlan,
         elif kind == "adjust" and adjust_fn is not None:
             adjust_fn(now / 1000.0, instances)
 
-    per = {}
-    for inst in instances:
-        lats = np.array(inst.latencies) if inst.latencies else np.array([np.inf])
-        per[inst.spec.name] = {
-            "p99_ms": float(np.percentile(lats, 99)),
-            "p50_ms": float(np.percentile(lats, 50)),
-            "avg_ms": float(np.mean(lats)),
-            "rps": inst.completed / duration_s,
-            "r_final": inst.r_eff,
-            "batch_final": inst.batch,
-            "shadow_used": inst.shadow_active,
-        }
-    return SimResult(per_workload=per, timeline=timeline)
+    stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
+                   wall0)
+    return _finalize(instances, duration_s, timeline, stats)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine: per-device pass recurrence over cached latency tables.
+# ---------------------------------------------------------------------------
+
+class _LatTable:
+    """Per-instance pass-latency base values over effective batch
+    nb in [1, b], from ONE `device_state_batch` call.  Valid while the
+    device's co-location state (peer batch/r_eff, own r_eff/batch cap)
+    is unchanged — i.e. between shadow activations / adjust_fn calls."""
+    __slots__ = ("t_load", "t_sch", "t_act", "t_fb", "slow")
+
+    def __init__(self, inst: ServedInstance, peers: List[ServedInstance],
+                 hw: HardwareSpec):
+        descs = [inst.desc] + [p.desc for p in peers]
+        bmax = max(1, inst.batch)
+        n = len(descs)
+        b = np.empty((bmax, n))
+        r = np.empty((bmax, n))
+        b[:, 0] = np.arange(1, bmax + 1)
+        r[:, 0] = inst.r_eff
+        for j, p in enumerate(peers):
+            b[:, j + 1] = p.batch
+            r[:, j + 1] = p.r_eff
+        st = physics.device_state_batch(descs, b, r, hw)
+        self.t_load = st.t_load[:, 0].tolist()
+        self.t_sch = st.t_sched[:, 0].tolist()
+        self.t_act = st.t_act[:, 0].tolist()
+        self.t_fb = st.t_feedback[:, 0].tolist()
+        self.slow = (st.freq / hw.max_freq).tolist()
+
+
+def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
+                  shadow_extra, monitor_period_s, adjust_fn,
+                  adjust_period_s, record_timeline) -> SimResult:
+    wall0 = _time.perf_counter()
+    horizon = duration_s * 1000.0
+    instances, by_gpu, arrivals, noise_a, noise_s = _setup(
+        plan, models, shadow, shadow_extra, horizon, poisson, seed)
+    n_inst = len(instances)
+
+    mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
+                            adjust_period_s)
+    mon_set, adj_set = set(mon), set(adj)
+    epochs = [(t, t in mon_set, t in adj_set) for t in sorted(mon_set | adj_set)]
+    epochs.append((math.inf, False, False))            # final drain
+
+    arr_np = arrivals
+    arr_l = [a.tolist() for a in arrivals]
+    jptr = [0] * n_inst            # next unserved arrival index
+    busy = [0.0] * n_inst
+    completed = [0] * n_inst
+    done_flat: List[List[float]] = [[] for _ in range(n_inst)]
+    wptr = [0] * n_inst            # monitor-window start in done_flat
+    n_passes = 0
+    peak_window = 0
+    rows: List[Tuple[float, int, Dict]] = []           # timeline, sortable
+
+    def run_passes(i: int, T: float) -> None:
+        """Advance instance i's pass recurrence up to epoch boundary T.
+
+        Replicates the oracle's event ordering: an arrival exactly at T
+        is processed before the boundary (arrival events sort before
+        monitor/adjust), a chained serve exactly at T after it.
+        """
+        nonlocal n_passes
+        arr = arr_l[i]
+        n_arr = len(arr)
+        jj = jptr[i]
+        if jj >= n_arr:
+            return
+        bu = busy[i]
+        bcap = instances[i].batch
+        tab = tables[i]
+        t_load_t, t_sch_t, t_act_t, t_fb_t, slow_t = (
+            tab.t_load, tab.t_sch, tab.t_act, tab.t_fb, tab.slow)
+        na_s, ns_s = noise_a[i], noise_s[i]
+        lats = instances[i].latencies
+        dones = done_flat[i]
+        anp = arr_np[i]
+        while jj < n_arr:
+            a = arr[jj]
+            if bu > a:                 # chained serve at pass completion
+                start = bu
+                if start >= T:
+                    break
+            else:                      # idle: next arrival triggers
+                start = a
+                if start > T:
+                    break
+            nb = bisect_right(arr, start, jj) - jj
+            if nb > bcap:
+                nb = bcap
+            k = nb - 1
+            na = na_s.next()
+            ns = ns_s.next()
+            t_inf = _noisy_t_inf(t_load_t[k], t_sch_t[k], t_act_t[k],
+                                 t_fb_t[k], slow_t[k], na, ns)
+            done = start + t_inf
+            lats.extend((done - anp[jj:jj + nb]).tolist())
+            dones.extend([done] * nb)
+            jj += nb
+            bu = done
+            n_passes += 1
+        jptr[i] = jj
+        busy[i] = bu
+        completed[i] = jj             # all served so far
+
+    for g in sorted(by_gpu):
+        idxs = by_gpu[g]
+        tables: Dict[int, _LatTable] = {}
+
+        def rebuild():
+            for i in idxs:
+                peers = [instances[k] for k in idxs if k != i]
+                tables[i] = _LatTable(instances[i], peers, hw)
+
+        rebuild()
+        for (T, is_mon, is_adj) in epochs:
+            for i in idxs:
+                run_passes(i, T)
+            dirty = False
+            if is_mon:
+                cutoff = T - MONITOR_WINDOW_MS
+                for i in idxs:
+                    inst = instances[i]
+                    dn = done_flat[i]
+                    w = wptr[i]
+                    end = len(dn)
+                    while w < end and dn[w] <= cutoff:
+                        w += 1
+                    wptr[i] = w
+                    peak_window = max(peak_window, end - w)
+                    if not record_timeline and not shadow:
+                        continue           # window list only needed below
+                    window = inst.latencies[w:]
+                    if record_timeline:
+                        rows.append((T, i, {
+                            "t_s": T / 1000.0, "workload": inst.spec.name,
+                            "p99_1s": float(np.percentile(window, 99)) if window else 0.0,
+                            "avg_1s": float(np.mean(window)) if window else 0.0,
+                            "r": inst.r_eff, "batch": inst.batch,
+                            "rps_1s": len(window) / 1.0,
+                            "shadow": inst.shadow_active,
+                        }))
+                    if shadow and window and not inst.shadow_active:
+                        if float(np.percentile(window, 99)) > inst.spec.slo_ms:
+                            inst.shadow_active = True
+                            dirty = True
+            if is_adj and adjust_fn is not None:
+                for i in idxs:
+                    inst = instances[i]
+                    inst.busy_until = busy[i]
+                    inst.completed = completed[i]
+                    al = arr_l[i]
+                    inst.queue = al[jptr[i]:bisect_right(al, T, jptr[i])]
+                adjust_fn(T / 1000.0, [instances[i] for i in idxs])
+                dirty = True           # r/batch/shadow_r may have changed
+            if dirty:
+                rebuild()
+
+    for i, inst in enumerate(instances):
+        inst.completed = completed[i]
+        inst.busy_until = busy[i]
+        inst.queue = []
+    rows.sort(key=lambda x: (x[0], x[1]))
+    timeline = [row for (_, _, row) in rows]
+
+    stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
+                   wall0)
+    return _finalize(instances, duration_s, timeline, stats)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def simulate_plan(plan: ProvisioningPlan,
+                  models: Dict[str, ServedModelDesc],
+                  hw: HardwareSpec, *,
+                  duration_s: float = 30.0,
+                  seed: int = 0,
+                  poisson: bool = False,
+                  shadow: bool = False,
+                  shadow_extra: float = 0.10,
+                  monitor_period_s: float = 0.5,
+                  adjust_fn: Optional[AdjustFn] = None,
+                  adjust_period_s: float = 1.0,
+                  record_timeline: bool = False,
+                  engine: str = "vec") -> SimResult:
+    """Run the serving cluster for `duration_s` simulated seconds.
+
+    ``engine="vec"`` (default) runs the table-cached per-device loop;
+    ``engine="scalar"`` the reference global-heap loop.  Same seed =>
+    byte-identical per-request latency streams across engines.
+
+    `adjust_fn` contract under the default engine: it is called once
+    PER DEVICE with that device's instances (devices are processed one
+    after another over the whole horizon), so the callback must act on
+    each instance independently and treat queue/latencies/busy_until/
+    completed as read-only views — only r, batch and shadow_r mutations
+    take effect.  A cluster-global or queue-mutating controller needs
+    ``engine="scalar"``, which calls it once per period with ALL
+    instances and live state.
+    """
+    kwargs = dict(duration_s=duration_s, seed=seed, poisson=poisson,
+                  shadow=shadow, shadow_extra=shadow_extra,
+                  monitor_period_s=monitor_period_s, adjust_fn=adjust_fn,
+                  adjust_period_s=adjust_period_s,
+                  record_timeline=record_timeline)
+    if engine == "vec":
+        return _simulate_vec(plan, models, hw, **kwargs)
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _simulate_scalar(plan, models, hw, **kwargs)
+
+
+def simulate_full(plan: ProvisioningPlan,
+                  models: Dict[str, ServedModelDesc],
+                  hw: HardwareSpec, *,
+                  duration_s: float = 10.0,
+                  seed: int = 0,
+                  **kwargs) -> SimResult:
+    """Full-cluster ground-truth simulation: EVERY device of the plan
+    (m=1000 => ~461 devices), vectorized engine.  `SimResult.stats`
+    carries n_requests / n_passes / events_per_s for the scale sweep —
+    this is the closed loop that turns `predicted_violations` into a
+    comparison against simulated ground truth."""
+    return simulate_plan(plan, models, hw, duration_s=duration_s, seed=seed,
+                         **kwargs)
 
 
 def subplan(plan: ProvisioningPlan, device_ids: Sequence[int]
@@ -238,9 +619,10 @@ def subplan(plan: ProvisioningPlan, device_ids: Sequence[int]
 
     Devices are independent in the simulator (co-location physics only
     couples workloads on the SAME device), so simulating a subset is a
-    faithful sample of the full cluster for the workloads it hosts (up
-    to the shared RNG stream) — that is what makes spot-checking an
-    m=1000 plan tractable.
+    faithful sample of the full cluster for the workloads it hosts —
+    and with per-instance RNG streams keyed by the instance's position
+    in the (sub)plan, what made spot-checking tractable before
+    `simulate_full` existed.
     """
     keep = set(int(g) for g in device_ids)
     out = ProvisioningPlan(hardware=plan.hardware)
@@ -256,13 +638,10 @@ def simulate_device_sample(plan: ProvisioningPlan,
                            duration_s: float = 10.0,
                            seed: int = 0,
                            **kwargs) -> Tuple[SimResult, List[int]]:
-    """Large-cluster scenario: simulate a uniform sample of devices from a
-    (possibly m=1000-scale) plan and return (result, sampled device ids).
-
-    A full discrete-event run of 1000 workloads x tens of seconds is
-    millions of events; a sampled run bounds the cost while remaining a
-    faithful per-device sample (see `subplan`).
-    """
+    """Simulate a uniform sample of devices from a large plan and return
+    (result, sampled device ids).  Superseded by `simulate_full` for CI
+    validation (the vec engine makes the full cluster affordable); kept
+    for quick spot checks and as API surface for notebooks."""
     rng = np.random.default_rng(seed)
     gpus = sorted({p.gpu for p in plan.placements})
     if len(gpus) > max_devices:

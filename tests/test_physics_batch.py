@@ -1,0 +1,106 @@
+"""Batched ground-truth physics: `device_state_batch` vs the scalar
+`device_state` wrapper (which is a thin shim over it — agreement must be
+bitwise, well inside the <= 1e-9 contract)."""
+import numpy as np
+import pytest
+
+from repro.core.types import V4, V5E
+from repro.serving import physics
+from repro.serving.workload import models
+
+
+@pytest.fixture(scope="module")
+def descs():
+    return list(models().values())
+
+
+def test_solo_terms_returns_seven(descs):
+    out = physics.solo_terms(descs[0], 8, 0.4, V5E)
+    assert len(out) == 7
+    t_load, k_disp, t_c, t_m, p, cache, t_fb = out
+    assert all(isinstance(v, float) for v in out)
+    assert t_load > 0 and t_fb > 0 and p > 0
+
+
+@pytest.mark.parametrize("hw", [V5E, V4], ids=lambda h: h.name)
+def test_batch_matches_wrapper_randomized(descs, hw):
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n = int(rng.integers(1, 6))
+        entries = [(descs[int(rng.integers(len(descs)))],
+                    int(rng.integers(1, 33)),
+                    float(rng.uniform(0.05, 0.8))) for _ in range(n)]
+        b = np.array([float(e[1]) for e in entries])
+        r = np.array([e[2] for e in entries])
+        st = physics.device_state_batch([e[0] for e in entries], b, r, hw)
+        scalars = physics.device_state(entries, hw)
+        for i, s in enumerate(scalars):
+            assert s.t_load == float(st.t_load[i])
+            assert s.t_sched == float(st.t_sched[i])
+            assert s.t_act == float(st.t_act[i])
+            assert s.t_feedback == float(st.t_feedback[i])
+            assert s.power == float(st.power[i])
+            assert s.cache_util == float(st.cache_util[i])
+            assert s.freq == float(st.freq)
+            assert s.device_power == float(st.device_power)
+            assert abs(s.t_inf - float(st.t_inf[i])) <= 1e-12 * abs(s.t_inf)
+
+
+def test_batch_grid_rows_match_per_call(descs):
+    """The simulator's use case: one (K, n) grid varying the focal batch
+    must equal K independent `device_state` calls bitwise — including in
+    the throttling regime where SIMD pow rounding used to diverge."""
+    focal, peer = descs[0], descs[1]
+    bmax = 64
+    b = np.empty((bmax, 2))
+    r = np.empty((bmax, 2))
+    b[:, 0] = np.arange(1, bmax + 1)
+    b[:, 1] = 16.0
+    r[:, 0] = 0.45
+    r[:, 1] = 0.55
+    st = physics.device_state_batch([focal, peer], b, r, V5E)
+    throttled = 0
+    for k in range(bmax):
+        s = physics.device_state([(focal, k + 1, 0.45), (peer, 16, 0.55)],
+                                 V5E)[0]
+        assert s.t_sched == float(st.t_sched[k, 0])
+        assert s.t_act == float(st.t_act[k, 0])
+        assert s.t_inf == float(st.t_inf[k, 0])
+        assert s.freq == float(st.freq[k])
+        throttled += s.freq < V5E.max_freq
+    assert throttled > 0              # the grid must cross the power knee
+
+
+def test_oversubscription_in_batch(descs):
+    """Sum r > 1: time-slice shrink + thrash must match the scalar path."""
+    d = descs[1]
+    entries = [(d, 8, 0.8), (d, 8, 0.8)]
+    st = physics.device_state_batch([d, d], np.array([8.0, 8.0]),
+                                    np.array([0.8, 0.8]), V5E)
+    sc = physics.device_state(entries, V5E)
+    assert sc[0].t_inf == float(st.t_inf[0])
+    ok = physics.device_state([(d, 8, 0.5), (d, 8, 0.5)], V5E)[0]
+    assert sc[0].t_inf > ok.t_inf
+
+
+def test_noise_path_deterministic_and_distinct(descs):
+    d = descs[0]
+    entries = [(d, 8, 0.3), (d, 4, 0.3)]
+    a = physics.device_state(entries, V5E, np.random.default_rng(7))
+    b = physics.device_state(entries, V5E, np.random.default_rng(7))
+    base = physics.device_state(entries, V5E)
+    assert [s.t_inf for s in a] == [s.t_inf for s in b]
+    assert all(s.t_inf != n.t_inf for s, n in zip(base, a))
+    # noise perturbs t_act/t_sched only, never the IO terms
+    assert all(s.t_load == n.t_load and s.t_feedback == n.t_feedback
+               for s, n in zip(base, a))
+
+
+def test_broadcasting_shapes(descs):
+    d = descs[0]
+    st = physics.device_state_batch([d], np.arange(1.0, 9.0)[:, None],
+                                    np.full((8, 1), 0.5), V5E)
+    assert st.t_inf.shape == (8, 1)
+    assert st.freq.shape == (8,)
+    # latency grows with batch
+    assert np.all(np.diff(st.t_inf[:, 0]) > 0)

@@ -81,8 +81,40 @@ def test_scale_sweep_quick_rows(tmp_path):
     assert row["n_devices"] >= 1
     assert row["matches_scalar_oracle"] is True
     assert "predicted_violations" in row and "sim_violations" in row
+    # full-cluster simulation: every device, closed loop vs ground truth
+    assert row["sim_devices"] == row["n_devices"]
+    assert row["sim_workloads"] == row["m"]
+    assert row["sim_requests"] > 0 and row["sim_passes"] > 0
+    assert row["sim_events_per_s"] > 0
+    assert row["sim_wall_s"] >= 0
 
     out = tmp_path / "results.json"
     status = scale_sweep.main(["--sizes", "10", "--out", str(out)])
     assert status == 0
     assert out.exists()
+
+
+def test_scale_sweep_sim_floor_enforced(tmp_path):
+    from benchmarks import scale_sweep
+    out = tmp_path / "results.json"
+    # an absurd floor must fail the run; a tiny one must pass
+    assert scale_sweep.main(["--sizes", "10", "--sim-duration", "1",
+                             "--sim-floor", "1e15",
+                             "--out", str(out)]) == 1
+    assert scale_sweep.main(["--sizes", "10", "--sim-duration", "1",
+                             "--sim-floor", "1",
+                             "--out", str(out)]) == 0
+
+
+def test_full_simulation_reports_violations_for_hosted_specs():
+    """`simulate_full` + `SimResult.violations` close the loop the
+    predicted_violations count used to stand in for."""
+    from repro.serving.simulator import simulate_full
+    profiles_by_hw, hardware = _hetero()
+    specs = synthetic_workloads(25, seed=1)
+    plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+    res = simulate_full(plan, models(), hw, duration_s=2.0)
+    assert set(res.per_workload) == {s.name for s in specs}
+    sb = {s.name: s for s in specs}
+    viols = res.violations(sb)
+    assert set(viols) <= set(sb)

@@ -1,0 +1,133 @@
+"""Scalar-oracle vs vectorized simulator equivalence.
+
+The vec engine (per-device pass recurrence over cached latency tables)
+must reproduce the scalar global-heap event loop EXACTLY: same seed =>
+byte-identical per-request latency streams, SimResult metrics, and
+monitor timelines — across constant-rate, Poisson, shadow-failover and
+adjust_fn (GSLICE-style reactive controller) scenarios.  Per-instance
+RNG streams (`default_rng([seed, i, k])`) are what make this possible.
+"""
+import numpy as np
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core.experiments import fitted_context
+from repro.serving.simulator import (simulate_full, simulate_plan,
+                                     simulate_device_sample)
+from repro.serving.workload import models, specs_by_name, twelve_workloads
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ctx = fitted_context()
+    plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw)
+    return ctx, plan, models()
+
+
+def _adjust(now, insts):
+    """Instance-local reactive controller (the contract the vec engine
+    documents): grows batch under backlog, nudges r with progress."""
+    for inst in insts:
+        if len(inst.queue) > 2 * inst.batch and inst.batch < 32:
+            inst.batch += 1
+        if inst.completed > 400:
+            inst.r = min(1.0, round(inst.r + 0.025, 10))
+
+
+SCENARIOS = {
+    "constant": {},
+    "poisson": {"poisson": True, "seed": 3},
+    "shadow": {"shadow": True},
+    "adjust": {"adjust_fn": _adjust, "adjust_period_s": 0.7},
+    "shadow_poisson": {"shadow": True, "poisson": True, "seed": 7},
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS), ids=str)
+def test_engines_byte_identical(setup, scenario):
+    ctx, plan, mods = setup
+    kw = dict(SCENARIOS[scenario])
+    if scenario == "shadow":
+        # inject a prediction error so the shadow actually flips
+        plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw)
+        victim = next(p for p in plan.placements if p.workload.name == "W1")
+        victim.r = max(ctx.hw.r_unit,
+                       round(victim.r * 0.5 / ctx.hw.r_unit) * ctx.hw.r_unit)
+    a = simulate_plan(plan, mods, ctx.hw, duration_s=4.0, engine="scalar",
+                      record_timeline=True, **kw)
+    b = simulate_plan(plan, mods, ctx.hw, duration_s=4.0, engine="vec",
+                      record_timeline=True, **kw)
+    assert set(a.request_latencies) == set(b.request_latencies)
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+    assert a.per_workload == b.per_workload
+    assert a.timeline == b.timeline
+    assert a.stats["n_passes"] == b.stats["n_passes"]
+    assert a.stats["n_requests"] == b.stats["n_requests"]
+    assert a.stats["peak_window"] == b.stats["peak_window"]
+
+
+def test_unknown_engine_rejected(setup):
+    ctx, plan, mods = setup
+    with pytest.raises(ValueError):
+        simulate_plan(plan, mods, ctx.hw, duration_s=1.0, engine="cuda")
+
+
+@pytest.mark.parametrize("engine", ["scalar", "vec"])
+def test_monitor_window_bounded(setup, engine):
+    """Regression for the unbounded `recent` list: the monitor window
+    must stay O(rate x 1s lookback), NOT O(total completed requests)."""
+    ctx, plan, mods = setup
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=12.0, engine=engine)
+    peak = res.stats["peak_window"]
+    total = res.stats["n_requests"]
+    max_rate = max(s.rate_rps for s in twelve_workloads())
+    assert 0 < peak <= 3 * max_rate      # ~1s of the fastest workload
+    assert peak < total / 10             # nowhere near the full history
+
+
+def test_stats_accounting(setup):
+    ctx, plan, mods = setup
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=3.0)
+    st = res.stats
+    assert st["n_events"] == st["n_requests"] + st["n_passes"]
+    assert st["n_passes"] > 0 and st["events_per_s"] > 0
+    served = sum(len(v) for v in res.request_latencies.values())
+    assert served == st["n_requests"]    # every arrival eventually served
+
+
+def test_simulate_full_runs_every_device(setup):
+    ctx, plan, mods = setup
+    res = simulate_full(plan, mods, ctx.hw, duration_s=2.0)
+    assert set(res.per_workload) == {s.name for s in twelve_workloads()}
+    assert res.stats["events_per_s"] > 0
+
+
+def test_device_sample_consistent_with_full(setup):
+    """A sampled sub-simulation hosts exactly the sampled devices'
+    workloads and produces finite metrics (API kept for spot checks)."""
+    ctx, plan, mods = setup
+    res, gpus = simulate_device_sample(plan, mods, ctx.hw, max_devices=2,
+                                       duration_s=2.0)
+    hosted = {p.workload.name for p in plan.placements if p.gpu in set(gpus)}
+    assert set(res.per_workload) == hosted
+    for m in res.per_workload.values():
+        assert np.isfinite(m["p99_ms"])
+
+
+def test_shadow_equivalent_and_recovers(setup):
+    """The 12-workload shadow scenario both flips the shadow (Sec. 4.2)
+    and stays engine-identical after the table invalidation."""
+    ctx, _, mods = setup
+    plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw)
+    victim = next(p for p in plan.placements if p.workload.name == "W1")
+    victim.r = max(ctx.hw.r_unit,
+                   round(victim.r * 0.5 / ctx.hw.r_unit) * ctx.hw.r_unit)
+    a = simulate_plan(plan, mods, ctx.hw, duration_s=8.0, shadow=True,
+                      engine="scalar")
+    b = simulate_plan(plan, mods, ctx.hw, duration_s=8.0, shadow=True,
+                      engine="vec")
+    assert a.per_workload["W1"]["shadow_used"]
+    assert b.per_workload["W1"]["shadow_used"]
+    assert a.per_workload == b.per_workload
