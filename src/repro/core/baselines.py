@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
+from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
 
@@ -35,19 +36,21 @@ R_MAX = 1.0
 def provision_ffd(specs: Sequence[WorkloadSpec],
                   profiles: Dict[str, WorkloadCoefficients],
                   hw: HardwareSpec, *, use_alloc_gpus: bool = False,
-                  engine: str = "vec") -> ProvisioningPlan:
+                  engine: str = "vec",
+                  budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
     if engine not in ("vec", "scalar"):
         raise ValueError(f"unknown engine {engine!r}")
-    prepared = prov._prepare(specs, profiles, hw)
+    bm = resolve(budget)
+    prepared = prov._prepare(specs, profiles, hw, budget=bm)
     if use_alloc_gpus and engine == "vec":
-        return _provision_ffd_vec(prepared, hw)
+        return _provision_ffd_vec(prepared, hw, bm)
 
     devs: List[prov._Dev] = []
     for (s, c, b, rl) in prepared:
         placed = False
         for dev in devs:
             if use_alloc_gpus:
-                r_a = prov.alloc_gpus(dev, s, c, b, rl, hw)
+                r_a = prov.alloc_gpus(dev, s, c, b, rl, hw, budget=bm)
                 if r_a is not None:
                     dev.entries = [
                         (e[0], e[1], e[2], r_new)
@@ -71,10 +74,11 @@ def provision_ffd(specs: Sequence[WorkloadSpec],
     return plan
 
 
-def _provision_ffd_vec(prepared, hw: HardwareSpec) -> ProvisioningPlan:
+def _provision_ffd_vec(prepared, hw: HardwareSpec,
+                       budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
     """FFD++ through the batched scorer: Alg. 2 runs against every open
     device in one call, first-fit picks the earliest feasible one."""
-    cl = pmv.VecCluster(hw)
+    cl = pmv.VecCluster(hw, budget=budget)
     for (s, c, b, rl) in prepared:
         q_fit = -1
         if cl.d:
@@ -109,7 +113,8 @@ MeasureFn = Callable[[List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]
 def provision_gslice(specs: Sequence[WorkloadSpec],
                      profiles: Dict[str, WorkloadCoefficients],
                      hw: HardwareSpec, measure_fn: MeasureFn, *,
-                     rounds: int = 5, threshold: float = 0.10
+                     rounds: int = 5, threshold: float = 0.10,
+                     budget: BudgetLike = QUEUEING
                      ) -> ProvisioningPlan:
     """GSLICE+ — iGniter's *placement* (per the paper's patch) but GSLICE's
     allocation policy: start from an equal spatial split of each device,
@@ -119,7 +124,8 @@ def provision_gslice(specs: Sequence[WorkloadSpec],
     over-subscribed (sum r > 100%) — the pathology of Fig. 15/16 — and
     resources are reclaimed whenever latency sits below the threshold
     band, which trades SLO safety for utilization."""
-    base = prov.provision(specs, profiles, hw)
+    bm = resolve(budget)
+    base = prov.provision(specs, profiles, hw, budget=bm)
     devs: Dict[int, List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]] = {}
     for p in base.placements:
         devs.setdefault(p.gpu, []).append(
@@ -135,7 +141,7 @@ def provision_gslice(specs: Sequence[WorkloadSpec],
             new_entries = []
             changed = False
             for (s, c, b, r), (lat, rps) in zip(entries, obs):
-                target = s.slo_ms / 2.0
+                target = bm.budget_ms(s.slo_ms, s.rate_rps, b)
                 if lat > target:                        # violating -> grow
                     r = min(R_MAX, round(r + 2 * hw.r_unit, 10))
                     changed = True
@@ -175,9 +181,12 @@ def _solo_throughput(c: WorkloadCoefficients, b: int, r: float,
 
 
 def _most_efficient_r(spec: WorkloadSpec, c: WorkloadCoefficients, b: int,
-                      hw: HardwareSpec, knee: float = 0.30) -> float:
+                      hw: HardwareSpec, knee: float = 0.30,
+                      budget: BudgetLike = QUEUEING) -> float:
     """gpu-lets sizing: the grid point where marginal throughput efficiency
-    knees, grown until the solo latency SLO and arrival rate are met."""
+    knees, grown until the solo latency budget and arrival rate are met."""
+    bm = resolve(budget)
+    budget_ms = bm.budget_ms(spec.slo_ms, spec.rate_rps, b)
     choice = _GPULETS_CHOICES[-1]
     for i, r in enumerate(_GPULETS_CHOICES[:-1]):
         cur = _solo_throughput(c, b, r, hw)
@@ -190,7 +199,7 @@ def _most_efficient_r(spec: WorkloadSpec, c: WorkloadCoefficients, b: int,
         r = _GPULETS_CHOICES[idx]
         me = pm.PlacedWorkload(coeffs=c, batch=b, r=r)
         lat = pm.predict_workload(me, [], hw).t_inf
-        if (lat <= spec.slo_ms / 2.0
+        if (lat <= budget_ms
                 and _solo_throughput(c, b, r, hw) >= spec.rate_rps):
             break
         idx += 1
@@ -199,12 +208,15 @@ def _most_efficient_r(spec: WorkloadSpec, c: WorkloadCoefficients, b: int,
 
 def provision_gpulets(specs: Sequence[WorkloadSpec],
                       profiles: Dict[str, WorkloadCoefficients],
-                      hw: HardwareSpec) -> ProvisioningPlan:
+                      hw: HardwareSpec, *,
+                      budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
+    bm = resolve(budget)
     prepared = []
     for s in specs:
         c = profiles[s.model]
-        b = prov.appropriate_batch(s, c, hw)   # paper-modified batch policy
-        r = _most_efficient_r(s, c, b, hw)
+        b = prov.appropriate_batch(s, c, hw,   # paper-modified batch policy
+                                   budget=bm)
+        r = _most_efficient_r(s, c, b, hw, budget=bm)
         prepared.append((s, c, b, r))
     prepared.sort(key=lambda t: -t[3])
 
@@ -225,7 +237,7 @@ def provision_gpulets(specs: Sequence[WorkloadSpec],
             for q, i in enumerate(cand):
                 # newcomer occupies the last slot of candidate device q
                 lat = float(batch_pred.t_inf[q, len(devs[i])])
-                if lat > s.slo_ms / 2.0:
+                if lat > bm.budget_ms(s.slo_ms, s.rate_rps, b):
                     continue
                 left = R_MAX - sum(e[3] for e in devs[i]) - r
                 if best_left is None or left < best_left:

@@ -36,19 +36,29 @@ def fitted_context(hw_name: str = "tpu-v5e") -> FittedContext:
     return FittedContext(hw=hw, profiles=profiles, testbed=tb)
 
 
-def all_plans(ctx: Optional[FittedContext] = None
-              ) -> Dict[str, ProvisioningPlan]:
+def all_plans(ctx: Optional[FittedContext] = None, *,
+              budget: str = "half") -> Dict[str, ProvisioningPlan]:
+    """The paper's Sec. 5.1 strategy comparison (Figs. 15-19).
+
+    Defaults to the paper-faithful ``budget="half"`` T_slo/2 split for
+    every strategy so the reproduced cost/violation orderings match the
+    paper; pass ``budget="queueing"`` to compare all strategies under
+    the queueing-aware split (the provisioner-wide default elsewhere).
+    """
     ctx = ctx or fitted_context()
     specs = twelve_workloads()
     mods = models()
     mfn = functools.partial(measure_steady, models=mods, hw=ctx.hw)
     return {
-        "iGniter": prov.provision(specs, ctx.profiles, ctx.hw),
-        "FFD+": B.provision_ffd(specs, ctx.profiles, ctx.hw),
+        "iGniter": prov.provision(specs, ctx.profiles, ctx.hw,
+                                  budget=budget),
+        "FFD+": B.provision_ffd(specs, ctx.profiles, ctx.hw, budget=budget),
         "FFD++": B.provision_ffd(specs, ctx.profiles, ctx.hw,
-                                 use_alloc_gpus=True),
-        "GSLICE+": B.provision_gslice(specs, ctx.profiles, ctx.hw, mfn),
-        "gpu-lets+": B.provision_gpulets(specs, ctx.profiles, ctx.hw),
+                                 use_alloc_gpus=True, budget=budget),
+        "GSLICE+": B.provision_gslice(specs, ctx.profiles, ctx.hw, mfn,
+                                      budget=budget),
+        "gpu-lets+": B.provision_gpulets(specs, ctx.profiles, ctx.hw,
+                                         budget=budget),
     }
 
 

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import perf_model as pm
+from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import HardwareSpec, WorkloadCoefficients, WorkloadSpec
 
 R_MAX = 1.0
@@ -197,8 +198,10 @@ class VecCluster:
     (O(residents touched)) instead of re-deriving the whole device.
     """
 
-    def __init__(self, hw: HardwareSpec, cap_d: int = 8, cap_n: int = 4):
+    def __init__(self, hw: HardwareSpec, cap_d: int = 8, cap_n: int = 4,
+                 budget: BudgetLike = QUEUEING):
         self.hw = hw
+        self.bm = resolve(budget)
         self.d = 0                                  # open devices
         self._cap_d, self._cap_n = cap_d, cap_n
         self.entries: List[List[Tuple[WorkloadSpec, WorkloadCoefficients,
@@ -208,7 +211,9 @@ class VecCluster:
             for f in COEFF_FIELDS})
         self.b = np.zeros((cap_d, cap_n))
         self.r = np.ones((cap_d, cap_n))
-        self.slo_half = np.full((cap_d, cap_n), np.inf)
+        # per-entry inference budget (T_slo/2 under budget="half", the
+        # queueing-aware split otherwise) — the Alg. 2 grant threshold
+        self.budget_ms = np.full((cap_d, cap_n), np.inf)
         self.mask = np.zeros((cap_d, cap_n), dtype=bool)
         self.n = np.zeros(cap_d, dtype=np.int64)
         # cached invariants
@@ -242,7 +247,7 @@ class VecCluster:
             setattr(self.ca, f, grow2(getattr(self.ca, f), _PAD.get(f, 0.0)))
         self.b = grow2(self.b, 0.0)
         self.r = grow2(self.r, 1.0)
-        self.slo_half = grow2(self.slo_half, np.inf)
+        self.budget_ms = grow2(self.budget_ms, np.inf)
         self.mask = grow2(self.mask, False)
         self.k_act = grow2(self.k_act, 1.0)
         self.power = grow2(self.power, 0.0)
@@ -276,7 +281,8 @@ class VecCluster:
             getattr(self.ca, f)[q, i] = getattr(coeffs, f)
         self.b[q, i] = batch
         self.r[q, i] = r
-        self.slo_half[q, i] = spec.slo_ms / 2.0
+        self.budget_ms[q, i] = self.bm.budget_ms(spec.slo_ms,
+                                                 spec.rate_rps, batch)
         self.mask[q, i] = True
         self.n[q] = i + 1
         self.t_io[q, i, 0] = coeffs.t_load(batch, self.hw.pcie_bw)
@@ -374,7 +380,7 @@ class VecCluster:
         n_co = self.n[:d] + 1
         ds = np.where(n_co <= 1, 0.0,
                       hw.alpha_sch * n_co + hw.beta_sch)        # Eq. 6
-        slo_new = spec.slo_ms / 2.0
+        budget_new = self.bm.budget_ms(spec.slo_ms, spec.rate_rps, batch)
         t_load_new = coeffs.t_load(batch, hw.pcie_bw)
         t_fb_new = coeffs.t_feedback(batch, hw.pcie_bw)
         t_schk_new = coeffs.k_sch * coeffs.n_kernels
@@ -404,13 +410,13 @@ class VecCluster:
             t_sch = self.t_schk[idx] + ds[idx][:, None] * self.ca.n_kernels[idx]
             t_gpu = (t_sch + t_act) / slow[:, None]
             t_inf = self.t_io[idx, :, 0] + t_gpu + self.t_io[idx, :, 1]
-            viol_res = m_i & (t_inf > self.slo_half[idx] + 1e-9)
+            viol_res = m_i & (t_inf > self.budget_ms[idx] + 1e-9)
 
             other_new = c_sum[idx] - cn[idx]
             t_act_n = kan[idx] * (1.0 + coeffs.alpha_cache * other_new)
             t_gpu_n = (t_schk_new + ds[idx] * coeffs.n_kernels + t_act_n) / slow
             t_inf_n = t_load_new + t_gpu_n + t_fb_new
-            viol_new = t_inf_n > slo_new + 1e-9
+            viol_new = t_inf_n > budget_new + 1e-9
 
             conv = ~viol_res.any(axis=1) & ~viol_new
             active[idx[conv]] = False
@@ -456,11 +462,12 @@ def alloc_gpus_vec(residents: Sequence[Tuple[WorkloadSpec,
                                              int, float]],
                    spec: WorkloadSpec, coeffs: WorkloadCoefficients,
                    batch: int, r_lower: float,
-                   hw: HardwareSpec) -> Optional[List[float]]:
+                   hw: HardwareSpec, *,
+                   budget: BudgetLike = QUEUEING) -> Optional[List[float]]:
     """Single-device convenience wrapper matching `provisioner.alloc_gpus`
     (same signature semantics: returns the new allocation vector with the
     newcomer last, or None when the device cannot host it)."""
-    cl = VecCluster(hw)
+    cl = VecCluster(hw, budget=budget)
     q = cl.add_device()
     for (s, c, b, r) in residents:
         cl.add_entry(q, s, c, b, r)

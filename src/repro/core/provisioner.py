@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
+from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
 
@@ -41,37 +42,74 @@ class InfeasibleError(RuntimeError):
 # ---------------------------------------------------------------------------
 
 def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
-                      hw: HardwareSpec, *, b_max: int = 64) -> int:
+                      hw: HardwareSpec, *, b_max: int = 64,
+                      budget: BudgetLike = QUEUEING) -> int:
     """Eq. (17): smallest batch sustaining the arrival rate within T_slo/2.
 
     R is req/s; the model works in ms, so R_ms = R / 1000.
+
+    The batch choice is shared by both budget modes (the queueing-aware
+    split reallocates T_slo between waiting and service AT this batch,
+    which is what keeps its allocations never looser than the paper's
+    half split).  Under ``budget="queueing"`` the batch is additionally
+    shrunk — in practice a no-op safety net — while the solved inference
+    budget at b is degenerate (<= 0), which can only happen when the
+    accumulation tail (b-1)/R_ms eats the whole SLO.
     """
     r_ms = spec.rate_rps / 1000.0
     num = spec.slo_ms * r_ms * hw.pcie_bw
     den = 2.0 * (hw.pcie_bw + r_ms * c.d_load)
     b = int(math.ceil(num / den))
-    return max(1, min(b, b_max))
+    b = max(1, min(b, b_max))
+    bm = resolve(budget)
+    if bm.mode != "half":
+        while b > 1 and bm.budget_ms(spec.slo_ms, spec.rate_rps, b) <= 1e-6:
+            b -= 1
+    return b
 
 
 def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
-                         hw: HardwareSpec, b_appr: Optional[int] = None) -> float:
-    """Eq. (18): minimal solo resource fraction meeting T_slo/2."""
-    b = b_appr if b_appr is not None else appropriate_batch(spec, c, hw)
+                         hw: HardwareSpec, b_appr: Optional[int] = None, *,
+                         budget: BudgetLike = QUEUEING) -> float:
+    """Eq. (18): minimal solo resource fraction meeting the inference
+    budget (T_slo/2 under ``budget="half"``, the queueing-aware split
+    otherwise).
+
+    Under the queueing budget, a workload whose TIGHTENED budget is out
+    of reach even on a full device is clamped to R_MAX (the honest
+    residual then surfaces in `predicted_violations`, mirroring the
+    `self_grant` fallback); a workload infeasible even at the paper's
+    half split still raises InfeasibleError in both modes.
+    """
+    bm = resolve(budget)
+    b = b_appr if b_appr is not None else appropriate_batch(spec, c, hw,
+                                                            budget=bm)
     gamma = c.k1 * b * b + c.k2 * b + c.k3
-    delta = (spec.slo_ms / 2.0
-             - (c.d_load + c.d_feedback) * b / hw.pcie_bw
-             - c.k5 - c.k_sch * c.n_kernels)
-    if delta <= 0:
-        raise InfeasibleError(
-            f"{spec.name}: fixed latency terms exceed T_slo/2 "
-            f"(delta={delta:.3f} ms)")
-    r = gamma / delta - c.k4
-    r_units = math.ceil(r / hw.r_unit - 1e-9)
-    r_lower = max(hw.r_unit, r_units * hw.r_unit)
-    if r_lower > R_MAX + 1e-9:
-        raise InfeasibleError(
-            f"{spec.name}: needs r={r_lower:.3f} > 100% of a device")
-    return min(r_lower, R_MAX)
+
+    def _r_lower(budget_ms: float) -> float:
+        delta = (budget_ms
+                 - (c.d_load + c.d_feedback) * b / hw.pcie_bw
+                 - c.k5 - c.k_sch * c.n_kernels)
+        if delta <= 0:
+            raise InfeasibleError(
+                f"{spec.name}: fixed latency terms exceed the "
+                f"{budget_ms:.3f} ms inference budget "
+                f"(delta={delta:.3f} ms)")
+        r = gamma / delta - c.k4
+        r_units = math.ceil(r / hw.r_unit - 1e-9)
+        r_lower = max(hw.r_unit, r_units * hw.r_unit)
+        if r_lower > R_MAX + 1e-9:
+            raise InfeasibleError(
+                f"{spec.name}: needs r={r_lower:.3f} > 100% of a device")
+        return min(r_lower, R_MAX)
+
+    try:
+        return _r_lower(bm.budget_ms(spec.slo_ms, spec.rate_rps, b))
+    except InfeasibleError:
+        if bm.mode == "half":
+            raise
+        _r_lower(spec.slo_ms / 2.0)    # raises if infeasible even at T/2
+        return R_MAX
 
 
 # ---------------------------------------------------------------------------
@@ -98,19 +136,24 @@ class _Dev:
 
 def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
                w_batch: int, w_r_lower: float,
-               hw: HardwareSpec) -> Optional[List[float]]:
+               hw: HardwareSpec, *,
+               budget: BudgetLike = QUEUEING) -> Optional[List[float]]:
     """Try placing workload w on `dev`; returns the new allocation vector
     r_a (existing entries order, w last), or None if the device cannot host
     it within r_max.
 
     Faithful to Alg. 2: start w at its lower bound, then iteratively grant
-    +r_unit to any workload whose predicted t_inf exceeds T_slo/2, until
-    stable or out of resources.
+    +r_unit to any workload whose predicted t_inf exceeds its inference
+    budget (T_slo/2 under ``budget="half"``, the queueing-aware split
+    otherwise), until stable or out of resources.
     """
+    bm = resolve(budget)
     specs = [e[0] for e in dev.entries] + [w_spec]
     coeffs = [e[1] for e in dev.entries] + [w_coeffs]
     batches = [e[2] for e in dev.entries] + [w_batch]
     r_a = [e[3] for e in dev.entries] + [w_r_lower]
+    budgets = [bm.budget_ms(s.slo_ms, s.rate_rps, b)
+               for s, b in zip(specs, batches)]
 
     flag = True
     while sum(r_a) <= R_MAX + 1e-9 and flag:
@@ -119,7 +162,7 @@ def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
                   for c, b, r in zip(coeffs, batches, r_a)]
         pred = pm.predict_device(placed, hw)
         for i, spec in enumerate(specs):
-            if pred.per_workload[i].t_inf > spec.slo_ms / 2.0 + 1e-9:
+            if pred.per_workload[i].t_inf > budgets[i] + 1e-9:
                 r_a[i] = round(r_a[i] + hw.r_unit, 10)
                 flag = True
     if sum(r_a) > R_MAX + 1e-9:
@@ -128,17 +171,19 @@ def alloc_gpus(dev: _Dev, w_spec: WorkloadSpec, w_coeffs: WorkloadCoefficients,
 
 
 def self_grant(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
-               batch: int, r_lower: float, hw: HardwareSpec) -> float:
+               batch: int, r_lower: float, hw: HardwareSpec, *,
+               budget: BudgetLike = QUEUEING) -> float:
     """Alg. 2 run for a workload opening a FRESH device (beyond-paper fix,
     see ROADMAP): Theorem 1's Eq. (18) drops the f/F throttling factor,
-    so a solo anchor at r_lower can exceed T_slo/2 once its power demand
-    crosses the cap.  Grant +r_unit until the model predicts t_inf <=
-    T_slo/2 — exactly what `alloc_gpus` already does for the FIRST
-    workload (devs[0] starts empty), now applied to line-14 devices too.
-    Falls back to the full device when even r=1 cannot meet the budget
-    (the residual is then reported honestly by `predicted_violations`).
+    so a solo anchor at r_lower can exceed its budget once its power
+    demand crosses the cap.  Grant +r_unit until the model predicts
+    t_inf within the inference budget — exactly what `alloc_gpus`
+    already does for the FIRST workload (devs[0] starts empty), now
+    applied to line-14 devices too.  Falls back to the full device when
+    even r=1 cannot meet the budget (the residual is then reported
+    honestly by `predicted_violations`).
     """
-    r_a = alloc_gpus(_Dev(), spec, coeffs, batch, r_lower, hw)
+    r_a = alloc_gpus(_Dev(), spec, coeffs, batch, r_lower, hw, budget=budget)
     return r_a[-1] if r_a is not None else R_MAX
 
 
@@ -148,15 +193,16 @@ def self_grant(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
 
 def _prepare(specs: Sequence[WorkloadSpec],
              profiles: Dict[str, WorkloadCoefficients],
-             hw: HardwareSpec
+             hw: HardwareSpec, *, budget: BudgetLike = QUEUEING
              ) -> List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]:
     """Alg. 1 lines 2-3: (b_appr, r_lower) per workload, sorted by
     r_lower descending."""
+    bm = resolve(budget)
     prepared = []
     for s in specs:
         c = profiles[s.model]
-        b = appropriate_batch(s, c, hw)
-        rl = resource_lower_bound(s, c, hw, b)
+        b = appropriate_batch(s, c, hw, budget=bm)
+        rl = resource_lower_bound(s, c, hw, b, budget=bm)
         prepared.append((s, c, b, rl))
     prepared.sort(key=lambda t: -t[3])
     return prepared
@@ -164,18 +210,24 @@ def _prepare(specs: Sequence[WorkloadSpec],
 
 def provision(specs: Sequence[WorkloadSpec],
               profiles: Dict[str, WorkloadCoefficients],
-              hw: HardwareSpec, *, engine: str = "vec") -> ProvisioningPlan:
+              hw: HardwareSpec, *, engine: str = "vec",
+              budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
     """Cost-efficient interference-aware provisioning (Alg. 1).
 
     ``engine="vec"`` scores all open devices through the batched model in
     one call per placement; ``engine="scalar"`` is the reference
     per-device loop (identical output, kept as the oracle).
+
+    ``budget`` selects the SLO split handed to Theorem 1 / Alg. 2:
+    ``"queueing"`` (default) budgets a tail queueing-delay term per
+    workload; ``"half"`` is the paper-faithful fixed T_slo/2 split.
     """
+    bm = resolve(budget)
     if engine == "vec":
-        return _provision_vec(specs, profiles, hw)
+        return _provision_vec(specs, profiles, hw, bm)
     if engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
-    prepared = _prepare(specs, profiles, hw)
+    prepared = _prepare(specs, profiles, hw, budget=bm)
 
     devs: List[_Dev] = [_Dev()]
     for (s, c, b, rl) in prepared:
@@ -183,7 +235,7 @@ def provision(specs: Sequence[WorkloadSpec],
         best_alloc: Optional[List[float]] = None
         best_inter = R_MAX + 1.0     # r_inter^min
         for q, dev in enumerate(devs):
-            r_a = alloc_gpus(dev, s, c, b, rl, hw)
+            r_a = alloc_gpus(dev, s, c, b, rl, hw, budget=bm)
             if r_a is None:
                 continue
             # increased resources caused by interference (line 8)
@@ -195,7 +247,7 @@ def provision(specs: Sequence[WorkloadSpec],
                 best_alloc = r_a
         if best_q == -1:
             devs.append(_Dev(                              # line 14
-                entries=[(s, c, b, self_grant(s, c, b, rl, hw))]))
+                entries=[(s, c, b, self_grant(s, c, b, rl, hw, budget=bm))]))
         else:
             dev = devs[best_q]
             new_entries = []
@@ -224,20 +276,22 @@ def _argmin_inter(r_inter: "np.ndarray") -> int:
 
 def _provision_vec(specs: Sequence[WorkloadSpec],
                    profiles: Dict[str, WorkloadCoefficients],
-                   hw: HardwareSpec) -> ProvisioningPlan:
+                   hw: HardwareSpec, budget: BudgetLike = QUEUEING
+                   ) -> ProvisioningPlan:
     """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
     scores every open device per placement, and the chosen device's
     invariants are refreshed incrementally."""
-    prepared = _prepare(specs, profiles, hw)
+    bm = resolve(budget)
+    prepared = _prepare(specs, profiles, hw, budget=bm)
 
-    cl = pmv.VecCluster(hw)
+    cl = pmv.VecCluster(hw, budget=bm)
     cl.add_device()
     for (s, c, b, rl) in prepared:
         feasible, rr, rn, r_inter = cl.alloc_all(s, c, b, rl)
         best_q = _argmin_inter(r_inter) if feasible.any() else -1
         if best_q == -1:
             q = cl.add_device()                                  # line 14
-            cl.add_entry(q, s, c, b, self_grant(s, c, b, rl, hw))
+            cl.add_entry(q, s, c, b, self_grant(s, c, b, rl, hw, budget=bm))
         else:
             cl.set_row_r(best_q, rr[best_q])
             cl.add_entry(best_q, s, c, b, float(rn[best_q]))
@@ -260,14 +314,16 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
 
 def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  profiles: Dict[str, WorkloadCoefficients],
-                 hw: HardwareSpec, *, engine: str = "vec") -> ProvisioningPlan:
+                 hw: HardwareSpec, *, engine: str = "vec",
+                 budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
     with Alg. 2 reallocation, or a fresh device.  The vec engine scores
     every existing device in a single `alloc_all` call."""
+    bm = resolve(budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw)
-    rl = resource_lower_bound(spec, c, hw, b)
+    b = appropriate_batch(spec, c, hw, budget=bm)
+    rl = resource_lower_bound(spec, c, hw, b, budget=bm)
 
     devs: Dict[int, _Dev] = {}
     for p in plan.placements:
@@ -276,7 +332,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
     best_q, best_alloc, best_inter = -1, None, R_MAX + 1.0
     if engine == "vec":
-        cl = pmv.VecCluster(hw)
+        cl = pmv.VecCluster(hw, budget=bm)
         gpu_ids = sorted(devs)
         for g in gpu_ids:
             q = cl.add_device()
@@ -291,7 +347,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                 best_alloc = [float(x) for x in rr[row, :k]] + [float(rn[row])]
     elif engine == "scalar":
         for q, dev in sorted(devs.items()):
-            r_a = alloc_gpus(dev, spec, c, b, rl, hw)
+            r_a = alloc_gpus(dev, spec, c, b, rl, hw, budget=bm)
             if r_a is None:
                 continue
             old = [e[3] for e in dev.entries] + [rl]
@@ -306,7 +362,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
         g_new = (max(devs) + 1) if devs else 0
         new_plan.placements = list(plan.placements) + [
             Placement(workload=spec, gpu=g_new,
-                      r=self_grant(spec, c, b, rl, hw), batch=b)]
+                      r=self_grant(spec, c, b, rl, hw, budget=bm), batch=b)]
     else:
         for p in plan.placements:
             if p.gpu != best_q:
@@ -328,7 +384,8 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 def provision_cheapest(specs: Sequence[WorkloadSpec],
                        profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
                        hardware: Sequence[HardwareSpec], *,
-                       engine: str = "vec"
+                       engine: str = "vec",
+                       budget: BudgetLike = QUEUEING
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
     """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
@@ -336,7 +393,7 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
     for hw in hardware:
         try:
             plan = provision(specs, profiles_by_hw[hw.name], hw,
-                             engine=engine)
+                             engine=engine, budget=budget)
         except InfeasibleError as e:
             errors.append(str(e))
             continue
@@ -367,10 +424,16 @@ def predicted_plan_metrics(plan: ProvisioningPlan,
 
 def predicted_violations(plan: ProvisioningPlan,
                          profiles: Dict[str, WorkloadCoefficients],
-                         hw: HardwareSpec) -> List[str]:
-    """Workloads whose model-predicted t_inf exceeds their T_slo/2 budget
-    (Constraint 14 check used by the scale sweep)."""
+                         hw: HardwareSpec, *,
+                         budget: BudgetLike = QUEUEING) -> List[str]:
+    """Workloads whose model-predicted t_inf exceeds their inference
+    budget (Constraint 14 check used by the scale sweep).  Pass the same
+    ``budget`` the plan was provisioned with: the budget IS the per-
+    workload threshold (T_slo/2 under "half")."""
+    bm = resolve(budget)
     metrics = predicted_plan_metrics(plan, profiles, hw)
-    sb = {p.workload.name: p.workload for p in plan.placements}
+    by_name = {p.workload.name: p for p in plan.placements}
     return [name for name, wp in metrics.items()
-            if wp.t_inf > sb[name].slo_ms / 2.0 + 1e-6]
+            if wp.t_inf > bm.budget_ms(by_name[name].workload.slo_ms,
+                                       by_name[name].workload.rate_rps,
+                                       by_name[name].batch) + 1e-6]

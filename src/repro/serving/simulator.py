@@ -116,6 +116,7 @@ class ServedInstance:
     queue: List[float] = field(default_factory=list)   # arrival times
     busy_until: float = 0.0
     latencies: List[float] = field(default_factory=list)
+    waits: List[float] = field(default_factory=list)   # serve start - arrival
     completed: int = 0
 
     @property
@@ -128,14 +129,40 @@ class SimResult:
     per_workload: Dict[str, Dict[str, float]]
     timeline: List[Dict] = field(default_factory=list)
     request_latencies: Dict[str, np.ndarray] = field(default_factory=dict)
+    request_waits: Dict[str, np.ndarray] = field(default_factory=dict)
     stats: Dict[str, float] = field(default_factory=dict)
 
-    def violations(self, specs: Dict[str, WorkloadSpec]) -> List[str]:
+    def _latency_ms(self, name: str, metric) -> float:
+        """One latency figure for `metric`: "p99", "avg", or a quantile
+        in (0, 1) evaluated over the per-request latency stream."""
+        if isinstance(metric, float):
+            lats = self.request_latencies.get(name)
+            if lats is None or lats.size == 0:
+                return math.inf
+            return float(np.percentile(lats, 100.0 * metric))
+        return self.per_workload[name][f"{metric}_ms"]
+
+    def violations(self, specs: Dict[str, WorkloadSpec], *,
+                   metric="p99", check_rate: bool = True) -> List[str]:
+        """Workloads violating their SLO at `metric` latency accounting
+        ("p99" default, "avg" for mean-latency accounting, or a float
+        quantile) and/or missing 95% of the target arrival rate."""
         out = []
         for name, m in self.per_workload.items():
             s = specs[name]
-            if m["p99_ms"] > s.slo_ms + 1e-9 or m["rps"] < 0.95 * s.rate_rps:
+            if (self._latency_ms(name, metric) > s.slo_ms + 1e-9
+                    or (check_rate and m["rps"] < 0.95 * s.rate_rps)):
                 out.append(name)
+        return out
+
+    def violation_rates(self, specs: Dict[str, WorkloadSpec]
+                        ) -> Dict[str, float]:
+        """Per-workload fraction of individual requests over the SLO."""
+        out = {}
+        for name, lats in self.request_latencies.items():
+            s = specs[name]
+            out[name] = (float(np.mean(lats > s.slo_ms))
+                         if lats.size else 1.0)
         return out
 
 
@@ -263,20 +290,38 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
               timeline: List[Dict], stats: Dict[str, float]) -> SimResult:
     per = {}
     req = {}
+    wts = {}
     for inst in instances:
         lats = np.array(inst.latencies) if inst.latencies else np.array([np.inf])
+        waits = np.array(inst.waits) if inst.waits else np.array([np.inf])
         per[inst.spec.name] = {
             "p99_ms": float(np.percentile(lats, 99)),
             "p50_ms": float(np.percentile(lats, 50)),
             "avg_ms": float(np.mean(lats)),
+            "wait_avg_ms": float(np.mean(waits)),
+            "wait_p99_ms": float(np.percentile(waits, 99)),
             "rps": inst.completed / duration_s,
             "r_final": inst.r_eff,
             "batch_final": inst.batch,
             "shadow_used": inst.shadow_active,
         }
         req[inst.spec.name] = np.asarray(inst.latencies)
+        wts[inst.spec.name] = np.asarray(inst.waits)
+    # cluster-wide end-to-end latency + queueing-delay aggregates: the
+    # measured counterpart of the provisioner's t_queue budget term
+    all_lats = np.concatenate([v for v in req.values() if v.size]) \
+        if any(v.size for v in req.values()) else np.array([np.inf])
+    all_waits = np.concatenate([v for v in wts.values() if v.size]) \
+        if any(v.size for v in wts.values()) else np.array([np.inf])
+    stats = dict(stats)
+    stats.update({
+        "e2e_p50_ms": float(np.percentile(all_lats, 50)),
+        "e2e_p99_ms": float(np.percentile(all_lats, 99)),
+        "wait_mean_ms": float(np.mean(all_waits)),
+        "wait_p99_ms": float(np.percentile(all_waits, 99)),
+    })
     return SimResult(per_workload=per, timeline=timeline,
-                     request_latencies=req, stats=stats)
+                     request_latencies=req, request_waits=wts, stats=stats)
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +386,7 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         for arr in taken:
             lat = done - arr
             inst.latencies.append(lat)
+            inst.waits.append(now - arr)
             recent[i].append((done, lat))
         inst.completed += nb
         n_passes += 1
@@ -359,7 +405,11 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 dq = recent[i]
                 while dq and dq[0][0] <= cutoff:
                     dq.popleft()
-                window = [l for (_, l) in dq]
+                # the monitor sees COMPLETED requests only: a pass still
+                # in flight has its (done, lat) records stamped in the
+                # future, and with passes longer than the lookback the
+                # window is legitimately empty between completions
+                window = [l for (d, l) in dq if d <= now]
                 peak_window = max(peak_window, len(window))
                 if record_timeline:
                     timeline.append({
@@ -459,6 +509,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
             tab.t_load, tab.t_sch, tab.t_act, tab.t_fb, tab.slow)
         na_s, ns_s = noise_a[i], noise_s[i]
         lats = instances[i].latencies
+        wts = instances[i].waits
         dones = done_flat[i]
         anp = arr_np[i]
         while jj < n_arr:
@@ -481,6 +532,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                                  t_fb_t[k], slow_t[k], na, ns)
             done = start + t_inf
             lats.extend((done - anp[jj:jj + nb]).tolist())
+            wts.extend((start - anp[jj:jj + nb]).tolist())
             dones.extend([done] * nb)
             jj += nb
             bu = done
@@ -509,14 +561,17 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                     inst = instances[i]
                     dn = done_flat[i]
                     w = wptr[i]
-                    end = len(dn)
-                    while w < end and dn[w] <= cutoff:
+                    while w < len(dn) and dn[w] <= cutoff:
                         w += 1
                     wptr[i] = w
+                    # completed-by-T only (mirrors the scalar monitor):
+                    # done stamps are nondecreasing per instance, and a
+                    # pass may complete past T (or past the horizon)
+                    end = bisect_right(dn, T, w)
                     peak_window = max(peak_window, end - w)
                     if not record_timeline and not shadow:
                         continue           # window list only needed below
-                    window = inst.latencies[w:]
+                    window = inst.latencies[w:end]
                     if record_timeline:
                         rows.append((T, i, {
                             "t_s": T / 1000.0, "workload": inst.spec.name,

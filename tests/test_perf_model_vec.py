@@ -145,7 +145,8 @@ def test_veccluster_incremental_matches_fresh():
 # Algorithm 2: batched == scalar
 # ---------------------------------------------------------------------------
 
-def test_alloc_gpus_vec_matches_scalar_randomized():
+@pytest.mark.parametrize("budget", ["half", "queueing"])
+def test_alloc_gpus_vec_matches_scalar_randomized(budget):
     rng = np.random.default_rng(4)
     profiles = _profiles()
     checked = 0
@@ -160,13 +161,16 @@ def test_alloc_gpus_vec_matches_scalar_randomized():
         s_new = WorkloadSpec("NEW", m, float(rng.uniform(80, 400)),
                              float(rng.uniform(5, 60)))
         try:
-            b = prov.appropriate_batch(s_new, profiles[m], V5E)
-            rl = prov.resource_lower_bound(s_new, profiles[m], V5E, b)
+            b = prov.appropriate_batch(s_new, profiles[m], V5E, budget=budget)
+            rl = prov.resource_lower_bound(s_new, profiles[m], V5E, b,
+                                           budget=budget)
         except prov.InfeasibleError:
             continue
         dev = prov._Dev(entries=list(residents))
-        ref = prov.alloc_gpus(dev, s_new, profiles[m], b, rl, V5E)
-        got = pmv.alloc_gpus_vec(residents, s_new, profiles[m], b, rl, V5E)
+        ref = prov.alloc_gpus(dev, s_new, profiles[m], b, rl, V5E,
+                              budget=budget)
+        got = pmv.alloc_gpus_vec(residents, s_new, profiles[m], b, rl, V5E,
+                                 budget=budget)
         assert (ref is None) == (got is None)
         if ref is not None:
             np.testing.assert_allclose(got, ref, **TOL)
@@ -178,35 +182,73 @@ def test_alloc_gpus_vec_matches_scalar_randomized():
 # Algorithm 1: identical plans from both engines
 # ---------------------------------------------------------------------------
 
-def test_provision_engines_identical_randomized():
+@pytest.mark.parametrize("budget", ["half", "queueing"])
+def test_provision_engines_identical_randomized(budget):
     rng = np.random.default_rng(5)
     profiles = _profiles()
     compared = 0
     for _ in range(40):
         specs = random_specs(rng)
         try:
-            scalar = prov.provision(specs, profiles, V5E, engine="scalar")
+            scalar = prov.provision(specs, profiles, V5E, engine="scalar",
+                                    budget=budget)
         except prov.InfeasibleError:
             continue
-        vec = prov.provision(specs, profiles, V5E, engine="vec")
+        vec = prov.provision(specs, profiles, V5E, engine="vec",
+                             budget=budget)
         assert plan_key(vec) == plan_key(scalar)
         compared += 1
     assert compared > 10
 
 
-def test_provision_vec_identical_on_paper_workload():
+@pytest.mark.parametrize("budget", ["half", "queueing"])
+def test_provision_vec_identical_on_paper_workload(budget):
     """The paper's 4-model 12-workload App study: the batched provisioner
-    emits a plan identical to the scalar oracle."""
+    emits a plan identical to the scalar oracle under both budget
+    splits."""
     from repro.core.experiments import fitted_context
     from repro.serving.workload import twelve_workloads
     ctx = fitted_context()
     specs = twelve_workloads()
-    scalar = prov.provision(specs, ctx.profiles, ctx.hw, engine="scalar")
-    vec = prov.provision(specs, ctx.profiles, ctx.hw, engine="vec")
+    scalar = prov.provision(specs, ctx.profiles, ctx.hw, engine="scalar",
+                            budget=budget)
+    vec = prov.provision(specs, ctx.profiles, ctx.hw, engine="vec",
+                         budget=budget)
     assert plan_key(vec) == plan_key(scalar)
-    # and the default engine is the vectorized one
-    assert plan_key(prov.provision(specs, ctx.profiles, ctx.hw)) \
-        == plan_key(scalar)
+    if budget == "queueing":
+        # and the defaults are: vectorized engine, queueing budget
+        assert plan_key(prov.provision(specs, ctx.profiles, ctx.hw)) \
+            == plan_key(scalar)
+
+
+def test_budget_terms_batched_matches_scalar_in_cluster():
+    """The VecCluster's cached per-entry budget thresholds equal the
+    scalar `BudgetModel.budget_ms` (and the batched `budget_ms_vec`)
+    to <= 1e-9 for both modes."""
+    from repro.core.queueing import resolve
+    rng = np.random.default_rng(7)
+    profiles = _profiles()
+    for budget in ("half", "queueing"):
+        bm = resolve(budget)
+        cl = pmv.VecCluster(V5E, budget=budget)
+        entries = []
+        q = cl.add_device()
+        for i in range(6):
+            m = str(rng.choice(["light", "mid", "heavy"]))
+            s = WorkloadSpec(f"W{i}", m, float(rng.uniform(60, 400)),
+                             float(rng.uniform(5, 300)))
+            b = int(rng.integers(1, 33))
+            cl.add_entry(q, s, profiles[m], b, 0.2)
+            entries.append((s, b))
+        ref = np.array([bm.budget_ms(s.slo_ms, s.rate_rps, b)
+                        for (s, b) in entries])
+        got = cl.budget_ms[0, :len(entries)]
+        np.testing.assert_allclose(got, ref, **TOL)
+        vec = bm.budget_ms_vec(
+            np.array([s.slo_ms for s, _ in entries]),
+            np.array([s.rate_rps for s, _ in entries]),
+            np.array([float(b) for _, b in entries]))
+        np.testing.assert_allclose(vec, ref, **TOL)
 
 
 def test_ffd_and_online_engines_identical():

@@ -194,19 +194,23 @@ def test_self_grant_meets_half_slo_budget():
 
 def test_self_grant_clears_predicted_violations_at_scale():
     """Pre-fix the m=100 synthetic sweep predicted 8 violations — all
-    solo fresh-device anchors.  Post-fix the model predicts zero."""
+    solo fresh-device anchors.  Post-fix the model predicts zero.
+    (A half-budget regression test: the Theorem-1 throttling residual is
+    defined against the paper's T_slo/2 split.)"""
     from repro.core.experiments import fitted_context
     from repro.serving.workload import synthetic_workloads
     ctx5 = fitted_context("tpu-v5e")
     ctx4 = fitted_context("tpu-v4")
     profiles = {ctx5.hw.name: ctx5.profiles, ctx4.hw.name: ctx4.profiles}
     specs = synthetic_workloads(100, 0)
-    plan, hw = prov.provision_cheapest(specs, profiles, [ctx5.hw, ctx4.hw])
-    assert prov.predicted_violations(plan, profiles[hw.name], hw) == []
+    plan, hw = prov.provision_cheapest(specs, profiles, [ctx5.hw, ctx4.hw],
+                                       budget="half")
+    assert prov.predicted_violations(plan, profiles[hw.name], hw,
+                                     budget="half") == []
     # both engines apply the identical self-grant
     oracle, hw_o = prov.provision_cheapest(specs, profiles,
                                            [ctx5.hw, ctx4.hw],
-                                           engine="scalar")
+                                           engine="scalar", budget="half")
     assert hw_o.name == hw.name
     assert [(p.workload.name, p.gpu, round(p.r, 9)) for p in oracle.placements] \
         == [(p.workload.name, p.gpu, round(p.r, 9)) for p in plan.placements]

@@ -1,0 +1,251 @@
+"""Queueing-aware SLO budget split: t_queue invariants, budget solver
+properties, and the never-looser-than-half-split guarantee.
+
+Property tests run under hypothesis when available and skip cleanly on
+bare environments (`tests._hypothesis_stub`); the unit tests alongside
+them always run and cover the same invariants on fixed grids.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # bare env: property tests skip, unit tests run
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.core import provisioner as prov
+from repro.core.queueing import (BudgetModel, HALF, QUEUEING, QueueingDelay,
+                                 t_queue, resolve)
+from repro.core.types import V5E, WorkloadSpec
+from tests.test_perf_model import make_coeffs
+
+
+def _profiles():
+    return {
+        "light": make_coeffs(k1=0.002, k2=0.4, k3=0.8, k5=0.05),
+        "mid": make_coeffs(k1=0.01, k2=2.0, k3=3.0),
+        "heavy": make_coeffs(k1=0.02, k2=5.0, k3=8.0, k5=0.3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# t_queue invariants
+# ---------------------------------------------------------------------------
+
+def test_t_queue_zero_at_b1_zero_burst():
+    """A non-batching server under deterministic (zero-burst) arrivals
+    queues not at all while stable."""
+    qd = t_queue(1, 100.0, 5.0, burstiness=0.0)
+    assert qd.expected == 0.0
+    assert qd.tail == 0.0
+    assert qd.t_acc_mean == 0.0 and qd.t_acc_tail == 0.0
+
+
+def test_t_queue_monotone_in_batch_at_fixed_utilization():
+    """For fixed arrival rate and utilization (service time scaling with
+    the batch, as the physical t_inf(b) does), a larger configured batch
+    never shortens the wait: accumulation grows linearly while the
+    utilization term stays constant."""
+    for rate in (30.0, 120.0, 400.0):
+        for rho in (0.2, 0.5, 0.9):
+            r_ms = rate / 1000.0
+            prev = None
+            for b in range(1, 65):
+                qd = t_queue(b, rate, rho * b / r_ms)
+                assert abs(qd.rho - rho) < 1e-9
+                if prev is not None:
+                    assert qd.expected >= prev.expected - 1e-12, (rate, rho, b)
+                    assert qd.tail >= prev.tail - 1e-12, (rate, rho, b)
+                prev = qd
+
+
+def test_t_queue_monotone_in_utilization():
+    """For fixed (b, R), longer service (higher utilization) never
+    shortens the wait; the wait diverges as rho -> 1."""
+    b, rate = 8, 200.0
+    prev = 0.0
+    for frac in np.linspace(0.05, 0.95, 19):
+        t_inf = frac * b / (rate / 1000.0)     # rho == frac
+        qd = t_queue(b, rate, t_inf)
+        assert abs(qd.rho - frac) < 1e-9
+        assert qd.expected >= prev - 1e-12
+        prev = qd.expected
+    assert math.isinf(t_queue(b, rate, 1.01 * b / (rate / 1000.0)).tail)
+
+
+def test_t_queue_zero_rate_never_queues():
+    """rate_rps=0 (no arrivals) must yield zero delay — not a division
+    error — in the scalar model, the scalar solver, and the batched
+    solver alike, and a zero-rate workload must provision end-to-end."""
+    for b in (1, 4, 64):
+        qd = t_queue(b, 0.0, 50.0)
+        assert qd.expected == 0.0 and qd.tail == 0.0 and qd.rho == 0.0
+    assert QUEUEING.budget_ms(100.0, 0.0, 8) == 50.0    # cap at T_slo/2
+    vec = QUEUEING.budget_ms_vec(np.array([100.0]), np.array([0.0]),
+                                 np.array([8.0]))
+    assert vec[0] == QUEUEING.budget_ms(100.0, 0.0, 8)
+    plan = prov.provision([WorkloadSpec("Z", "mid", 150.0, 0.0)],
+                          _profiles(), V5E)
+    assert len(plan.placements) == 1 and plan.placements[0].r > 0
+
+
+def test_t_queue_tail_dominates_mean():
+    for b in (1, 4, 16, 64):
+        qd = t_queue(b, 150.0, 10.0, quantile=0.99)
+        assert qd.tail >= qd.expected - 1e-12
+        assert qd.t_util_tail >= qd.t_util_mean - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 64), rate=st.floats(1.0, 500.0),
+       rho=st.floats(0.01, 0.95))
+def test_t_queue_properties_randomized(b, rate, rho):
+    r_ms = rate / 1000.0
+    qd = t_queue(b, rate, rho * b / r_ms)
+    assert qd.t_acc_mean >= 0 and qd.t_util_mean >= 0
+    assert qd.tail >= qd.expected - 1e-12
+    # one extra unit of batch never helps (fixed R and utilization)
+    qd2 = t_queue(b + 1, rate, rho * (b + 1) / r_ms)
+    assert qd2.tail >= qd.tail - 1e-9
+    assert qd2.expected >= qd.expected - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Budget solver
+# ---------------------------------------------------------------------------
+
+def test_budget_half_mode_is_exact_half():
+    for slo in (60.0, 100.0, 237.5):
+        assert HALF.budget_ms(slo, 123.0, 7) == slo / 2.0
+
+
+def test_budget_never_exceeds_half_split():
+    """The queueing-aware budget is capped at T_slo/2: allocations are
+    never looser than the paper's split."""
+    for slo in (60.0, 120.0, 240.0):
+        for rate in (10.0, 60.0, 250.0):
+            for b in (1, 4, 16, 64):
+                B = QUEUEING.budget_ms(slo, rate, b)
+                assert 0.0 <= B <= slo / 2.0 + 1e-12
+
+
+def test_budget_solution_satisfies_slo_equation():
+    """B + t_queue_tail(b, R, B) + slack <= T_slo at the solution (when
+    the T_slo/2 cap is not binding)."""
+    bm = QUEUEING
+    for slo, rate, b in [(90.0, 250.0, 16), (240.0, 60.0, 7),
+                         (60.0, 120.0, 3), (150.0, 300.0, 20)]:
+        B = bm.budget_ms(slo, rate, b)
+        assert B > 0
+        tail = t_queue(b, rate, B, quantile=bm.quantile,
+                       burstiness=bm.burstiness).tail
+        assert B + tail <= slo * (1.0 - bm.slack_frac) + 1e-6
+        if B < slo / 2.0 - 1e-9:       # cap not binding: solution is tight
+            B2 = min(B * 1.05, slo)
+            tail2 = t_queue(b, rate, B2, quantile=bm.quantile,
+                            burstiness=bm.burstiness).tail
+            assert B2 + tail2 > slo * (1.0 - bm.slack_frac)
+
+
+def test_budget_vec_matches_scalar_oracle():
+    """Batched budget evaluation pinned to the scalar bisection <= 1e-9
+    across a randomized (slo, rate, batch) grid."""
+    rng = np.random.default_rng(0)
+    slo = rng.uniform(40.0, 400.0, size=200)
+    rate = rng.uniform(5.0, 500.0, size=200)
+    b = rng.integers(1, 65, size=200).astype(float)
+    for bm in (QUEUEING, HALF,
+               BudgetModel(mode="queueing", quantile=0.9, slack_frac=0.1)):
+        vec = bm.budget_ms_vec(slo, rate, b)
+        ref = np.array([bm.budget_ms(s, r, int(k))
+                        for s, r, k in zip(slo, rate, b)])
+        np.testing.assert_allclose(vec, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_resolve_api():
+    assert resolve("half") is HALF
+    assert resolve("queueing") is QUEUEING
+    bm = BudgetModel(quantile=0.9)
+    assert resolve(bm) is bm
+    with pytest.raises(ValueError):
+        resolve("thirds")
+    with pytest.raises(ValueError):
+        BudgetModel(mode="quarters")
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 under the queueing budget: never looser than the half split
+# ---------------------------------------------------------------------------
+
+def test_theorem1_never_looser_than_half_split():
+    """For every spec where both modes are feasible, the queueing-aware
+    (b, r_lower) allocates at least as much as the half split: the batch
+    matches Eq. 17 and r_lower never shrinks."""
+    profiles = _profiles()
+    rng = np.random.default_rng(1)
+    checked = 0
+    for _ in range(200):
+        m = str(rng.choice(["light", "mid", "heavy"]))
+        s = WorkloadSpec("W", m, float(rng.uniform(60.0, 400.0)),
+                         float(rng.uniform(5.0, 300.0)))
+        c = profiles[m]
+        try:
+            b_h = prov.appropriate_batch(s, c, V5E, budget="half")
+            r_h = prov.resource_lower_bound(s, c, V5E, b_h, budget="half")
+        except prov.InfeasibleError:
+            continue
+        b_q = prov.appropriate_batch(s, c, V5E, budget="queueing")
+        r_q = prov.resource_lower_bound(s, c, V5E, b_q, budget="queueing")
+        assert b_q <= b_h               # only the degenerate-budget shrink
+        if b_q == b_h:
+            assert r_q >= r_h - 1e-12, (s.slo_ms, s.rate_rps, b_q)
+        checked += 1
+    assert checked > 50
+
+
+def test_queueing_infeasible_clamps_to_full_device():
+    """A spec whose TIGHTENED budget is unreachable on a full device is
+    clamped to R_MAX (honest residual) instead of raising, as long as
+    the half split is feasible; a spec infeasible even at T_slo/2 still
+    raises in both modes."""
+    profiles = _profiles()
+    c = profiles["heavy"]
+    clamped = None
+    for rate in np.arange(20.0, 400.0, 5.0):
+        s = WorkloadSpec("W", "heavy", 80.0, float(rate))
+        try:
+            b = prov.appropriate_batch(s, c, V5E, budget="half")
+            r_h = prov.resource_lower_bound(s, c, V5E, b, budget="half")
+        except prov.InfeasibleError:
+            continue
+        r_q = prov.resource_lower_bound(s, c, V5E, b, budget="queueing")
+        if r_q == prov.R_MAX and r_h < prov.R_MAX:
+            clamped = (s, b)
+            break
+    assert clamped is not None, "expected a clamped spec in the sweep"
+    # infeasible even at T_slo/2 raises identically in both modes
+    s_bad = WorkloadSpec("X", "heavy", 1.0, 10.0)
+    for budget in ("half", "queueing"):
+        with pytest.raises(prov.InfeasibleError):
+            prov.resource_lower_bound(s_bad, c, V5E, 8, budget=budget)
+
+
+@settings(max_examples=40, deadline=None)
+@given(slo=st.floats(60.0, 400.0), rate=st.floats(5.0, 300.0),
+       model=st.sampled_from(["light", "mid", "heavy"]))
+def test_never_looser_randomized(slo, rate, model):
+    profiles = _profiles()
+    s = WorkloadSpec("W", model, slo, rate)
+    c = profiles[model]
+    try:
+        b = prov.appropriate_batch(s, c, V5E, budget="half")
+        r_h = prov.resource_lower_bound(s, c, V5E, b, budget="half")
+    except prov.InfeasibleError:
+        return
+    b_q = prov.appropriate_batch(s, c, V5E, budget="queueing")
+    if b_q == b:
+        r_q = prov.resource_lower_bound(s, c, V5E, b_q, budget="queueing")
+        assert r_q >= r_h - 1e-12

@@ -61,17 +61,39 @@ def test_engines_byte_identical(setup, scenario):
     for w in a.request_latencies:
         assert np.array_equal(a.request_latencies[w],
                               b.request_latencies[w]), w
+        assert np.array_equal(a.request_waits[w], b.request_waits[w]), w
     assert a.per_workload == b.per_workload
     assert a.timeline == b.timeline
     assert a.stats["n_passes"] == b.stats["n_passes"]
     assert a.stats["n_requests"] == b.stats["n_requests"]
     assert a.stats["peak_window"] == b.stats["peak_window"]
+    for key in ("e2e_p50_ms", "e2e_p99_ms", "wait_mean_ms", "wait_p99_ms"):
+        assert a.stats[key] == b.stats[key], key
 
 
 def test_unknown_engine_rejected(setup):
     ctx, plan, mods = setup
     with pytest.raises(ValueError):
         simulate_plan(plan, mods, ctx.hw, duration_s=1.0, engine="cuda")
+
+
+@pytest.mark.parametrize("budget", ["half", "queueing"])
+def test_engines_byte_identical_per_budget(setup, budget):
+    """Plans from BOTH budget splits simulate byte-identically across
+    engines (the queueing-aware plan has different allocations/devices,
+    so this exercises fresh co-location states)."""
+    ctx, _, mods = setup
+    plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw,
+                          budget=budget)
+    a = simulate_plan(plan, mods, ctx.hw, duration_s=4.0, engine="scalar",
+                      poisson=True, seed=11)
+    b = simulate_plan(plan, mods, ctx.hw, duration_s=4.0, engine="vec",
+                      poisson=True, seed=11)
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+        assert np.array_equal(a.request_waits[w], b.request_waits[w]), w
+    assert a.per_workload == b.per_workload
 
 
 @pytest.mark.parametrize("engine", ["scalar", "vec"])
