@@ -1,0 +1,240 @@
+"""Dynamic-load sweep: static plan vs closed-loop controller over the
+trace suite (the runtime half of the paper, Sec. 4.2/4.4).
+
+For each cluster size m, the static queueing-aware plan is simulated
+under every trace scenario twice — once as-is and once with the online
+controller (`repro.serving.controller.Controller`) driving the
+simulator's cluster-scoped ``adjust_fn`` hook — and the rows report
+simulated SLO violations (rate targets corrected by each trace's
+time-weighted mean scale), reconfiguration counts, controller wall-clock
+overhead (``reconfig_latency_ms``, the paper's Sec. 5.5 number), final
+plan cost, and simulator throughput.
+
+Scenarios:
+  no_drift   constant-rate control case — the controller must do NOTHING
+             (zero reconfigurations, plan bit-identical); enforced by
+             --check.
+  diurnal    2x smooth ramp over the horizon (deterministic arrivals) —
+             the headline closed-loop case: the static plan degrades,
+             the controlled plan must violate strictly less.
+  spike      2.5x flash crowd for 2 s mid-run (Poisson arrivals) — a
+             reactive controller cannot un-blow a short spike's p99, but
+             must never be WORSE and drains the backlog faster (the
+             per-request violation-rate column shows the win).
+  churn      10% of workloads depart / 10% arrive mid-run — exercises
+             remove_workload / add_workload reconciliation.
+
+Run:  PYTHONPATH=src python -m benchmarks.dynamic_sweep [--quick] [--check]
+      --quick        m <= 100 only (CI per-PR smoke; uploads artifact)
+      --sizes M,...  explicit cluster sizes
+      --scenarios s, explicit scenario subset (default: all four)
+      --check        exit non-zero if any scenario's controlled
+                     violations exceed the static plan's, if a no-drift
+                     run reconfigures at all (or its plan is not
+                     bit-identical), or if an m=1000 controlled sim
+                     exceeds the scale_sweep wall-clock bound
+      --sim-floor N  exit non-zero if any sim ran below N events/s
+
+Writes a JSON row dump (default benchmarks/dynamic_sweep_results.json —
+gitignored; CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SIZES_FULL = (100, 1000)
+SIZES_QUICK = (100,)
+SCENARIOS = ("no_drift", "diurnal", "spike", "churn")
+SIM_TARGET_S = 60.0      # same bound as scale_sweep's m=1000 full sim
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "dynamic_sweep_results.json")
+
+
+def _make_trace(scenario: str, names, horizon_ms: float, seed: int):
+    from repro.serving import traces
+    if scenario == "no_drift":
+        return traces.constant(names, horizon_ms), False
+    if scenario == "diurnal":
+        return traces.diurnal(names, horizon_ms, peak=2.0), False
+    if scenario == "spike":
+        return traces.step_spike(names, horizon_ms,
+                                 at_ms=0.4 * horizon_ms,
+                                 duration_ms=0.2 * horizon_ms,
+                                 scale=2.5), True
+    if scenario == "churn":
+        return traces.random_churn(names, horizon_ms, depart_frac=0.1,
+                                   arrive_frac=0.1, seed=seed), False
+    raise ValueError(f"unknown scenario {scenario!r}")
+
+
+def _scaled_specs(specs, tr, horizon_ms):
+    """Specs with each rate replaced by its trace-mean expectation, so
+    `SimResult.violations`' 95%-of-target rate check measures against
+    what the trace actually offered (one violation definition, reused)."""
+    import dataclasses
+    return {s.name: dataclasses.replace(
+        s, rate_rps=s.rate_rps * tr.mean_scale(s.name, horizon_ms))
+        for s in specs}
+
+
+def _violations(res, specs, tr, horizon_ms):
+    return res.violations(_scaled_specs(specs, tr, horizon_ms))
+
+
+def _mean_violation_rate(res, specs) -> float:
+    import numpy as np
+    rates = res.violation_rates({s.name: s for s in specs})
+    return float(np.mean(list(rates.values())))
+
+
+def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
+    from repro.core import provisioner as prov
+    from repro.core.experiments import fitted_context
+    from repro.serving.controller import Controller
+    from repro.serving.simulator import simulate_full
+    from repro.serving.workload import models, synthetic_workloads
+
+    ctx5 = fitted_context("tpu-v5e")
+    ctx4 = fitted_context("tpu-v4")
+    profiles_by_hw = {ctx5.hw.name: ctx5.profiles,
+                      ctx4.hw.name: ctx4.profiles}
+    hardware = [ctx5.hw, ctx4.hw]
+    mods = models()
+    horizon_ms = sim_duration_s * 1000.0
+
+    rows = []
+    for m in sizes:
+        specs = synthetic_workloads(m, seed)
+        names = [s.name for s in specs]
+        t0 = time.perf_counter()
+        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+        prov_wall = time.perf_counter() - t0
+        profiles = profiles_by_hw[hw.name]
+        for scenario in scenarios:
+            tr, poisson = _make_trace(scenario, names, horizon_ms, seed)
+            t0 = time.perf_counter()
+            res_s = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
+                                  seed=seed, poisson=poisson, trace=tr)
+            static_wall = time.perf_counter() - t0
+            ctl = Controller(plan, profiles, hw)
+            t0 = time.perf_counter()
+            res_c = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
+                                  seed=seed, poisson=poisson, trace=tr,
+                                  adjust_fn=ctl, adjust_scope="cluster",
+                                  adjust_period_s=1.0)
+            ctl_wall = time.perf_counter() - t0
+            row = {
+                "bench": "dynamic_sweep", "m": m, "scenario": scenario,
+                "hardware": hw.name, "n_devices": plan.n_gpus,
+                "provision_wall_s": round(prov_wall, 3),
+                "static_violations": len(_violations(res_s, specs, tr,
+                                                     horizon_ms)),
+                "controlled_violations": len(_violations(res_c, specs, tr,
+                                                         horizon_ms)),
+                "static_violation_rate":
+                    round(_mean_violation_rate(res_s, specs), 4),
+                "controlled_violation_rate":
+                    round(_mean_violation_rate(res_c, specs), 4),
+                "n_reconfigs": int(res_c.stats["n_reconfigs"]),
+                "n_edits": len(ctl.edits),
+                "reconfig_latency_ms":
+                    round(res_c.stats["reconfig_latency_ms"], 1),
+                "plan_identical": ctl.plan is plan,
+                "static_cost_per_hour": round(plan.cost_per_hour(), 2),
+                "final_cost_per_hour":
+                    round(ctl.plan.cost_per_hour(), 2),
+                "mean_cost_per_hour": round(
+                    sum(c for _, c in ctl.cost_series)
+                    / max(len(ctl.cost_series), 1), 2),
+                "static_sim_wall_s": round(static_wall, 3),
+                "controlled_sim_wall_s": round(ctl_wall, 3),
+                "sim_events_per_s": round(res_c.stats["events_per_s"]),
+                "sim_duration_s": sim_duration_s,
+            }
+            rows.append(row)
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows
+
+
+def run():
+    """benchmarks.run integration: the quick tier only."""
+    return sweep(SIZES_QUICK, SCENARIOS)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="m <= 100 only (per-PR CI smoke)")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated m values (overrides --quick)")
+    ap.add_argument("--scenarios", type=str, default=None,
+                    help="comma-separated scenario subset "
+                         f"(default: {','.join(SCENARIOS)})")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim-duration", type=float, default=10.0)
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    ap.add_argument("--check", action="store_true",
+                    help="fail on controlled > static violations, on any "
+                         "no-drift reconfiguration, or on an m=1000 "
+                         f"controlled sim over {SIM_TARGET_S:.0f} s")
+    ap.add_argument("--sim-floor", type=float, default=0.0,
+                    help="fail if any sim ran below this many events/s "
+                         "(0 = off)")
+    args = ap.parse_args(argv)
+
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = SIZES_QUICK if args.quick else SIZES_FULL
+    scenarios = (tuple(args.scenarios.split(",")) if args.scenarios
+                 else SCENARIOS)
+    rows = sweep(sizes, scenarios, seed=args.seed,
+                 sim_duration_s=args.sim_duration)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+    status = 0
+    for row in rows:
+        tag = f"m={row['m']} {row['scenario']}"
+        ok = row["controlled_violations"] <= row["static_violations"]
+        print(f"# {tag}: static={row['static_violations']} "
+              f"controlled={row['controlled_violations']} "
+              f"(rates {row['static_violation_rate']:.3f} -> "
+              f"{row['controlled_violation_rate']:.3f}; "
+              f"{row['n_reconfigs']} reconfigs, "
+              f"{row['reconfig_latency_ms']:.0f} ms overhead; "
+              f"{'PASS' if ok else 'FAIL'})")
+        if args.check and not ok:
+            status = 1
+        if row["scenario"] == "no_drift":
+            noop = row["n_reconfigs"] == 0 and row["plan_identical"]
+            print(f"# {tag}: no-op check "
+                  f"({'PASS' if noop else 'FAIL'}: "
+                  f"{row['n_reconfigs']} reconfigs, plan_identical="
+                  f"{row['plan_identical']})")
+            if args.check and not noop:
+                status = 1
+        if row["m"] == 1000:
+            fast = row["controlled_sim_wall_s"] < SIM_TARGET_S
+            print(f"# {tag}: controlled full sim "
+                  f"{row['controlled_sim_wall_s']:.2f}s "
+                  f"{'<' if fast else '>='} {SIM_TARGET_S:.0f}s "
+                  f"({'PASS' if fast else 'FAIL'})")
+            if args.check and not fast:
+                status = 1
+        if args.sim_floor and row["sim_events_per_s"] < args.sim_floor:
+            print(f"# {tag}: throughput {row['sim_events_per_s']:.0f} "
+                  f"events/s < {args.sim_floor:.0f} floor (FAIL)")
+            status = 1
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import ablation, accuracy, interference, \
+    from benchmarks import ablation, accuracy, dynamic_sweep, interference, \
         kernels_micro, provisioning, roofline, runtime_behavior, scale_sweep
 
     modules = [
@@ -21,6 +21,7 @@ def main() -> None:
         ("provisioning(Table1,Figs14-19)", provisioning),
         ("runtime(Figs15-21)", runtime_behavior),
         ("scale_sweep(Sec5.4,quick)", scale_sweep),
+        ("dynamic_sweep(Sec4.2/4.4,quick)", dynamic_sweep),
         ("kernels_micro", kernels_micro),
         ("interference_ablation", ablation),
         ("roofline", roofline),

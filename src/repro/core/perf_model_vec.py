@@ -297,6 +297,49 @@ class VecCluster:
         self.r[q, :k] = r_row[:k]
         self._refresh_row(q)
 
+    def set_budget(self, budget: BudgetLike) -> None:
+        """Swap the budget model (online burstiness update) and refresh
+        every resident's cached inference budget in one vectorized
+        bisection call — new entries pick the new model up via add_entry."""
+        self.bm = resolve(budget)
+        if self.d == 0 or not self.mask[:self.d].any():
+            return
+        rows, cols = np.nonzero(self.mask[:self.d])
+        slo = np.array([self.entries[q][i][0].slo_ms
+                        for q, i in zip(rows, cols)])
+        rate = np.array([self.entries[q][i][0].rate_rps
+                         for q, i in zip(rows, cols)])
+        self.budget_ms[rows, cols] = self.bm.budget_ms_vec(
+            slo, rate, self.b[rows, cols])
+
+    def remove_entry(self, q: int, i: int) -> None:
+        """Remove resident i from device q (workload departure /
+        migration source), shifting later residents left so entry order
+        — and therefore downstream plan/placement order — is preserved.
+        O(residents of q): the device's cached invariants are refreshed,
+        every other device is untouched."""
+        k = int(self.n[q])
+        if not 0 <= i < k:
+            raise IndexError(f"device {q} has {k} entries, no index {i}")
+        sl_from = np.s_[q, i + 1:k]
+        sl_to = np.s_[q, i:k - 1]
+        for f in COEFF_FIELDS:
+            a = getattr(self.ca, f)
+            a[sl_to] = a[sl_from]
+            a[q, k - 1] = _PAD.get(f, 0.0)
+        for a, fill in ((self.b, 0.0), (self.r, 1.0),
+                        (self.budget_ms, np.inf), (self.k_act, 1.0),
+                        (self.power, 0.0), (self.cache, 0.0),
+                        (self.t_schk, 0.0)):
+            a[sl_to] = a[sl_from]
+            a[q, k - 1] = fill
+        self.t_io[q, i:k - 1] = self.t_io[q, i + 1:k]
+        self.t_io[q, k - 1] = 0.0
+        self.mask[q, k - 1] = False
+        self.n[q] = k - 1
+        del self.entries[q][i]
+        self._refresh_row(q)
+
     def _refresh_row(self, q: int) -> None:
         """Recompute the cached solo invariants + sums for one device."""
         k = int(self.n[q])

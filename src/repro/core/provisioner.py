@@ -43,18 +43,31 @@ class InfeasibleError(RuntimeError):
 
 def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
                       hw: HardwareSpec, *, b_max: int = 64,
-                      budget: BudgetLike = QUEUEING) -> int:
+                      budget: BudgetLike = QUEUEING,
+                      batch: str = "eq17") -> int:
     """Eq. (17): smallest batch sustaining the arrival rate within T_slo/2.
 
     R is req/s; the model works in ms, so R_ms = R / 1000.
 
-    The batch choice is shared by both budget modes (the queueing-aware
+    ``batch="eq17"`` (default): the paper's closed-form batch.  The
+    batch choice is shared by both budget modes (the queueing-aware
     split reallocates T_slo between waiting and service AT this batch,
     which is what keeps its allocations never looser than the paper's
     half split).  Under ``budget="queueing"`` the batch is additionally
     shrunk — in practice a no-op safety net — while the solved inference
     budget at b is degenerate (<= 0), which can only happen when the
     accumulation tail (b-1)/R_ms eats the whole SLO.
+
+    ``batch="joint"`` (opt-in, beyond-paper): re-optimize b JOINTLY with
+    the bisection-solved budget — scan every stable candidate b (batch
+    interval b/R_ms covering the solved inference budget B(b), i.e. the
+    steady-state condition behind Eq. 17) and keep Eq. 17's b unless
+    some candidate's Theorem-1 solo lower bound r_lower is STRICTLY
+    smaller (tie-break: smaller batch, less accumulation wait).  Eq. 17
+    maximizes b for the fixed half split; with a b-dependent budget a
+    smaller batch can trade accumulation slack for service budget and
+    shave whole r_units off the lower bound — never-worse by
+    construction since Eq. 17's b stays in the candidate set.
     """
     r_ms = spec.rate_rps / 1000.0
     num = spec.slo_ms * r_ms * hw.pcie_bw
@@ -65,7 +78,38 @@ def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
     if bm.mode != "half":
         while b > 1 and bm.budget_ms(spec.slo_ms, spec.rate_rps, b) <= 1e-6:
             b -= 1
-    return b
+    if batch == "eq17":
+        return b
+    if batch != "joint":
+        raise ValueError(f"unknown batch mode {batch!r} "
+                         "(expected 'eq17' or 'joint')")
+
+    def _r_lower_at(bb: int) -> Optional[float]:
+        B = bm.budget_ms(spec.slo_ms, spec.rate_rps, bb)
+        if B <= 1e-6 or (r_ms > 0.0 and bb / r_ms < B - 1e-9):
+            return None          # degenerate budget / unstable at B
+        try:
+            return resource_lower_bound(spec, c, hw, bb, budget=bm)
+        except InfeasibleError:
+            return None
+    best_b, best_r = b, _r_lower_at(b)
+    for bb in range(1, b_max + 1):   # ascending: ties keep the smaller b
+        if bb == b:
+            continue
+        r = _r_lower_at(bb)
+        if r is None:
+            continue
+        if best_r is None or r < best_r - 1e-12:
+            best_b, best_r = bb, r
+        elif (r >= R_MAX - 1e-12 and best_r >= R_MAX - 1e-12
+              and bb > best_b):
+            # every candidate clamps to a full device: the budget is out
+            # of reach either way, so take the batch with the most
+            # throughput (largest b) to minimize the rate shortfall
+            best_b = bb
+    # best_r None: no candidate is feasible — return Eq. 17's b so the
+    # caller raises/clamps exactly as it would without joint mode
+    return best_b
 
 
 def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
@@ -193,7 +237,8 @@ def self_grant(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
 
 def _prepare(specs: Sequence[WorkloadSpec],
              profiles: Dict[str, WorkloadCoefficients],
-             hw: HardwareSpec, *, budget: BudgetLike = QUEUEING
+             hw: HardwareSpec, *, budget: BudgetLike = QUEUEING,
+             batch: str = "eq17"
              ) -> List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]:
     """Alg. 1 lines 2-3: (b_appr, r_lower) per workload, sorted by
     r_lower descending."""
@@ -201,7 +246,7 @@ def _prepare(specs: Sequence[WorkloadSpec],
     prepared = []
     for s in specs:
         c = profiles[s.model]
-        b = appropriate_batch(s, c, hw, budget=bm)
+        b = appropriate_batch(s, c, hw, budget=bm, batch=batch)
         rl = resource_lower_bound(s, c, hw, b, budget=bm)
         prepared.append((s, c, b, rl))
     prepared.sort(key=lambda t: -t[3])
@@ -211,7 +256,8 @@ def _prepare(specs: Sequence[WorkloadSpec],
 def provision(specs: Sequence[WorkloadSpec],
               profiles: Dict[str, WorkloadCoefficients],
               hw: HardwareSpec, *, engine: str = "vec",
-              budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
+              budget: BudgetLike = QUEUEING,
+              batch: str = "eq17") -> ProvisioningPlan:
     """Cost-efficient interference-aware provisioning (Alg. 1).
 
     ``engine="vec"`` scores all open devices through the batched model in
@@ -221,13 +267,17 @@ def provision(specs: Sequence[WorkloadSpec],
     ``budget`` selects the SLO split handed to Theorem 1 / Alg. 2:
     ``"queueing"`` (default) budgets a tail queueing-delay term per
     workload; ``"half"`` is the paper-faithful fixed T_slo/2 split.
+
+    ``batch`` selects Theorem 1's batch size: ``"eq17"`` (default,
+    paper-faithful) or ``"joint"`` (re-optimized jointly with the
+    solved budget split — see `appropriate_batch`).
     """
     bm = resolve(budget)
     if engine == "vec":
-        return _provision_vec(specs, profiles, hw, bm)
+        return _provision_vec(specs, profiles, hw, bm, batch=batch)
     if engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
-    prepared = _prepare(specs, profiles, hw, budget=bm)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch)
 
     devs: List[_Dev] = [_Dev()]
     for (s, c, b, rl) in prepared:
@@ -276,13 +326,13 @@ def _argmin_inter(r_inter: "np.ndarray") -> int:
 
 def _provision_vec(specs: Sequence[WorkloadSpec],
                    profiles: Dict[str, WorkloadCoefficients],
-                   hw: HardwareSpec, budget: BudgetLike = QUEUEING
-                   ) -> ProvisioningPlan:
+                   hw: HardwareSpec, budget: BudgetLike = QUEUEING, *,
+                   batch: str = "eq17") -> ProvisioningPlan:
     """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
     scores every open device per placement, and the chosen device's
     invariants are refreshed incrementally."""
     bm = resolve(budget)
-    prepared = _prepare(specs, profiles, hw, budget=bm)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch)
 
     cl = pmv.VecCluster(hw, budget=bm)
     cl.add_device()
@@ -315,14 +365,15 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
 def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  profiles: Dict[str, WorkloadCoefficients],
                  hw: HardwareSpec, *, engine: str = "vec",
-                 budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
+                 budget: BudgetLike = QUEUEING,
+                 batch: str = "eq17") -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
     with Alg. 2 reallocation, or a fresh device.  The vec engine scores
     every existing device in a single `alloc_all` call."""
     bm = resolve(budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw, budget=bm)
+    b = appropriate_batch(spec, c, hw, budget=bm, batch=batch)
     rl = resource_lower_bound(spec, c, hw, b, budget=bm)
 
     devs: Dict[int, _Dev] = {}
@@ -378,6 +429,91 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
 
 # ---------------------------------------------------------------------------
+# Incremental plan edits (online control plane, paper Sec. 4.2/4.4):
+# resize / remove / migrate one workload of an existing plan without a
+# full Alg. 1 re-run.  Each edit touches only the devices involved —
+# the same-device resize re-runs Alg. 2 on ONE device, the migrate path
+# scores every device in a single vectorized `alloc_all` call — and each
+# has a scalar-oracle twin pinned by tests.
+# ---------------------------------------------------------------------------
+
+def remove_workload(plan: ProvisioningPlan, name: str) -> ProvisioningPlan:
+    """Drop one workload's placement (departure).  Remaining residents
+    keep their Alg. 2 grants — with less interference on the device they
+    can only get faster, so the plan stays feasible; reclaiming the
+    slack is the next resize's job."""
+    new_plan = ProvisioningPlan(hardware=plan.hardware)
+    new_plan.placements = [p for p in plan.placements
+                           if p.workload.name != name]
+    if len(new_plan.placements) == len(plan.placements):
+        raise KeyError(f"workload {name!r} not in plan")
+    new_plan.n_gpus = len({p.gpu for p in new_plan.placements})
+    return new_plan
+
+
+def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
+                    profiles: Dict[str, WorkloadCoefficients],
+                    hw: HardwareSpec, *, engine: str = "vec",
+                    budget: BudgetLike = QUEUEING,
+                    batch: str = "eq17") -> ProvisioningPlan:
+    """Re-place one workload under a NEW spec (arrival-rate / SLO drift):
+    recompute Theorem 1 at the new rate, re-run Alg. 2 on its CURRENT
+    device (the O(1-device) fast path — covers both growth, absorbing
+    more interference, and shrink, releasing slack), and fall back to
+    `migrate_workload` when the current device can no longer host it."""
+    bm = resolve(budget)
+    c = profiles[spec.model]
+    b = appropriate_batch(spec, c, hw, budget=bm, batch=batch)
+    rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+
+    cur = next((p for p in plan.placements if p.workload.name == spec.name),
+               None)
+    if cur is None:
+        raise KeyError(f"workload {spec.name!r} not in plan")
+    peers = [p for p in plan.placements
+             if p.gpu == cur.gpu and p.workload.name != spec.name]
+    residents = [(p.workload, profiles[p.workload.model], p.batch, p.r)
+                 for p in peers]
+    if engine == "vec":
+        r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, hw, budget=bm)
+    elif engine == "scalar":
+        r_a = alloc_gpus(_Dev(entries=residents), spec, c, b, rl, hw,
+                         budget=bm)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    if r_a is None:
+        return migrate_workload(plan, spec, profiles, hw, engine=engine,
+                                budget=bm, batch=batch)
+
+    peer_r = dict(zip((p.workload.name for p in peers), r_a[:-1]))
+    new_plan = ProvisioningPlan(hardware=plan.hardware)
+    for p in plan.placements:              # placement order preserved
+        if p.workload.name == spec.name:
+            new_plan.placements.append(Placement(
+                workload=spec, gpu=cur.gpu, r=float(r_a[-1]), batch=b))
+        elif p.gpu == cur.gpu:
+            new_plan.placements.append(Placement(
+                workload=p.workload, gpu=p.gpu,
+                r=float(peer_r[p.workload.name]), batch=p.batch))
+        else:
+            new_plan.placements.append(p)
+    new_plan.n_gpus = len({p.gpu for p in new_plan.placements})
+    return new_plan
+
+
+def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
+                     profiles: Dict[str, WorkloadCoefficients],
+                     hw: HardwareSpec, *, engine: str = "vec",
+                     budget: BudgetLike = QUEUEING,
+                     batch: str = "eq17") -> ProvisioningPlan:
+    """Move one workload to the minimum-interference device that can
+    host its (possibly updated) spec — remove + `add_workload`, so the
+    destination can also be a fresh device (`self_grant`)."""
+    return add_workload(remove_workload(plan, spec.name), spec, profiles,
+                        hw, engine=engine, budget=budget, batch=batch)
+
+
+# ---------------------------------------------------------------------------
 # Heterogeneous type selection (paper Sec. 5.3, Fig. 20)
 # ---------------------------------------------------------------------------
 
@@ -385,7 +521,8 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
                        profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
                        hardware: Sequence[HardwareSpec], *,
                        engine: str = "vec",
-                       budget: BudgetLike = QUEUEING
+                       budget: BudgetLike = QUEUEING,
+                       batch: str = "eq17"
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
     """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
@@ -393,7 +530,7 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
     for hw in hardware:
         try:
             plan = provision(specs, profiles_by_hw[hw.name], hw,
-                             engine=engine, budget=budget)
+                             engine=engine, budget=budget, batch=batch)
         except InfeasibleError as e:
             errors.append(str(e))
             continue

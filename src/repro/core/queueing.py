@@ -45,6 +45,7 @@ bit-for-bit); `budget="queueing"` is the provisioner-wide default.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from dataclasses import dataclass
@@ -131,9 +132,24 @@ class BudgetModel:
     slack_frac: float = 0.02
     burstiness: float = 1.0
 
+    # clamp range for online burstiness estimates (`with_burstiness`):
+    # the floor keeps a near-deterministic estimate from zeroing the
+    # utilization-wait term entirely, the ceiling keeps one pathological
+    # window from blowing every budget to the T_slo/2 cap.
+    BURSTINESS_LO = 0.25
+    BURSTINESS_HI = 8.0
+
     def __post_init__(self):
         if self.mode not in ("half", "queueing"):
             raise ValueError(f"unknown budget mode {self.mode!r}")
+
+    def with_burstiness(self, cv2: float) -> "BudgetModel":
+        """A copy with the arrival-burstiness scale replaced by a
+        (clamped) online CV^2 estimate — the control plane's hook for
+        adapting the budget split to the measured arrival process."""
+        return dataclasses.replace(
+            self, burstiness=min(self.BURSTINESS_HI,
+                                 max(self.BURSTINESS_LO, float(cv2))))
 
     def budget_ms(self, slo_ms: float, rate_rps: float, batch: int) -> float:
         """The inference-latency budget B replacing T_slo / 2."""

@@ -1,0 +1,631 @@
+"""Closed-loop control plane: online re-provisioning under dynamic load.
+
+The static pipeline (Alg. 1/2 + the queueing-aware budget split)
+provisions once at t=0; the paper's runtime half (Sec. 4.2: the
+inference workload placer is "periodically executed", Sec. 4.4: the GPU
+resource scaler reacts to load changes) has three moving parts, built
+here on the simulator's unified ``adjust_fn`` hook
+(``adjust_scope="cluster"``):
+
+  1. **Estimators** (`ArrivalEstimator`): per-workload EWMA arrival rate
+     and burstiness (squared coefficient of variation of inter-arrival
+     gaps) fed from each instance's ``recent_arrivals`` monitor window.
+     CV^2 ~ 0 on deterministic traces, ~ 1 on Poisson, >> 1 on spikes —
+     exactly the `BudgetModel.burstiness` scale, so the budget split
+     adapts to the measured arrival process (ROADMAP open item).
+
+  2. **Reconciler** (`Reconciler`): hysteresis-banded drift detection
+     (asymmetric up/down bands + consecutive-tick debounce so Poisson
+     noise never triggers) that, on sustained drift, re-solves the
+     queueing budget with the online burstiness estimate, re-optimizes
+     the batch size jointly with the split (``batch="joint"``), and
+     issues incremental plan edits — `provisioner.resize_workload`
+     (same-device Alg. 2 re-run), `remove_workload` (departures),
+     `migrate_workload` / `add_workload` (min-interference re-placement
+     incl. fresh devices) — each O(devices touched) through
+     `VecCluster`'s cached invariants, with the scalar engines as the
+     pinned oracle.
+
+  3. **Controller** (`Controller`): the ``adjust_fn`` adapter.  Each
+     control period it feeds the estimators, runs the reconciler, and
+     applies the resulting plan deltas to the live instances (r / batch
+     / gpu mutations the simulator turns into latency-table rebuilds and
+     migrations).  A drift-free run performs ZERO reconfigurations and
+     leaves the plan bit-identical — the no-op guarantee CI pins.
+
+Determinism: everything the controller observes (``recent_arrivals``
+slices of the pre-generated arrival streams) is byte-identical across
+simulator engines, so a controlled run is engine-identical too, modulo
+the wall-clock ``reconfig_latency_ms`` stat.  A `Controller` is
+STATEFUL — construct a fresh one per simulation run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import perf_model_vec as pmv
+from repro.core import provisioner as prov
+from repro.core.queueing import BudgetLike, QUEUEING, resolve
+from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
+                              WorkloadCoefficients, WorkloadSpec)
+from repro.serving.simulator import ServedInstance
+
+
+# ---------------------------------------------------------------------------
+# Online estimators
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ControllerConfig:
+    """Knobs for the estimator / hysteresis / reconciliation loop."""
+    alpha: float = 0.4           # EWMA weight for the arrival rate
+    burst_alpha: float = 0.3     # EWMA weight for inter-arrival moments
+    band_up: float = 0.15        # reconfigure when rate > (1+band_up)x plan
+    band_down: float = 0.30      # ... or rate < (1-band_down)x plan
+    noise_sigmas: float = 4.0    # widen bands to this many sigmas of the
+                                 # smoothed Poisson counting noise, so a
+                                 # noise-only run never breaches (the band
+                                 # is max(band, k*sigma/mean))
+    burst_band: float = 1.5      # ... or cv2 above budget burstiness by this
+    debounce_up: int = 1         # ticks before reacting to up-drift (fast:
+                                 # under-capacity compounds into backlog)
+    debounce_down: int = 3       # ticks before releasing capacity (slow:
+                                 # shrinking on noise is the expensive error)
+    debounce_burst: int = 3      # ticks before a burstiness-only re-budget
+                                 # (cv2 estimates are the noisiest signal)
+    headroom: float = 0.15       # provision up-drift to rate*(1+headroom)
+    drain_cap: float = 1.0       # backlog-drain demand cap, x estimated rate
+    depart_frac: float = 0.02    # est rate below this x plan rate: departed
+    depart_missed: float = 8.0   # expected arrivals missed in a zero-
+                                 # arrival stretch before declaring departure
+    min_gap_obs: int = 4         # gaps needed before trusting a cv2 update
+
+
+class ArrivalEstimator:
+    """EWMA arrival-rate + CV^2 burstiness from monitor-window arrivals.
+
+    Fed once per control period with the arrivals observed in that
+    window.  Inter-arrival gaps are chained across windows through the
+    last seen arrival so burstiness sees inter-burst gaps too — a spike
+    train's signature lives BETWEEN windows as much as within them.
+    """
+
+    def __init__(self, rate_rps: float, cfg: Optional[ControllerConfig] = None,
+                 burstiness: float = 1.0):
+        self.cfg = cfg or ControllerConfig()
+        self.rate_rps = float(rate_rps)   # prior: the provisioned rate
+        self.trend_rps = 0.0              # EWMA per-window rate delta
+        self.cv2 = float(burstiness)      # prior: the budget's burstiness
+        self.n_windows = 0
+        self.n_gaps = 0
+        self.ever_active = False          # any arrival seen at all
+        self.empty_ms = 0.0               # current zero-arrival stretch
+        self.window_ms = 1000.0           # last observation window
+        self._last_arrival: Optional[float] = None
+        self._gap_buf: List[float] = []   # gaps awaiting a moment update
+        self._g1: Optional[float] = None  # EWMA mean gap [ms]
+        self._g2: Optional[float] = None  # EWMA mean squared gap [ms^2]
+
+    @property
+    def projected_rps(self) -> float:
+        """Rate one control period ahead: EWMA estimates lag a ramp by
+        construction, so up-drift sizing extrapolates the trend (never
+        below the smoothed estimate — a falling trend is not projected,
+        shrinking is the hysteresis band's slow path)."""
+        return self.rate_rps + max(0.0, self.trend_rps)
+
+    def rate_sigma(self) -> float:
+        """Std of the smoothed rate estimate under Poisson counting
+        noise: sqrt(R / T_window) shrunk by the EWMA's variance factor
+        alpha / (2 - alpha) — what the hysteresis band must exceed for
+        noise-only input to stay quiet."""
+        var_factor = self.cfg.alpha / (2.0 - self.cfg.alpha)
+        lam = max(self.rate_rps * self.window_ms / 1000.0, 1.0)
+        return (math.sqrt(lam * var_factor) * 1000.0 / self.window_ms
+                if self.window_ms > 0 else 0.0)
+
+    def observe(self, arrivals: np.ndarray, window_ms: float) -> None:
+        cfg = self.cfg
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        inst_rate = arrivals.size * 1000.0 / max(window_ms, 1e-9)
+        prev = self.rate_rps
+        self.rate_rps += cfg.alpha * (inst_rate - self.rate_rps)
+        self.trend_rps += cfg.alpha * ((self.rate_rps - prev)
+                                       - self.trend_rps)
+        self.n_windows += 1
+        self.window_ms = window_ms
+
+        if arrivals.size == 0:
+            self.empty_ms += window_ms
+            return
+        self.empty_ms = 0.0
+        self.ever_active = True
+        if self._last_arrival is not None:
+            gaps = np.diff(np.concatenate([[self._last_arrival], arrivals]))
+        else:
+            gaps = np.diff(arrivals)
+        self._last_arrival = float(arrivals[-1])
+        # buffer gaps across windows so low-rate workloads (fewer than
+        # min_gap_obs arrivals per period) still accumulate burstiness
+        # evidence instead of discarding every window's gaps
+        self._gap_buf.extend(gaps.tolist())
+        if len(self._gap_buf) >= cfg.min_gap_obs:
+            g = np.asarray(self._gap_buf)
+            self._gap_buf = []
+            m1 = float(np.mean(g))
+            m2 = float(np.mean(g * g))
+            if self._g1 is None:
+                self._g1, self._g2 = m1, m2
+            else:
+                self._g1 += cfg.burst_alpha * (m1 - self._g1)
+                self._g2 += cfg.burst_alpha * (m2 - self._g2)
+            self.n_gaps += int(g.size)
+            if self._g1 > 0.0:
+                self.cv2 = max(0.0, self._g2 / (self._g1 * self._g1) - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Persistent plan state: the hot path for incremental edits
+# ---------------------------------------------------------------------------
+
+class PlanState:
+    """A live `VecCluster` mirror of the reconciler's current plan.
+
+    The provisioner-level edits (`resize_workload` & co.) are
+    plan-in/plan-out and rebuild their cluster state per call — exact,
+    oracle-friendly, but O(cluster) each, which at m=1000 puts the
+    controller's own latency (the Sec. 5.5 overhead number) in the tens
+    of seconds.  This mirror keeps the cluster's cached invariants
+    ALIVE across edits so each one costs only the devices it touches:
+    a same-device resize re-runs Alg. 2 against that device alone, a
+    migration scores every device in ONE vectorized `alloc_all`, and a
+    departure is a single `remove_entry`.  Allocation outcomes match
+    the sequential provisioner ops (entry order within a device differs,
+    which the model's symmetric sums make irrelevant) — pinned by
+    `tests/test_controller.py`; emptied devices are additionally reused
+    as migration targets instead of stranding them.
+    """
+
+    def __init__(self, plan: ProvisioningPlan,
+                 profiles: Dict[str, WorkloadCoefficients],
+                 hw: HardwareSpec, budget: BudgetLike = QUEUEING):
+        self.hw = hw
+        self.profiles = profiles
+        self.hardware = plan.hardware or hw
+        self.cl = pmv.VecCluster(hw, budget=budget)
+        self.row_gpus: List[int] = []          # row q -> plan gpu id
+        self.home: Dict[str, int] = {}         # workload name -> row q
+        by_gpu: Dict[int, List[Placement]] = {}
+        for p in plan.placements:
+            by_gpu.setdefault(p.gpu, []).append(p)
+        for g in sorted(by_gpu):               # add_workload's row order
+            q = self.cl.add_device()
+            self.row_gpus.append(g)
+            for p in by_gpu[g]:
+                self.cl.add_entry(q, p.workload,
+                                  profiles[p.workload.model], p.batch, p.r)
+                self.home[p.workload.name] = q
+        self._next_gpu = (max(by_gpu) + 1) if by_gpu else 0
+
+    def set_budget(self, budget: BudgetLike) -> None:
+        self.cl.set_budget(budget)
+
+    def remove(self, name: str) -> None:
+        q = self.home.pop(name)
+        self.cl.remove_entry(q, self._slot_at(q, name))
+
+    def _slot_at(self, q: int, name: str) -> int:
+        for i, (s, _, _) in enumerate(self.cl.entries[q]):
+            if s.name == name:
+                return i
+        raise KeyError(name)
+
+    def _place(self, spec: WorkloadSpec, c: WorkloadCoefficients,
+               b: int, rl: float) -> None:
+        """Min-interference placement over ALL devices (one vectorized
+        Alg. 2 sweep) with the fresh-device `self_grant` fallback —
+        `add_workload` semantics against the live cluster."""
+        cl = self.cl
+        feasible, rr, rn, r_inter = cl.alloc_all(spec, c, b, rl)
+        row = prov._argmin_inter(r_inter) if feasible.any() else -1
+        if row == -1:
+            row = cl.add_device()
+            self.row_gpus.append(self._next_gpu)
+            self._next_gpu += 1
+            cl.add_entry(row, spec, c, b,
+                         prov.self_grant(spec, c, b, rl, self.hw,
+                                         budget=cl.bm))
+        else:
+            cl.set_row_r(row, rr[row])
+            cl.add_entry(row, spec, c, b, float(rn[row]))
+        self.home[spec.name] = row
+
+    def add(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
+        c = self.profiles[spec.model]
+        b = prov.appropriate_batch(spec, c, self.hw, budget=self.cl.bm,
+                                   batch=batch)
+        rl = prov.resource_lower_bound(spec, c, self.hw, b,
+                                       budget=self.cl.bm)
+        self._place(spec, c, b, rl)
+
+    def resize(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
+        """Theorem 1 at the new rate, same-device Alg. 2 re-run first,
+        vectorized migration fallback (provisioner.resize_workload
+        semantics, O(devices touched))."""
+        c = self.profiles[spec.model]
+        b = prov.appropriate_batch(spec, c, self.hw, budget=self.cl.bm,
+                                   batch=batch)
+        rl = prov.resource_lower_bound(spec, c, self.hw, b,
+                                       budget=self.cl.bm)
+        cl = self.cl
+        q = self.home.pop(spec.name)
+        cl.remove_entry(q, self._slot_at(q, spec.name))
+        residents = [(s, cc, bb, float(cl.r[q, i]))
+                     for i, (s, cc, bb) in enumerate(cl.entries[q])]
+        r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, self.hw,
+                                 budget=cl.bm)
+        if r_a is not None:
+            cl.set_row_r(q, np.array(r_a[:-1]))
+            cl.add_entry(q, spec, c, b, r_a[-1])
+            self.home[spec.name] = q
+        else:
+            self._place(spec, c, b, rl)
+
+    def to_plan(self) -> ProvisioningPlan:
+        plan = ProvisioningPlan(hardware=self.hardware)
+        cl = self.cl
+        for q in range(cl.d):
+            for i, (s, _, b) in enumerate(cl.entries[q]):
+                plan.placements.append(Placement(
+                    workload=s, gpu=self.row_gpus[q],
+                    r=float(cl.r[q, i]), batch=b))
+        plan.n_gpus = sum(1 for q in range(cl.d) if cl.entries[q])
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Drift reconciliation over incremental plan edits
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanEdit:
+    """One reconciliation action, recorded for telemetry/benchmarks."""
+    t_s: float
+    action: str        # "resize" | "remove" | "add" | "infeasible"
+    workload: str
+    rate_from: float
+    rate_to: float
+    burstiness: float
+
+
+class Reconciler:
+    """Hysteresis-banded drift detection + incremental plan edits.
+
+    Holds the CURRENT plan (starting from the provisioned one) and the
+    per-workload target specs it was last reconciled to.  Each tick
+    compares estimator state against those targets; a sustained breach
+    (debounce) triggers `resize_workload` at the estimated rate (plus
+    headroom on up-drift), departures (`remove_workload`) and
+    re-arrivals (`add_workload`).  The queueing budget's burstiness is
+    refreshed from the rate-weighted mean CV^2 estimate whenever edits
+    are issued, so re-solved budgets track the measured arrival process.
+    """
+
+    def __init__(self, plan: ProvisioningPlan,
+                 profiles: Dict[str, WorkloadCoefficients],
+                 hw: HardwareSpec, *,
+                 budget: BudgetLike = QUEUEING,
+                 batch: str = "joint",
+                 engine: str = "vec",
+                 cfg: Optional[ControllerConfig] = None):
+        self.plan = plan
+        self.profiles = profiles
+        self.hw = hw
+        self.base_bm = resolve(budget)
+        self.bm = self.base_bm
+        self.batch = batch
+        self.engine = engine
+        self.cfg = cfg or ControllerConfig()
+        # engine="vec": lazily-built persistent VecCluster mirror (the
+        # O(devices-touched) hot path); engine="scalar": each edit goes
+        # through the plan-in/plan-out provisioner ops (the oracle)
+        self._state: Optional[PlanState] = None
+        self._state_bm = self.bm
+        self.targets: Dict[str, WorkloadSpec] = {
+            p.workload.name: p.workload for p in plan.placements}
+        self.departed: Dict[str, WorkloadSpec] = {}
+        self.edits: List[PlanEdit] = []
+        self._breach: Dict[str, tuple] = {}    # name -> (kind, streak)
+        self._period_ms = 1000.0           # refreshed per reconcile call
+
+    # -- drift detection ----------------------------------------------------
+
+    def _departed_now(self, name: str, est: ArrivalEstimator) -> bool:
+        """A zero-arrival stretch long enough that the provisioned rate
+        would have produced >= depart_missed arrivals: the workload left
+        (much faster than waiting for the EWMA to decay to ~zero).
+        Requires PRIOR activity — a workload that has never sent a
+        request is "not started yet", not departed: reclaiming its
+        capacity would manufacture a cold start the moment it begins."""
+        return (est.ever_active
+                and est.empty_ms * self._orig_rate(name) / 1000.0
+                >= self.cfg.depart_missed)
+
+    def _drift_kind(self, name: str, est: ArrivalEstimator) -> str:
+        """"up" / "down" / "burst" / "" (in-band).
+
+        The rate bands are widened to `noise_sigmas` sigmas of the
+        smoothed Poisson counting noise, so low-rate workloads need a
+        proportionally larger relative drift — that is what keeps a
+        noise-only (constant-rate Poisson) run at zero reconfigurations.
+        """
+        cfg = self.cfg
+        plan_rate = (self.targets[name].rate_rps
+                     if name in self.targets else 0.0)
+        if plan_rate <= 0.0:     # departed: any sustained rate re-adds it
+            return "up" if (est.rate_rps
+                            > cfg.depart_frac * self._orig_rate(name)
+                            and est.empty_ms == 0.0) else ""
+        if not est.ever_active:  # no traffic yet: the provisioned plan
+            return ""            # is the best prior, leave it alone
+        noise = cfg.noise_sigmas * est.rate_sigma() / plan_rate
+        if est.projected_rps / plan_rate > 1.0 + max(cfg.band_up, noise):
+            return "up"
+        if (est.rate_rps / plan_rate < 1.0 - max(cfg.band_down, noise)
+                or self._departed_now(name, est)):
+            return "down"
+        if (self.bm.mode == "queueing"
+                and est.n_gaps >= cfg.min_gap_obs
+                and est.cv2 > self.bm.burstiness + cfg.burst_band):
+            return "burst"       # burstier than budgeted: tighten
+        return ""
+
+    def _orig_rate(self, name: str) -> float:
+        spec = self.targets.get(name) or self.departed.get(name)
+        return max(spec.rate_rps, 1e-9) if spec is not None else 1e-9
+
+    def _cluster_cv2(self, estimators: Dict[str, ArrivalEstimator]) -> float:
+        """Rate-weighted mean CV^2 across workloads with enough data —
+        the single `BudgetModel.burstiness` the budget split consumes."""
+        num = den = 0.0
+        for est in estimators.values():
+            if est.n_gaps >= self.cfg.min_gap_obs:
+                num += est.rate_rps * est.cv2
+                den += est.rate_rps
+        return num / den if den > 0.0 else self.bm.burstiness
+
+    # -- reconciliation -----------------------------------------------------
+
+    def reconcile(self, now_s: float,
+                  estimators: Dict[str, ArrivalEstimator],
+                  backlog: Optional[Dict[str, float]] = None,
+                  period_ms: float = 1000.0) -> bool:
+        """One control period: returns True when the plan changed.
+
+        ``backlog`` maps workload -> queued requests at the tick (from
+        the live instances); it feeds the resize target so recovering
+        from an under-capacity stretch budgets DRAIN capacity, not just
+        the go-forward arrival rate.
+        """
+        cfg = self.cfg
+        self._period_ms = period_ms
+        need = {"up": cfg.debounce_up, "down": cfg.debounce_down,
+                "burst": cfg.debounce_burst}
+        pending: List[str] = []
+        for name, est in estimators.items():
+            kind = self._drift_kind(name, est)
+            prev_kind, prev_n = self._breach.get(name, ("", 0))
+            # kind-aware debounce: consecutive same-kind breaches;
+            # a departure-length silence bypasses it (nothing noisy
+            # about depart_missed expected arrivals not showing up)
+            n = prev_n + 1 if kind and kind == prev_kind else (1 if kind
+                                                               else 0)
+            self._breach[name] = (kind, n)
+            if kind and (n >= need[kind]
+                         or (kind == "down"
+                             and self._departed_now(name, est))):
+                pending.append(name)
+        if not pending:
+            return False
+
+        if self.base_bm.mode == "queueing":
+            # online burstiness, FLOORED at the provisioned model's: a
+            # deterministic trace's cv2 ~ 0 must not loosen budgets mid-
+            # drift (tail slack is what absorbs the transition), while a
+            # spike train's cv2 >> 1 tightens them
+            self.bm = self.base_bm.with_burstiness(
+                max(self._cluster_cv2(estimators),
+                    self.base_bm.burstiness))
+        if self.engine == "vec":
+            if self._state is None:
+                self._state = PlanState(self.plan, self.profiles, self.hw,
+                                        budget=self.bm)
+                self._state_bm = self.bm
+            elif self.bm != self._state_bm:
+                self._state.set_budget(self.bm)
+                self._state_bm = self.bm
+        changed = False
+        backlog = backlog or {}
+        for name in pending:
+            est = estimators[name]
+            changed |= self._apply(now_s, name, est,
+                                   backlog.get(name, 0.0))
+            self._breach[name] = ("", 0)
+        if changed and self._state is not None:
+            self.plan = self._state.to_plan()
+        return changed
+
+    def _apply(self, now_s: float, name: str, est: ArrivalEstimator,
+               backlog: float) -> bool:
+        cfg = self.cfg
+        cur = self.targets.get(name)
+        orig = cur if cur is not None else self.departed[name]
+        plan_rate = cur.rate_rps if cur is not None else 0.0
+
+        # departure: sustained near-zero rate or a long-enough silence
+        if cur is not None and (
+                est.rate_rps < cfg.depart_frac * self._orig_rate(name)
+                or self._departed_now(name, est)):
+            if self._state is not None:
+                self._state.remove(name)
+            else:
+                self.plan = prov.remove_workload(self.plan, name)
+            self.departed[name] = cur
+            del self.targets[name]
+            self.edits.append(PlanEdit(now_s, "remove", name,
+                                       plan_rate, 0.0, self.bm.burstiness))
+            return True
+
+        new_rate = est.rate_rps
+        if est.projected_rps > plan_rate:   # up-drift: lead the ramp and
+            new_rate = est.projected_rps * (1.0 + cfg.headroom)
+            # budget capacity to drain the accumulated backlog within
+            # ~one control period (capped so a transient spike cannot
+            # demand an absurd allocation)
+            drain = min(backlog * 1000.0 / max(self._period_ms, 1e-9),
+                        cfg.drain_cap * est.rate_rps)
+            new_rate += drain
+        new_spec = dataclasses.replace(orig, rate_rps=new_rate)
+        try:
+            if cur is None:               # re-arrival of a departed workload
+                if self._state is not None:
+                    self._state.add(new_spec, batch=self.batch)
+                else:
+                    self.plan = prov.add_workload(
+                        self.plan, new_spec, self.profiles, self.hw,
+                        engine=self.engine, budget=self.bm,
+                        batch=self.batch)
+                del self.departed[name]
+                action = "add"
+            else:
+                if self._state is not None:
+                    self._state.resize(new_spec, batch=self.batch)
+                else:
+                    self.plan = prov.resize_workload(
+                        self.plan, new_spec, self.profiles, self.hw,
+                        engine=self.engine, budget=self.bm,
+                        batch=self.batch)
+                action = "resize"
+        except prov.InfeasibleError:
+            # beyond any feasible allocation even solo on a full device:
+            # keep the current placement, report honestly via the edits
+            self.edits.append(PlanEdit(now_s, "infeasible", name,
+                                       plan_rate, new_rate,
+                                       self.bm.burstiness))
+            return False
+        self.targets[name] = new_spec
+        self.edits.append(PlanEdit(now_s, action, name, plan_rate,
+                                   new_rate, self.bm.burstiness))
+        return True
+
+
+# ---------------------------------------------------------------------------
+# The adjust_fn adapter
+# ---------------------------------------------------------------------------
+
+class Controller:
+    """Closed-loop controller: pass as ``adjust_fn`` with
+    ``adjust_scope="cluster"`` (it needs the whole cluster per tick).
+
+    Wiring::
+
+        ctl = Controller(plan, profiles, hw)
+        res = simulate_plan(plan, models, hw, trace=trace,
+                            adjust_fn=ctl, adjust_scope="cluster",
+                            adjust_period_s=1.0)
+
+    Stateful: construct a fresh instance per simulation run.  The
+    reconciled plan is ``ctl.plan``; reconfiguration counts/latency land
+    in ``SimResult.stats`` (``n_reconfigs`` / ``reconfig_latency_ms``).
+    """
+
+    def __init__(self, plan: ProvisioningPlan,
+                 profiles: Dict[str, WorkloadCoefficients],
+                 hw: HardwareSpec, *,
+                 budget: BudgetLike = QUEUEING,
+                 batch: str = "joint",
+                 engine: str = "vec",
+                 cfg: Optional[ControllerConfig] = None):
+        self.cfg = cfg or ControllerConfig()
+        self.reconciler = Reconciler(plan, profiles, hw, budget=budget,
+                                     batch=batch, engine=engine,
+                                     cfg=self.cfg)
+        bm = resolve(budget)
+        self.estimators: Dict[str, ArrivalEstimator] = {
+            p.workload.name: ArrivalEstimator(
+                p.workload.rate_rps, self.cfg, burstiness=bm.burstiness)
+            for p in plan.placements}
+        self._last_s = 0.0
+        self.n_ticks = 0
+        # (t_s, $/h) after each tick: the cost the reconciled plan would
+        # bill, so benchmarks can integrate savings from departures and
+        # the price of ramp capacity over the run, not just endpoints
+        self.cost_series: List[tuple] = []
+
+    @property
+    def plan(self) -> ProvisioningPlan:
+        return self.reconciler.plan
+
+    @property
+    def edits(self) -> List[PlanEdit]:
+        return self.reconciler.edits
+
+    def __call__(self, now_s: float,
+                 instances: List[ServedInstance]) -> None:
+        if now_s == self._last_s and self.n_ticks > 0:
+            # two calls at the same tick = the simulator is invoking us
+            # once per device: estimators would see ~zero-width windows
+            # and report garbage rates — fail loudly instead
+            raise RuntimeError(
+                "Controller needs the whole cluster per tick: pass "
+                "adjust_scope=\"cluster\" to simulate_plan (the default "
+                "\"device\" scope calls adjust_fn once per device)")
+        if any(inst.shadow_r > 0.0 for inst in instances):
+            # the provisioner-level edits cannot see shadow_extra
+            # reservations: re-solved allocations plus an activated
+            # shadow could overcommit a device past r=1.0 — the
+            # combination is unsupported, so refuse it up front
+            raise RuntimeError(
+                "Controller does not compose with shadow=True: shadow_r "
+                "reservations are invisible to the plan edits and an "
+                "activation could overcommit the device")
+        window_ms = max((now_s - self._last_s) * 1000.0, 1e-9)
+        backlog: Dict[str, float] = {}
+        for inst in instances:
+            est = self.estimators.get(inst.spec.name)
+            if est is None:       # instance outside the managed plan
+                continue
+            est.observe(inst.recent_arrivals, window_ms)
+            backlog[inst.spec.name] = float(len(inst.queue))
+        if self.reconciler.reconcile(now_s, self.estimators, backlog,
+                                     window_ms):
+            self._apply_plan(instances)
+        self._last_s = now_s
+        self.n_ticks += 1
+        self.cost_series.append((now_s, self.plan.cost_per_hour()))
+
+    def _apply_plan(self, instances: List[ServedInstance]) -> None:
+        """Map the reconciled plan onto the live instances: r / batch /
+        gpu deltas the simulator turns into table rebuilds/migrations.
+        A departed workload's instance is parked at the allocation floor
+        (its arrivals have stopped; r_unit keeps the physics valid)."""
+        by_name = {p.workload.name: p for p in self.plan.placements}
+        for inst in instances:
+            p = by_name.get(inst.spec.name)
+            if p is None:
+                if inst.spec.name in self.reconciler.departed:
+                    inst.r = self.hw.r_unit
+                    inst.batch = 1
+                continue
+            inst.r = p.r
+            inst.batch = max(1, p.batch)
+            inst.gpu = p.gpu
+
+    @property
+    def hw(self) -> HardwareSpec:
+        return self.reconciler.hw

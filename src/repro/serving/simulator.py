@@ -33,6 +33,25 @@ Three roles:
    k=2 dispatch noise) so no draw depends on cross-device event
    interleaving — that is what makes the per-device loop exact.
 
+   The ``adjust_fn`` hook has a UNIFIED contract across engines (see
+   `AdjustFn`): ``adjust_scope="device"`` (default) calls it once per
+   device with that device's instances, ``adjust_scope="cluster"`` once
+   per period with ALL instances — under either scope and either engine
+   the callback sees the same synced state (pending ``queue``,
+   ``recent_arrivals`` for the last adjust interval, ``busy_until``,
+   ``completed``) and may mutate ``r`` / ``batch`` / ``shadow_r`` /
+   ``gpu`` (migration).  Reconfigurations are tracked in
+   ``SimResult.stats`` as ``n_reconfigs`` (instances whose placement
+   changed at an adjust tick; engine-identical) and
+   ``reconfig_latency_ms`` (wall-clock spent inside the callback — the
+   controller-overhead number the paper reports in Sec. 5.5).
+
+   Dynamic load: pass a ``repro.serving.traces.Trace`` as ``trace`` to
+   replace each workload's constant rate with a piecewise-constant
+   schedule (diurnal ramps, flash-crowd spikes, churn).  Arrivals are
+   pre-generated in `_setup` from the shared per-instance RNG streams,
+   so traced scenarios stay byte-identical across engines too.
+
 3. **Full-cluster validation** (`simulate_full`): every device of an
    m=1000-scale plan simulated at ground truth with events/sec
    throughput reported in `SimResult.stats` — tracked per PR by
@@ -54,6 +73,7 @@ from repro.core.coefficients import ProfileSample
 from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
 from repro.profiling.metrics import ServedModelDesc
 from repro.serving import physics
+from repro.serving import traces as traces_mod
 
 MONITOR_WINDOW_MS = 1000.0       # P99 monitor lookback (1 s, paper Sec. 4.2)
 
@@ -118,6 +138,10 @@ class ServedInstance:
     latencies: List[float] = field(default_factory=list)
     waits: List[float] = field(default_factory=list)   # serve start - arrival
     completed: int = 0
+    # arrivals in the last adjust interval, synced before adjust_fn calls
+    # (identical across engines: both slice the pre-generated streams)
+    recent_arrivals: np.ndarray = field(
+        default_factory=lambda: np.empty(0))
 
     @property
     def r_eff(self) -> float:
@@ -168,11 +192,16 @@ class SimResult:
 
 AdjustFn = Callable[[float, List[ServedInstance]], None]
 # Called every `adjust_period` sim-seconds with (now, instances).  The
-# scalar engine passes ALL instances; the vec engine calls it once per
-# device with that device's instances — for the engines to agree the
-# callback must act on each instance independently (GSLICE-style).  It
-# may mutate r / batch / shadow_r (latency tables are rebuilt); queue,
-# latencies, busy_until and completed are synced read-only views.
+# grouping is engine-INDEPENDENT and set by ``adjust_scope``:
+#   * "device" (default): once per device with that device's instances,
+#     sorted by device id — an instance-local/GSLICE-style callback;
+#   * "cluster": once per period with ALL instances — what a global
+#     controller (repro.serving.controller) needs.
+# Under both scopes the callback may mutate r / batch / shadow_r and
+# (under any scope) gpu — migrations regroup devices and invalidate the
+# vec engine's latency tables for touched devices only.  queue,
+# latencies, busy_until, completed and recent_arrivals are synced
+# read-only views; mutating them has no effect in the vec engine.
 
 
 # ---------------------------------------------------------------------------
@@ -235,9 +264,12 @@ def _noisy_t_inf(t_load: float, t_sch: float, t_act: float, t_fb: float,
 
 def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
            shadow: bool, shadow_extra: float, horizon_ms: float,
-           poisson: bool, seed: int):
+           poisson: bool, seed: int,
+           trace: Optional["traces_mod.Trace"] = None):
     """Instances, device grouping, per-instance arrival arrays and noise
-    streams — identical for both engines."""
+    streams — identical for both engines.  With a `trace`, workloads it
+    names draw their arrivals from the piecewise-constant schedule
+    instead of the static rate (same per-instance RNG stream)."""
     instances: List[ServedInstance] = []
     for p in plan.placements:
         instances.append(ServedInstance(
@@ -252,9 +284,17 @@ def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
             used = sum(instances[k].r for k in by_gpu[inst.gpu])
             inst.shadow_r = min(shadow_extra, max(0.0, 1.0 - used))
 
-    arrivals = [_gen_arrivals(inst.spec.rate_rps, horizon_ms, poisson,
-                              np.random.default_rng([seed, i, 0]))
-                for i, inst in enumerate(instances)]
+    arrivals = []
+    for i, inst in enumerate(instances):
+        rng = np.random.default_rng([seed, i, 0])
+        if trace is not None and inst.spec.name in trace.scales:
+            edges, scales = trace.segments(inst.spec.name, horizon_ms)
+            arrivals.append(traces_mod.gen_arrivals(
+                inst.spec.rate_rps, edges, scales, horizon_ms, poisson,
+                rng))
+        else:
+            arrivals.append(_gen_arrivals(inst.spec.rate_rps, horizon_ms,
+                                          poisson, rng))
     noise_a = [_NoiseStream(np.random.default_rng([seed, i, 1]),
                             physics.NOISE_SIGMA)
                for i in range(len(instances))]
@@ -278,12 +318,80 @@ def _epoch_times(horizon_ms: float, monitor_period_s: float,
 
 
 def _stats(n_requests: int, n_passes: int, peak_window: int,
-           wall0: float) -> Dict[str, float]:
+           wall0: float, n_reconfigs: int = 0,
+           reconfig_ms: float = 0.0) -> Dict[str, float]:
     wall = _time.perf_counter() - wall0
     return {"n_requests": n_requests, "n_passes": n_passes,
             "n_events": n_requests + n_passes, "wall_s": wall,
             "events_per_s": (n_requests + n_passes) / max(wall, 1e-9),
-            "peak_window": peak_window}
+            "peak_window": peak_window,
+            # controller overhead accounting (paper Sec. 5.5 analogue):
+            # n_reconfigs counts instances whose placement (gpu / r /
+            # batch / shadow) changed at an adjust tick — engine-
+            # identical; reconfig_latency_ms is adjust_fn wall-clock.
+            "n_reconfigs": n_reconfigs,
+            "reconfig_latency_ms": reconfig_ms}
+
+
+def _snap_placement(inst: ServedInstance):
+    return (inst.gpu, inst.r, inst.batch, inst.shadow_r,
+            inst.shadow_active)
+
+
+def _call_adjust(adjust_fn: AdjustFn, now_s: float,
+                 insts: List[ServedInstance]
+                 ) -> Tuple[List[Tuple[ServedInstance, int]], float]:
+    """Invoke the callback; return ([(changed_inst, old_gpu)], wall_ms).
+    A "reconfiguration" is any change to an instance's placement tuple
+    (gpu, r, batch, shadow_r, shadow_active)."""
+    snaps = [_snap_placement(i) for i in insts]
+    t0 = _time.perf_counter()
+    adjust_fn(now_s, insts)
+    wall_ms = (_time.perf_counter() - t0) * 1000.0
+    changed = [(inst, s[0]) for inst, s in zip(insts, snaps)
+               if _snap_placement(inst) != s]
+    return changed, wall_ms
+
+
+def _dispatch_adjust(adjust_fn: AdjustFn, now_s: float,
+                     instances: List[ServedInstance],
+                     by_gpu: Dict[int, List[int]], adjust_scope: str
+                     ) -> Tuple[List[Tuple[ServedInstance, int]], float]:
+    """Scope-aware adjust_fn dispatch, shared by BOTH engines so the
+    call grouping/ordering that the byte-identical contract depends on
+    lives in exactly one place.  Returns (changed instances with their
+    pre-call gpu, total wall ms)."""
+    if adjust_scope == "cluster":
+        calls = [instances]
+    else:
+        calls = [[instances[k] for k in by_gpu[g]] for g in sorted(by_gpu)]
+    changed_all: List[Tuple[ServedInstance, int]] = []
+    wall_ms = 0.0
+    for insts_c in calls:
+        changed, dt = _call_adjust(adjust_fn, now_s, insts_c)
+        changed_all.extend(changed)
+        wall_ms += dt
+    return changed_all, wall_ms
+
+
+def _sync_recent_arrivals(instances: List[ServedInstance],
+                          arrivals: List[np.ndarray], now: float,
+                          window_ms: float) -> None:
+    """Expose each instance's arrivals in (now - window, now] — the raw
+    material for the controller's rate/burstiness estimators."""
+    lo = now - window_ms
+    for i, inst in enumerate(instances):
+        a = arrivals[i]
+        j0 = int(np.searchsorted(a, lo, side="right"))
+        j1 = int(np.searchsorted(a, now, side="right"))
+        inst.recent_arrivals = a[j0:j1]
+
+
+def _regroup(instances: List[ServedInstance]) -> Dict[int, List[int]]:
+    by_gpu: Dict[int, List[int]] = {}
+    for i, inst in enumerate(instances):
+        by_gpu.setdefault(inst.gpu, []).append(i)
+    return by_gpu
 
 
 def _finalize(instances: List[ServedInstance], duration_s: float,
@@ -330,11 +438,12 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
 
 def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                      shadow_extra, monitor_period_s, adjust_fn,
-                     adjust_period_s, record_timeline) -> SimResult:
+                     adjust_period_s, record_timeline, adjust_scope,
+                     trace) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0                      # ms
     instances, by_gpu, arrivals, noise_a, noise_s = _setup(
-        plan, models, shadow, shadow_extra, horizon, poisson, seed)
+        plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
 
     events: List[Tuple[float, int, str, int]] = []     # (t, seq, kind, idx)
     seq = 0
@@ -360,6 +469,9 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
     recent: List[deque] = [deque() for _ in instances]
     n_passes = 0
     peak_window = 0
+    n_reconfigs = 0
+    adjust_wall_ms = 0.0
+    adj_window_ms = adjust_period_s * 1000.0
 
     def pass_latency(inst: ServedInstance, nb: int) -> physics.TrueState:
         peers = [instances[k] for k in by_gpu[inst.gpu]
@@ -425,10 +537,16 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                         # switch to the pre-launched shadow process (Sec. 4.2)
                         inst.shadow_active = True
         elif kind == "adjust" and adjust_fn is not None:
-            adjust_fn(now / 1000.0, instances)
+            _sync_recent_arrivals(instances, arrivals, now, adj_window_ms)
+            changed, wall_ms = _dispatch_adjust(
+                adjust_fn, now / 1000.0, instances, by_gpu, adjust_scope)
+            n_reconfigs += len(changed)
+            adjust_wall_ms += wall_ms
+            if any(old_g != inst.gpu for inst, old_g in changed):
+                by_gpu = _regroup(instances)
 
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
-                   wall0)
+                   wall0, n_reconfigs, adjust_wall_ms)
     return _finalize(instances, duration_s, timeline, stats)
 
 
@@ -465,11 +583,12 @@ class _LatTable:
 
 def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                   shadow_extra, monitor_period_s, adjust_fn,
-                  adjust_period_s, record_timeline) -> SimResult:
+                  adjust_period_s, record_timeline, adjust_scope,
+                  trace) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0
     instances, by_gpu, arrivals, noise_a, noise_s = _setup(
-        plan, models, shadow, shadow_extra, horizon, poisson, seed)
+        plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
     n_inst = len(instances)
 
     mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
@@ -487,7 +606,28 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
     wptr = [0] * n_inst            # monitor-window start in done_flat
     n_passes = 0
     peak_window = 0
+    n_reconfigs = 0
+    adjust_wall_ms = 0.0
+    adj_window_ms = adjust_period_s * 1000.0
     rows: List[Tuple[float, int, Dict]] = []           # timeline, sortable
+
+    # Per-instance latency tables, built per device and invalidated only
+    # for devices whose co-location state changed (shadow activation,
+    # adjust_fn mutation, migration).  The loop is EPOCH-major (all
+    # instances advance to each boundary before monitor/adjust fire) so
+    # a cluster-scoped adjust_fn sees a consistent cluster snapshot;
+    # per-instance RNG streams make this reordering exact vs the
+    # device-major formulation.
+    tables: Dict[int, _LatTable] = {}
+
+    def rebuild_gpu(g: int) -> None:
+        idxs = by_gpu[g]
+        for i in idxs:
+            peers = [instances[k] for k in idxs if k != i]
+            tables[i] = _LatTable(instances[i], peers, hw)
+
+    for g in by_gpu:
+        rebuild_gpu(g)
 
     def run_passes(i: int, T: float) -> None:
         """Advance instance i's pass recurrence up to epoch boundary T.
@@ -541,61 +681,62 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
         busy[i] = bu
         completed[i] = jj             # all served so far
 
-    for g in sorted(by_gpu):
-        idxs = by_gpu[g]
-        tables: Dict[int, _LatTable] = {}
-
-        def rebuild():
-            for i in idxs:
-                peers = [instances[k] for k in idxs if k != i]
-                tables[i] = _LatTable(instances[i], peers, hw)
-
-        rebuild()
-        for (T, is_mon, is_adj) in epochs:
-            for i in idxs:
-                run_passes(i, T)
-            dirty = False
-            if is_mon:
-                cutoff = T - MONITOR_WINDOW_MS
-                for i in idxs:
-                    inst = instances[i]
-                    dn = done_flat[i]
-                    w = wptr[i]
-                    while w < len(dn) and dn[w] <= cutoff:
-                        w += 1
-                    wptr[i] = w
-                    # completed-by-T only (mirrors the scalar monitor):
-                    # done stamps are nondecreasing per instance, and a
-                    # pass may complete past T (or past the horizon)
-                    end = bisect_right(dn, T, w)
-                    peak_window = max(peak_window, end - w)
-                    if not record_timeline and not shadow:
-                        continue           # window list only needed below
-                    window = inst.latencies[w:end]
-                    if record_timeline:
-                        rows.append((T, i, {
-                            "t_s": T / 1000.0, "workload": inst.spec.name,
-                            "p99_1s": float(np.percentile(window, 99)) if window else 0.0,
-                            "avg_1s": float(np.mean(window)) if window else 0.0,
-                            "r": inst.r_eff, "batch": inst.batch,
-                            "rps_1s": len(window) / 1.0,
-                            "shadow": inst.shadow_active,
-                        }))
-                    if shadow and window and not inst.shadow_active:
-                        if float(np.percentile(window, 99)) > inst.spec.slo_ms:
-                            inst.shadow_active = True
-                            dirty = True
-            if is_adj and adjust_fn is not None:
-                for i in idxs:
-                    inst = instances[i]
-                    inst.busy_until = busy[i]
-                    inst.completed = completed[i]
-                    al = arr_l[i]
-                    inst.queue = al[jptr[i]:bisect_right(al, T, jptr[i])]
-                adjust_fn(T / 1000.0, [instances[i] for i in idxs])
-                dirty = True           # r/batch/shadow_r may have changed
-            if dirty:
-                rebuild()
+    for (T, is_mon, is_adj) in epochs:
+        for i in range(n_inst):
+            run_passes(i, T)
+        dirty: set = set()             # device ids needing table rebuilds
+        if is_mon:
+            cutoff = T - MONITOR_WINDOW_MS
+            for i in range(n_inst):
+                inst = instances[i]
+                dn = done_flat[i]
+                w = wptr[i]
+                while w < len(dn) and dn[w] <= cutoff:
+                    w += 1
+                wptr[i] = w
+                # completed-by-T only (mirrors the scalar monitor):
+                # done stamps are nondecreasing per instance, and a
+                # pass may complete past T (or past the horizon)
+                end = bisect_right(dn, T, w)
+                peak_window = max(peak_window, end - w)
+                if not record_timeline and not shadow:
+                    continue           # window list only needed below
+                window = inst.latencies[w:end]
+                if record_timeline:
+                    rows.append((T, i, {
+                        "t_s": T / 1000.0, "workload": inst.spec.name,
+                        "p99_1s": float(np.percentile(window, 99)) if window else 0.0,
+                        "avg_1s": float(np.mean(window)) if window else 0.0,
+                        "r": inst.r_eff, "batch": inst.batch,
+                        "rps_1s": len(window) / 1.0,
+                        "shadow": inst.shadow_active,
+                    }))
+                if shadow and window and not inst.shadow_active:
+                    if float(np.percentile(window, 99)) > inst.spec.slo_ms:
+                        inst.shadow_active = True
+                        dirty.add(inst.gpu)
+        if is_adj and adjust_fn is not None:
+            for i in range(n_inst):
+                inst = instances[i]
+                inst.busy_until = busy[i]
+                inst.completed = completed[i]
+                al = arr_l[i]
+                inst.queue = al[jptr[i]:bisect_right(al, T, jptr[i])]
+            _sync_recent_arrivals(instances, arr_np, T, adj_window_ms)
+            changed, wall_ms = _dispatch_adjust(
+                adjust_fn, T / 1000.0, instances, by_gpu, adjust_scope)
+            n_reconfigs += len(changed)
+            adjust_wall_ms += wall_ms
+            moved = False
+            for inst, old_g in changed:
+                dirty.add(old_g)
+                dirty.add(inst.gpu)
+                moved = moved or old_g != inst.gpu
+            if moved:
+                by_gpu = _regroup(instances)
+        for g in sorted(dirty):
+            if g in by_gpu:
+                rebuild_gpu(g)
 
     for i, inst in enumerate(instances):
         inst.completed = completed[i]
@@ -605,7 +746,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
     timeline = [row for (_, _, row) in rows]
 
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
-                   wall0)
+                   wall0, n_reconfigs, adjust_wall_ms)
     return _finalize(instances, duration_s, timeline, stats)
 
 
@@ -624,28 +765,37 @@ def simulate_plan(plan: ProvisioningPlan,
                   monitor_period_s: float = 0.5,
                   adjust_fn: Optional[AdjustFn] = None,
                   adjust_period_s: float = 1.0,
+                  adjust_scope: str = "device",
                   record_timeline: bool = False,
+                  trace: Optional["traces_mod.Trace"] = None,
                   engine: str = "vec") -> SimResult:
     """Run the serving cluster for `duration_s` simulated seconds.
 
-    ``engine="vec"`` (default) runs the table-cached per-device loop;
+    ``engine="vec"`` (default) runs the table-cached epoch-major loop;
     ``engine="scalar"`` the reference global-heap loop.  Same seed =>
     byte-identical per-request latency streams across engines.
 
-    `adjust_fn` contract under the default engine: it is called once
-    PER DEVICE with that device's instances (devices are processed one
-    after another over the whole horizon), so the callback must act on
-    each instance independently and treat queue/latencies/busy_until/
-    completed as read-only views — only r, batch and shadow_r mutations
-    take effect.  A cluster-global or queue-mutating controller needs
-    ``engine="scalar"``, which calls it once per period with ALL
-    instances and live state.
+    `adjust_fn` contract — IDENTICAL across engines (see `AdjustFn`):
+    ``adjust_scope="device"`` (default) calls it once per device with
+    that device's instances; ``adjust_scope="cluster"`` once per period
+    with ALL instances (what `repro.serving.controller.Controller`
+    needs).  The callback may mutate r / batch / shadow_r / gpu;
+    queue / latencies / busy_until / completed / recent_arrivals are
+    synced read-only views in both engines.
+
+    ``trace`` replaces the constant arrival rates with a
+    `repro.serving.traces.Trace` schedule (diurnal / spike / churn);
+    arrivals stay pre-generated from the shared per-instance RNG
+    streams, so traced runs remain engine-identical.
     """
+    if adjust_scope not in ("device", "cluster"):
+        raise ValueError(f"unknown adjust_scope {adjust_scope!r}")
     kwargs = dict(duration_s=duration_s, seed=seed, poisson=poisson,
                   shadow=shadow, shadow_extra=shadow_extra,
                   monitor_period_s=monitor_period_s, adjust_fn=adjust_fn,
                   adjust_period_s=adjust_period_s,
-                  record_timeline=record_timeline)
+                  record_timeline=record_timeline,
+                  adjust_scope=adjust_scope, trace=trace)
     if engine == "vec":
         return _simulate_vec(plan, models, hw, **kwargs)
     if engine != "scalar":

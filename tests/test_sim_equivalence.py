@@ -12,6 +12,7 @@ import pytest
 
 from repro.core import provisioner as prov
 from repro.core.experiments import fitted_context
+from repro.serving import traces
 from repro.serving.simulator import (simulate_full, simulate_plan,
                                      simulate_device_sample)
 from repro.serving.workload import models, specs_by_name, twelve_workloads
@@ -34,12 +35,27 @@ def _adjust(now, insts):
             inst.r = min(1.0, round(inst.r + 0.025, 10))
 
 
+_NAMES = [s.name for s in twelve_workloads()]
+
 SCENARIOS = {
     "constant": {},
     "poisson": {"poisson": True, "seed": 3},
     "shadow": {"shadow": True},
     "adjust": {"adjust_fn": _adjust, "adjust_period_s": 0.7},
+    "adjust_cluster": {"adjust_fn": _adjust, "adjust_period_s": 0.7,
+                       "adjust_scope": "cluster"},
     "shadow_poisson": {"shadow": True, "poisson": True, "seed": 7},
+    "trace_diurnal": {"trace": traces.diurnal(_NAMES, 4000.0, peak=1.8)},
+    "trace_spike_poisson": {
+        "trace": traces.step_spike(_NAMES, 4000.0, at_ms=1500.0,
+                                   duration_ms=1000.0, scale=2.0),
+        "poisson": True, "seed": 5},
+    "trace_churn_adjust": {
+        "trace": traces.churn(_NAMES, 4000.0,
+                              departures={"W2": 1800.0},
+                              arrivals={"W7": 2200.0}),
+        "adjust_fn": _adjust, "adjust_period_s": 0.9,
+        "adjust_scope": "cluster"},
 }
 
 
@@ -67,6 +83,7 @@ def test_engines_byte_identical(setup, scenario):
     assert a.stats["n_passes"] == b.stats["n_passes"]
     assert a.stats["n_requests"] == b.stats["n_requests"]
     assert a.stats["peak_window"] == b.stats["peak_window"]
+    assert a.stats["n_reconfigs"] == b.stats["n_reconfigs"]
     for key in ("e2e_p50_ms", "e2e_p99_ms", "wait_mean_ms", "wait_p99_ms"):
         assert a.stats[key] == b.stats[key], key
 
