@@ -8,7 +8,13 @@ simulator's cluster-scoped ``adjust_fn`` hook — and the rows report
 simulated SLO violations (rate targets corrected by each trace's
 time-weighted mean scale), reconfiguration counts, controller wall-clock
 overhead (``reconfig_latency_ms``, the paper's Sec. 5.5 number), final
-plan cost, and simulator throughput.
+plan cost, and simulator throughput.  Since the controller gained
+replica scale-out (``split_workload``/``merge_workload`` reconciliation,
+docs/control-plane.md) the rows also report ``n_splits`` / ``n_merges``
+edit counts and the final plan's replica footprint
+(``split_workloads`` / ``n_replicas``) — the r = 1.0 ceiling that used
+to cap every diurnal workload at one device's throughput is gone, which
+is what the controlled-violations column measures.
 
 Scenarios:
   no_drift   constant-rate control case — the controller must do NOTHING
@@ -129,6 +135,8 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
                                   adjust_fn=ctl, adjust_scope="cluster",
                                   adjust_period_s=1.0)
             ctl_wall = time.perf_counter() - t0
+            from repro.core import replication
+            groups = replication.group_placements(ctl.plan.placements)
             row = {
                 "bench": "dynamic_sweep", "m": m, "scenario": scenario,
                 "hardware": hw.name, "n_devices": plan.n_gpus,
@@ -143,6 +151,14 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
                     round(_mean_violation_rate(res_c, specs), 4),
                 "n_reconfigs": int(res_c.stats["n_reconfigs"]),
                 "n_edits": len(ctl.edits),
+                "n_splits": sum(1 for e in ctl.edits
+                                if e.action == "split"),
+                "n_merges": sum(1 for e in ctl.edits
+                                if e.action == "merge"),
+                "split_workloads": sum(1 for g in groups.values()
+                                       if len(g) > 1),
+                "n_replicas": sum(len(g) for g in groups.values()
+                                  if len(g) > 1),
                 "reconfig_latency_ms":
                     round(res_c.stats["reconfig_latency_ms"], 1),
                 "plan_identical": ctl.plan is plan,
@@ -209,6 +225,8 @@ def main(argv=None) -> int:
               f"(rates {row['static_violation_rate']:.3f} -> "
               f"{row['controlled_violation_rate']:.3f}; "
               f"{row['n_reconfigs']} reconfigs, "
+              f"{row['n_splits']} splits/{row['n_merges']} merges -> "
+              f"{row['n_replicas']} replicas, "
               f"{row['reconfig_latency_ms']:.0f} ms overhead; "
               f"{'PASS' if ok else 'FAIL'})")
         if args.check and not ok:

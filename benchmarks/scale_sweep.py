@@ -18,7 +18,12 @@ ground truth at FULL cluster scale:
     the queueing-aware default (`budget="queueing"`, the headline row)
     and the paper-faithful `budget="half"` comparison whose zero-slack
     split is what produced the historical 5-predicted-vs-178-simulated
-    gap at m=1000 (`half_*` fields).
+    gap at m=1000 (`half_*` fields),
+  * the replica-group plan (`provision(..., replicate=True)`, `repl_*`
+    fields): workloads infeasible even solo at r = 1.0 are split into
+    rate-share replicas (`w#0..w#k-1`) instead of clamped, so the
+    honest full-device residual becomes servable — replica counts and
+    the remaining residual are tracked per m (docs/provisioning.md).
 
 Run:  PYTHONPATH=src python -m benchmarks.scale_sweep [--quick] [--check]
       --quick        m <= 100 only (CI per-PR smoke; uploads artifact)
@@ -134,6 +139,29 @@ def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
         })
         row["half_gap"] = (row["half_sim_violations"]
                            - row["half_predicted_violations"])
+        # replica groups (replicate=True): workloads infeasible even
+        # solo at r = 1.0 are split into rate-share replicas instead of
+        # clamped — the honest full-device residual becomes servable
+        from repro.core import replication
+        plan_r, hw_r = prov.provision_cheapest(specs, profiles_by_hw,
+                                               hardware, replicate=True)
+        viol_r = prov.predicted_violations(plan_r,
+                                           profiles_by_hw[hw_r.name], hw_r)
+        res_r = simulate_full(plan_r, mods, hw_r,
+                              duration_s=sim_duration_s, seed=seed)
+        groups = replication.group_placements(plan_r.placements)
+        row.update({
+            "repl_n_devices": plan_r.n_gpus,
+            "repl_cost_per_hour": round(plan_r.cost_per_hour(), 2),
+            "repl_predicted_violations": len(viol_r),
+            "repl_sim_violations": len(res_r.violations(sb)),
+            "repl_split_workloads": sum(1 for g in groups.values()
+                                        if len(g) > 1),
+            "repl_n_replicas": sum(len(g) for g in groups.values()
+                                   if len(g) > 1),
+        })
+        row["repl_gap"] = (row["repl_sim_violations"]
+                           - row["repl_predicted_violations"])
         rows.append(row)
         print(",".join(f"{k}={v}" for k, v in row.items() if v is not None),
               flush=True)
@@ -222,6 +250,13 @@ def main(argv=None) -> int:
             print(f"# m=1000 simulated/predicted "
                   f"{row['sim_violations']}/{row['predicted_violations']} "
                   f"within 2x bound ({'PASS' if two_ok else 'FAIL'})")
+            print(f"# m=1000 replica groups: "
+                  f"{row['repl_split_workloads']} workloads split into "
+                  f"{row['repl_n_replicas']} replicas; violations "
+                  f"predicted={row['repl_predicted_violations']} "
+                  f"simulated={row['repl_sim_violations']} "
+                  f"({row['repl_n_devices']} devices, "
+                  f"${row['repl_cost_per_hour']}/h)")
             if args.check and not (ok and sim_ok and two_ok):
                 status = 1
     return status

@@ -21,6 +21,12 @@ array code:
   * ``VecCluster.alloc_all`` Algorithm 2 run for ONE newcomer against ALL
                              open devices simultaneously
 
+Entries are replica-aware by construction: each carries its own
+`WorkloadSpec`, so a replica ``w#3`` (a per-replica name with a RATE
+SHARE, see `repro.core.replication`) is just another entry whose cached
+``budget_ms`` was solved at the share rate — the model itself never
+needs to know about groups.
+
 Numerical contract: every quantity matches the scalar model to <= 1e-9
 (the only reordering is Python ``sum`` -> ``ndarray.sum`` for the power
 and cache totals, ~1e-13 relative); `tests/test_perf_model_vec.py`

@@ -26,11 +26,16 @@ import numpy as np
 
 from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
+from repro.core import replication
 from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
 
 R_MAX = 1.0
+# Replica-count ceiling for the split fallback (`required_replicas`):
+# a workload still infeasible at 1/K_MAX of its rate stays an honest
+# residual instead of shattering into arbitrarily many slivers.
+K_MAX = 8
 
 
 class InfeasibleError(RuntimeError):
@@ -232,23 +237,78 @@ def self_grant(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
 
 
 # ---------------------------------------------------------------------------
+# Replica groups (beyond-paper, docs/provisioning.md): a workload whose
+# inference budget is out of reach even SOLO on a full device is split
+# into k replicas, each serving a 1/k rate share — instead of clamping
+# to r = 1.0 and reporting a guaranteed violation.
+# ---------------------------------------------------------------------------
+
+def solo_feasible(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
+                  hw: HardwareSpec, *, budget: BudgetLike = QUEUEING,
+                  batch: str = "eq17") -> bool:
+    """Can the workload meet its inference budget alone on one device,
+    INCLUDING the power-throttling effect Theorem 1 drops (the same
+    check `self_grant` applies to fresh devices)?"""
+    bm = resolve(budget)
+    try:
+        b = appropriate_batch(spec, coeffs, hw, budget=bm, batch=batch)
+        rl = resource_lower_bound(spec, coeffs, hw, b, budget=bm)
+    except InfeasibleError:
+        return False
+    # rl alone is not decisive: R_MAX may be the tightened-budget clamp,
+    # and even rl < R_MAX can throttle-fail once the power cap binds.
+    # Run Alg. 2 on an empty device — the authoritative check.
+    return alloc_gpus(_Dev(), spec, coeffs, b, rl, hw, budget=bm) is not None
+
+
+def required_replicas(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
+                      hw: HardwareSpec, *, budget: BudgetLike = QUEUEING,
+                      batch: str = "eq17",
+                      k_max: int = K_MAX) -> Optional[int]:
+    """Smallest k such that a 1/k-rate replica of ``spec`` is solo-
+    feasible (`solo_feasible`); None when NO k <= k_max suffices.  The
+    None is deliberate — "feasible as one instance" (1) and "hopeless
+    at any split" must stay distinguishable, or a controller would
+    merge a working replica group down to one guaranteed-violating
+    instance.  Callers keep hopeless workloads at their CURRENT replica
+    count (an honest residual) instead of shattering them into k_max
+    equally-impossible slivers."""
+    for k in range(1, k_max + 1):
+        probe = spec if k == 1 else replication.make_replicas(spec, k)[0]
+        if solo_feasible(probe, coeffs, hw, budget=budget, batch=batch):
+            return k
+    return None
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 1: iGniter provisioning
 # ---------------------------------------------------------------------------
 
 def _prepare(specs: Sequence[WorkloadSpec],
              profiles: Dict[str, WorkloadCoefficients],
              hw: HardwareSpec, *, budget: BudgetLike = QUEUEING,
-             batch: str = "eq17"
+             batch: str = "eq17", replicate: bool = False,
+             k_max: int = K_MAX
              ) -> List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]:
     """Alg. 1 lines 2-3: (b_appr, r_lower) per workload, sorted by
-    r_lower descending."""
+    r_lower descending.  With ``replicate`` a workload that cannot meet
+    its budget even solo on a full device is expanded into
+    `required_replicas` equal-share replicas (``w#0..w#k-1``), each
+    prepared like an ordinary workload at its share rate; stable
+    sorting keeps a group's replicas in index order."""
     bm = resolve(budget)
     prepared = []
     for s in specs:
         c = profiles[s.model]
-        b = appropriate_batch(s, c, hw, budget=bm, batch=batch)
-        rl = resource_lower_bound(s, c, hw, b, budget=bm)
-        prepared.append((s, c, b, rl))
+        reps = [s]
+        if replicate and not replication.is_replica(s.name):
+            k = required_replicas(s, c, hw, budget=bm, batch=batch,
+                                  k_max=k_max)
+            reps = replication.make_replicas(s, k or 1)
+        for rs in reps:
+            b = appropriate_batch(rs, c, hw, budget=bm, batch=batch)
+            rl = resource_lower_bound(rs, c, hw, b, budget=bm)
+            prepared.append((rs, c, b, rl))
     prepared.sort(key=lambda t: -t[3])
     return prepared
 
@@ -257,7 +317,8 @@ def provision(specs: Sequence[WorkloadSpec],
               profiles: Dict[str, WorkloadCoefficients],
               hw: HardwareSpec, *, engine: str = "vec",
               budget: BudgetLike = QUEUEING,
-              batch: str = "eq17") -> ProvisioningPlan:
+              batch: str = "eq17", replicate: bool = False,
+              k_max: int = K_MAX) -> ProvisioningPlan:
     """Cost-efficient interference-aware provisioning (Alg. 1).
 
     ``engine="vec"`` scores all open devices through the batched model in
@@ -271,13 +332,21 @@ def provision(specs: Sequence[WorkloadSpec],
     ``batch`` selects Theorem 1's batch size: ``"eq17"`` (default,
     paper-faithful) or ``"joint"`` (re-optimized jointly with the
     solved budget split — see `appropriate_batch`).
+
+    ``replicate`` (beyond-paper, opt-in) splits any workload that is
+    infeasible even SOLO on a full device into `required_replicas`
+    equal-rate-share replicas (``w#0..w#k-1``, capped at ``k_max``)
+    instead of clamping it to r = 1.0; a plan that never splits is
+    bit-identical to ``replicate=False`` output.
     """
     bm = resolve(budget)
     if engine == "vec":
-        return _provision_vec(specs, profiles, hw, bm, batch=batch)
+        return _provision_vec(specs, profiles, hw, bm, batch=batch,
+                              replicate=replicate, k_max=k_max)
     if engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
-    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch,
+                        replicate=replicate, k_max=k_max)
 
     devs: List[_Dev] = [_Dev()]
     for (s, c, b, rl) in prepared:
@@ -327,12 +396,14 @@ def _argmin_inter(r_inter: "np.ndarray") -> int:
 def _provision_vec(specs: Sequence[WorkloadSpec],
                    profiles: Dict[str, WorkloadCoefficients],
                    hw: HardwareSpec, budget: BudgetLike = QUEUEING, *,
-                   batch: str = "eq17") -> ProvisioningPlan:
+                   batch: str = "eq17", replicate: bool = False,
+                   k_max: int = K_MAX) -> ProvisioningPlan:
     """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
     scores every open device per placement, and the chosen device's
     invariants are refreshed incrementally."""
     bm = resolve(budget)
-    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch,
+                        replicate=replicate, k_max=k_max)
 
     cl = pmv.VecCluster(hw, budget=bm)
     cl.add_device()
@@ -514,6 +585,71 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
 
 # ---------------------------------------------------------------------------
+# Replica-group plan edits (scale-out / scale-in): re-place one workload
+# as k equal-rate-share replicas.  Shares always renormalize to the base
+# spec's rate — merging 3 replicas to 2 leaves each survivor at rate/2.
+# ---------------------------------------------------------------------------
+
+def _set_replicas(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
+                  profiles: Dict[str, WorkloadCoefficients],
+                  hw: HardwareSpec, *, engine: str = "vec",
+                  budget: BudgetLike = QUEUEING,
+                  batch: str = "eq17") -> ProvisioningPlan:
+    """Remove every current replica of ``spec`` (a BASE spec: plain name,
+    full workload rate), then `add_workload` each of the k new replicas
+    at its rate share — min-interference placement incl. fresh devices."""
+    base = spec.name
+    if replication.is_replica(base):
+        raise ValueError(f"pass the BASE spec, not replica {base!r}")
+    cur = replication.group_placements(plan.placements).get(base)
+    if not cur:
+        raise KeyError(f"workload {base!r} not in plan")
+    out = plan
+    for p in cur:
+        out = remove_workload(out, p.workload.name)
+    for rs in replication.make_replicas(spec, k):
+        out = add_workload(out, rs, profiles, hw, engine=engine,
+                           budget=budget, batch=batch)
+    return out
+
+
+def split_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
+                   profiles: Dict[str, WorkloadCoefficients],
+                   hw: HardwareSpec, *, engine: str = "vec",
+                   budget: BudgetLike = QUEUEING,
+                   batch: str = "eq17") -> ProvisioningPlan:
+    """Scale-OUT edit: serve ``spec`` (base name, full rate) with k
+    replicas, k strictly above the current count.  Each replica gets an
+    equal rate share (summing to ``spec.rate_rps``), its own Theorem-1
+    batch/budget at the share rate, and a min-interference placement."""
+    k_cur = len(replication.group_placements(plan.placements)
+                .get(spec.name, ()))
+    if k <= k_cur:
+        raise ValueError(f"{spec.name!r} already has {k_cur} replicas; "
+                         f"split needs k > {k_cur}, got {k}")
+    return _set_replicas(plan, spec, k, profiles, hw, engine=engine,
+                         budget=budget, batch=batch)
+
+
+def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
+                   profiles: Dict[str, WorkloadCoefficients],
+                   hw: HardwareSpec, *, engine: str = "vec",
+                   budget: BudgetLike = QUEUEING,
+                   batch: str = "eq17") -> ProvisioningPlan:
+    """Scale-IN edit: drop to k replicas (k below the current count).
+    Survivor shares renormalize to ``spec.rate_rps`` — the merged rate
+    is re-split equally, never silently lost; ``k = 1`` returns the
+    workload to its plain (unreplicated) name."""
+    k_cur = len(replication.group_placements(plan.placements)
+                .get(spec.name, ()))
+    if not 1 <= k < k_cur:
+        raise ValueError(f"{spec.name!r} has {k_cur} replicas; "
+                         f"merge needs 1 <= k < {k_cur}, got {k}")
+    return _set_replicas(plan, spec, k, profiles, hw, engine=engine,
+                         budget=budget, batch=batch)
+
+
+# ---------------------------------------------------------------------------
 # Heterogeneous type selection (paper Sec. 5.3, Fig. 20)
 # ---------------------------------------------------------------------------
 
@@ -522,7 +658,8 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
                        hardware: Sequence[HardwareSpec], *,
                        engine: str = "vec",
                        budget: BudgetLike = QUEUEING,
-                       batch: str = "eq17"
+                       batch: str = "eq17", replicate: bool = False,
+                       k_max: int = K_MAX
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
     """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
@@ -530,7 +667,8 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
     for hw in hardware:
         try:
             plan = provision(specs, profiles_by_hw[hw.name], hw,
-                             engine=engine, budget=budget, batch=batch)
+                             engine=engine, budget=budget, batch=batch,
+                             replicate=replicate, k_max=k_max)
         except InfeasibleError as e:
             errors.append(str(e))
             continue
@@ -566,11 +704,21 @@ def predicted_violations(plan: ProvisioningPlan,
     """Workloads whose model-predicted t_inf exceeds their inference
     budget (Constraint 14 check used by the scale sweep).  Pass the same
     ``budget`` the plan was provisioned with: the budget IS the per-
-    workload threshold (T_slo/2 under "half")."""
+    workload threshold (T_slo/2 under "half").  Replicas are merged to
+    BASE names — a workload violates when ANY of its replicas exceeds
+    the budget at its rate share — so counts stay comparable across
+    replicated and unreplicated plans."""
     bm = resolve(budget)
     metrics = predicted_plan_metrics(plan, profiles, hw)
     by_name = {p.workload.name: p for p in plan.placements}
-    return [name for name, wp in metrics.items()
-            if wp.t_inf > bm.budget_ms(by_name[name].workload.slo_ms,
-                                       by_name[name].workload.rate_rps,
-                                       by_name[name].batch) + 1e-6]
+    out: List[str] = []
+    seen = set()
+    for name, wp in metrics.items():
+        if wp.t_inf > bm.budget_ms(by_name[name].workload.slo_ms,
+                                   by_name[name].workload.rate_rps,
+                                   by_name[name].batch) + 1e-6:
+            base = replication.base_name(name)
+            if base not in seen:
+                seen.add(base)
+                out.append(base)
+    return out

@@ -42,6 +42,20 @@ the cap binds only when the queueing terms are negligible.
 
 `budget="half"` keeps the paper-faithful fixed split (`T_slo / 2`
 bit-for-bit); `budget="queueing"` is the provisioner-wide default.
+
+Online use (docs/control-plane.md): the control plane re-solves budgets
+with `BudgetModel.with_burstiness(cv2)` — the measured arrival CV^2
+clamped to [BURSTINESS_LO, BURSTINESS_HI] and additionally FLOORED at
+the provisioned model's burstiness by the reconciler (the "burstiness
+floor": a deterministic trace's cv2 ~ 0 must never loosen budgets
+mid-drift, while a spike train's cv2 >> 1 tightens them).  Replica
+groups need no special casing here: each replica's budget is solved at
+its RATE SHARE, which is what makes splitting an infeasible workload
+recover a feasible per-replica budget (docs/provisioning.md).
+
+The full narrative — model, solver, and how the split closed the
+5-predicted-vs-178-simulated violation gap — lives in
+docs/provisioning.md ("The SLO budget split").
 """
 from __future__ import annotations
 

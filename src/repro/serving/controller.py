@@ -5,39 +5,56 @@ provisions once at t=0; the paper's runtime half (Sec. 4.2: the
 inference workload placer is "periodically executed", Sec. 4.4: the GPU
 resource scaler reacts to load changes) has three moving parts, built
 here on the simulator's unified ``adjust_fn`` hook
-(``adjust_scope="cluster"``):
+(``adjust_scope="cluster"``).  docs/control-plane.md is the narrative
+companion; the terminology here (band, debounce, burstiness floor,
+split/merge) matches it.
 
-  1. **Estimators** (`ArrivalEstimator`): per-workload EWMA arrival rate
-     and burstiness (squared coefficient of variation of inter-arrival
-     gaps) fed from each instance's ``recent_arrivals`` monitor window.
+  1. **Estimators** (`ArrivalEstimator`): per-workload EWMA arrival
+     rate, trend, and burstiness (squared coefficient of variation of
+     inter-arrival gaps) fed from each instance's ``recent_arrivals``
+     monitor window.  Replicas of one workload feed a single estimator
+     with their merged (sorted) windows — the slices partition the
+     pooled stream, so the merge IS the workload's arrival process.
      CV^2 ~ 0 on deterministic traces, ~ 1 on Poisson, >> 1 on spikes —
      exactly the `BudgetModel.burstiness` scale, so the budget split
-     adapts to the measured arrival process (ROADMAP open item).
+     adapts to the measured arrival process.
 
-  2. **Reconciler** (`Reconciler`): hysteresis-banded drift detection
-     (asymmetric up/down bands + consecutive-tick debounce so Poisson
-     noise never triggers) that, on sustained drift, re-solves the
-     queueing budget with the online burstiness estimate, re-optimizes
-     the batch size jointly with the split (``batch="joint"``), and
-     issues incremental plan edits — `provisioner.resize_workload`
-     (same-device Alg. 2 re-run), `remove_workload` (departures),
-     `migrate_workload` / `add_workload` (min-interference re-placement
-     incl. fresh devices) — each O(devices touched) through
+  2. **Reconciler** (`Reconciler`): drift detection behind a
+     **hysteresis band** — reconfigure only when the estimate leaves
+     max(band, noise_sigmas * sigma) of the plan rate, with an
+     asymmetric **debounce** (fast up: under-capacity compounds into
+     backlog; slow down: releasing capacity on noise is the expensive
+     error) so Poisson noise never triggers.  On sustained drift it
+     re-solves the queueing budget with the online burstiness estimate
+     (floored at the provisioned value — the **burstiness floor**:
+     adaptation only tightens), re-optimizes the batch size jointly
+     with the split (``batch="joint"``), and issues incremental plan
+     edits: `provisioner.resize_workload` (same-device Alg. 2 re-run),
+     `remove_workload` (departures), `add_workload` (re-arrivals and
+     fresh devices), and — the replica layer — **split** (scale-out: a
+     workload infeasible even solo at r = 1.0 becomes
+     `required_replicas` rate-share replicas ``w#0..w#k-1``) and
+     **merge** (scale-in on the slow path; survivor shares renormalize
+     to the full rate).  Each edit is O(devices touched) through
      `VecCluster`'s cached invariants, with the scalar engines as the
      pinned oracle.
 
   3. **Controller** (`Controller`): the ``adjust_fn`` adapter.  Each
      control period it feeds the estimators, runs the reconciler, and
-     applies the resulting plan deltas to the live instances (r / batch
-     / gpu mutations the simulator turns into latency-table rebuilds and
-     migrations).  A drift-free run performs ZERO reconfigurations and
+     applies the resulting plan deltas to the live instances — r /
+     batch / gpu mutations, plus the replica lifecycle: renaming ``w``
+     to ``w#0`` on the first split, APPENDING fresh `ServedInstance`s
+     for scale-out (the simulator routes them a slice of the pooled
+     arrival stream), and parking merged-away replicas at zero rate
+     share.  A drift-free run performs ZERO reconfigurations and
      leaves the plan bit-identical — the no-op guarantee CI pins.
 
 Determinism: everything the controller observes (``recent_arrivals``
 slices of the pre-generated arrival streams) is byte-identical across
-simulator engines, so a controlled run is engine-identical too, modulo
-the wall-clock ``reconfig_latency_ms`` stat.  A `Controller` is
-STATEFUL — construct a fresh one per simulation run.
+simulator engines, so a controlled run — including its splits and the
+re-split arrival routing — is engine-identical too, modulo the
+wall-clock ``reconfig_latency_ms`` stat.  A `Controller` is STATEFUL —
+construct a fresh one per simulation run.
 """
 from __future__ import annotations
 
@@ -50,6 +67,7 @@ import numpy as np
 
 from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
+from repro.core import replication
 from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
                               WorkloadCoefficients, WorkloadSpec)
@@ -84,6 +102,10 @@ class ControllerConfig:
     depart_missed: float = 8.0   # expected arrivals missed in a zero-
                                  # arrival stretch before declaring departure
     min_gap_obs: int = 4         # gaps needed before trusting a cv2 update
+    k_max: int = prov.K_MAX      # replica ceiling for scale-out (a drifted
+                                 # workload infeasible even solo at r=1.0
+                                 # is split into <= k_max rate-share
+                                 # replicas; 1 disables replication)
 
 
 class ArrivalEstimator:
@@ -296,11 +318,13 @@ class PlanState:
 class PlanEdit:
     """One reconciliation action, recorded for telemetry/benchmarks."""
     t_s: float
-    action: str        # "resize" | "remove" | "add" | "infeasible"
-    workload: str
+    action: str        # "resize" | "remove" | "add" | "split" | "merge"
+                       # | "infeasible"
+    workload: str      # BASE workload name (replicas are one workload)
     rate_from: float
     rate_to: float
     burstiness: float
+    replicas: int = 1  # replica count AFTER the edit (0 on remove)
 
 
 class Reconciler:
@@ -336,8 +360,19 @@ class Reconciler:
         # through the plan-in/plan-out provisioner ops (the oracle)
         self._state: Optional[PlanState] = None
         self._state_bm = self.bm
-        self.targets: Dict[str, WorkloadSpec] = {
-            p.workload.name: p.workload for p in plan.placements}
+        # targets are keyed by BASE workload name: a replica group is
+        # reconciled as ONE workload whose target spec carries the full
+        # (summed) rate; the plan holds the per-replica share specs
+        self.targets: Dict[str, WorkloadSpec] = {}
+        for base, group in replication.group_placements(
+                plan.placements).items():
+            spec0 = group[0].workload
+            if len(group) == 1 and not replication.is_replica(spec0.name):
+                self.targets[base] = spec0
+            else:
+                self.targets[base] = dataclasses.replace(
+                    spec0, name=base,
+                    rate_rps=sum(p.workload.rate_rps for p in group))
         self.departed: Dict[str, WorkloadSpec] = {}
         self.edits: List[PlanEdit] = []
         self._breach: Dict[str, tuple] = {}    # name -> (kind, streak)
@@ -460,25 +495,72 @@ class Reconciler:
             self.plan = self._state.to_plan()
         return changed
 
+    # -- plan-edit plumbing (replica-aware) ---------------------------------
+
+    def _group(self, base: str) -> List[Placement]:
+        """Current replica placements of one base workload."""
+        return replication.group_placements(self.plan.placements
+                                            ).get(base, [])
+
+    def _remove_name(self, name: str) -> None:
+        if self._state is not None:
+            self._state.remove(name)
+        else:
+            self.plan = prov.remove_workload(self.plan, name)
+
+    def _add_spec(self, spec: WorkloadSpec) -> None:
+        if self._state is not None:
+            self._state.add(spec, batch=self.batch)
+        else:
+            self.plan = prov.add_workload(self.plan, spec, self.profiles,
+                                          self.hw, engine=self.engine,
+                                          budget=self.bm, batch=self.batch)
+
+    def _resize_spec(self, spec: WorkloadSpec) -> None:
+        if self._state is not None:
+            self._state.resize(spec, batch=self.batch)
+        else:
+            self.plan = prov.resize_workload(self.plan, spec,
+                                             self.profiles, self.hw,
+                                             engine=self.engine,
+                                             budget=self.bm,
+                                             batch=self.batch)
+
+    def _validate(self, reps: List[WorkloadSpec],
+                  c: WorkloadCoefficients) -> bool:
+        """Pre-flight Theorem 1 on every replica spec so a multi-replica
+        edit either applies atomically or not at all (a mid-loop
+        InfeasibleError would leave the group half-edited)."""
+        try:
+            for rs in reps:
+                b = prov.appropriate_batch(rs, c, self.hw, budget=self.bm,
+                                           batch=self.batch)
+                prov.resource_lower_bound(rs, c, self.hw, b,
+                                          budget=self.bm)
+        except prov.InfeasibleError:
+            return False
+        return True
+
     def _apply(self, now_s: float, name: str, est: ArrivalEstimator,
                backlog: float) -> bool:
         cfg = self.cfg
         cur = self.targets.get(name)
         orig = cur if cur is not None else self.departed[name]
         plan_rate = cur.rate_rps if cur is not None else 0.0
+        group = self._group(name)
+        k_cur = len(group)
 
         # departure: sustained near-zero rate or a long-enough silence
         if cur is not None and (
                 est.rate_rps < cfg.depart_frac * self._orig_rate(name)
                 or self._departed_now(name, est)):
-            if self._state is not None:
-                self._state.remove(name)
-            else:
-                self.plan = prov.remove_workload(self.plan, name)
+            for p in group:
+                self._remove_name(p.workload.name)
             self.departed[name] = cur
             del self.targets[name]
             self.edits.append(PlanEdit(now_s, "remove", name,
-                                       plan_rate, 0.0, self.bm.burstiness))
+                                       plan_rate, 0.0, self.bm.burstiness,
+                                       0))
             return True
 
         new_rate = est.rate_rps
@@ -490,37 +572,71 @@ class Reconciler:
             drain = min(backlog * 1000.0 / max(self._period_ms, 1e-9),
                         cfg.drain_cap * est.rate_rps)
             new_rate += drain
-        new_spec = dataclasses.replace(orig, rate_rps=new_rate)
+        new_spec = dataclasses.replace(orig, name=name, rate_rps=new_rate)
+        c = self.profiles[orig.model]
+        # scale-out/scale-in decision: the smallest solo-feasible replica
+        # count at the new rate (None = hopeless at ANY k).  Up-drift
+        # never merges in the same edit (freeing capacity mid-ramp is
+        # the expensive error — scale-in rides the slow, debounced down
+        # path like any release), and a hopeless workload KEEPS its
+        # current membership: merging a working group down to one
+        # guaranteed-violating instance would destroy capacity the
+        # residual still uses.
+        k_need = prov.required_replicas(new_spec, c, self.hw,
+                                        budget=self.bm, batch=self.batch,
+                                        k_max=cfg.k_max) \
+            if cfg.k_max > 1 else 1
         try:
             if cur is None:               # re-arrival of a departed workload
-                if self._state is not None:
-                    self._state.add(new_spec, batch=self.batch)
-                else:
-                    self.plan = prov.add_workload(
-                        self.plan, new_spec, self.profiles, self.hw,
-                        engine=self.engine, budget=self.bm,
-                        batch=self.batch)
+                reps = replication.make_replicas(new_spec, k_need or 1)
+                if len(reps) > 1 and not self._validate(reps, c):
+                    raise prov.InfeasibleError(name)
+                for rs in reps:
+                    self._add_spec(rs)
                 del self.departed[name]
-                action = "add"
+                action, k_new = "add", len(reps)
             else:
-                if self._state is not None:
-                    self._state.resize(new_spec, batch=self.batch)
+                if k_need is None:
+                    k_new = max(k_cur, 1)    # hopeless: keep membership
+                elif est.projected_rps > plan_rate:
+                    k_new = max(k_cur, k_need)
                 else:
-                    self.plan = prov.resize_workload(
-                        self.plan, new_spec, self.profiles, self.hw,
-                        engine=self.engine, budget=self.bm,
-                        batch=self.batch)
-                action = "resize"
+                    k_new = k_need
+                k_new = max(1, min(k_new, cfg.k_max))
+                reps = replication.make_replicas(new_spec, k_new)
+                same = [r.name for r in reps] == [p.workload.name
+                                                  for p in group]
+                # pre-flight anything non-atomic: a membership change
+                # mutates the plan across several remove/add calls, and
+                # a multi-replica resize across several resize calls —
+                # a mid-loop raise would leave the group half-edited
+                # (a single same-name resize raises before mutating)
+                if (not same or len(reps) > 1) \
+                        and not self._validate(reps, c):
+                    raise prov.InfeasibleError(name)
+                if same:
+                    # same membership: per-replica same-device resize
+                    for rs in reps:
+                        self._resize_spec(rs)
+                    action = "resize"
+                else:
+                    # membership changes: re-place the whole group (the
+                    # removed rate shares renormalize over the new k)
+                    for p in group:
+                        self._remove_name(p.workload.name)
+                    for rs in reps:
+                        self._add_spec(rs)
+                    action = "split" if k_new > k_cur else "merge"
         except prov.InfeasibleError:
-            # beyond any feasible allocation even solo on a full device:
+            # beyond any feasible allocation even split k_max ways:
             # keep the current placement, report honestly via the edits
             self.edits.append(PlanEdit(now_s, "infeasible", name,
                                        plan_rate, new_rate,
-                                       self.bm.burstiness))
+                                       self.bm.burstiness, k_cur))
             return False
         self.targets[name] = new_spec
         self.edits.append(PlanEdit(now_s, action, name, plan_rate,
-                                   new_rate, self.bm.burstiness))
+                                   new_rate, self.bm.burstiness, k_new))
         return True
 
 
@@ -556,10 +672,15 @@ class Controller:
                                      batch=batch, engine=engine,
                                      cfg=self.cfg)
         bm = resolve(budget)
+        # one estimator per BASE workload: replicas of one workload feed
+        # a single merged arrival estimate (their slices partition the
+        # pooled stream, so the merge IS the workload's arrival process)
         self.estimators: Dict[str, ArrivalEstimator] = {
-            p.workload.name: ArrivalEstimator(
-                p.workload.rate_rps, self.cfg, burstiness=bm.burstiness)
-            for p in plan.placements}
+            base: ArrivalEstimator(
+                sum(p.workload.rate_rps for p in group), self.cfg,
+                burstiness=bm.burstiness)
+            for base, group in replication.group_placements(
+                plan.placements).items()}
         self._last_s = 0.0
         self.n_ticks = 0
         # (t_s, $/h) after each tick: the cost the reconciled plan would
@@ -596,12 +717,23 @@ class Controller:
                 "activation could overcommit the device")
         window_ms = max((now_s - self._last_s) * 1000.0, 1e-9)
         backlog: Dict[str, float] = {}
+        by_base: Dict[str, List[ServedInstance]] = {}
         for inst in instances:
-            est = self.estimators.get(inst.spec.name)
+            by_base.setdefault(replication.base_name(inst.spec.name),
+                               []).append(inst)
+        for base, insts_b in by_base.items():
+            est = self.estimators.get(base)
             if est is None:       # instance outside the managed plan
                 continue
-            est.observe(inst.recent_arrivals, window_ms)
-            backlog[inst.spec.name] = float(len(inst.queue))
+            if len(insts_b) == 1:
+                merged = insts_b[0].recent_arrivals
+            else:
+                # replica slices partition the pooled stream; their
+                # sorted merge is the workload's arrival window
+                merged = np.sort(np.concatenate(
+                    [np.asarray(i.recent_arrivals) for i in insts_b]))
+            est.observe(merged, window_ms)
+            backlog[base] = float(sum(len(i.queue) for i in insts_b))
         if self.reconciler.reconcile(now_s, self.estimators, backlog,
                                      window_ms):
             self._apply_plan(instances)
@@ -611,20 +743,64 @@ class Controller:
 
     def _apply_plan(self, instances: List[ServedInstance]) -> None:
         """Map the reconciled plan onto the live instances: r / batch /
-        gpu deltas the simulator turns into table rebuilds/migrations.
-        A departed workload's instance is parked at the allocation floor
-        (its arrivals have stopped; r_unit keeps the physics valid)."""
+        gpu deltas the simulator turns into table rebuilds/migrations,
+        plus the replica lifecycle —
+
+          * a plan replica with no live instance first ADOPTS an
+            unmatched instance of the same base workload (the first
+            split renames the live ``w`` to ``w#0``; a merge-to-one
+            renames ``w#0`` back to ``w``), else a fresh
+            `ServedInstance` is APPENDED (the simulator wires its RNG
+            streams and routes it a slice of the pooled arrivals);
+          * a live replica the plan no longer names is PARKED at the
+            allocation floor with a ZERO rate share, so the re-split
+            routes it no further arrivals (it still drains its queue);
+          * a departed workload's instances are parked as before
+            (their arrivals have stopped; r_unit keeps physics valid).
+        """
         by_name = {p.workload.name: p for p in self.plan.placements}
+        plan_bases = {replication.base_name(n) for n in by_name}
+        live_names = {inst.spec.name for inst in instances}
+        free: Dict[str, List[ServedInstance]] = {}
         for inst in instances:
-            p = by_name.get(inst.spec.name)
-            if p is None:
-                if inst.spec.name in self.reconciler.departed:
-                    inst.r = self.hw.r_unit
-                    inst.batch = 1
+            name = inst.spec.name
+            if name in by_name:
+                p = by_name[name]
+                inst.spec = p.workload        # refresh the rate share
+                inst.r = p.r
+                inst.batch = max(1, p.batch)
+                inst.gpu = p.gpu
                 continue
-            inst.r = p.r
-            inst.batch = max(1, p.batch)
-            inst.gpu = p.gpu
+            base = replication.base_name(name)
+            if base in plan_bases:
+                free.setdefault(base, []).append(inst)   # rename/park pool
+            elif base in self.reconciler.departed:
+                inst.r = self.hw.r_unit
+                inst.batch = 1
+        for p in self.plan.placements:        # plan order = replica order
+            name = p.workload.name
+            if name in live_names:
+                continue
+            base = replication.base_name(name)
+            pool = free.get(base)
+            if pool:
+                inst = pool.pop(0)            # adopt: rename in place
+                inst.spec = p.workload
+                inst.r = p.r
+                inst.batch = max(1, p.batch)
+                inst.gpu = p.gpu
+            else:                             # scale-out: fresh replica
+                sibling = next(i for i in instances
+                               if replication.base_name(i.spec.name)
+                               == base)
+                instances.append(ServedInstance(
+                    spec=p.workload, desc=sibling.desc, r=p.r,
+                    batch=max(1, p.batch), gpu=p.gpu))
+        for pool in free.values():            # merged-away replicas
+            for inst in pool:
+                inst.r = self.hw.r_unit
+                inst.batch = 1
+                inst.spec = dataclasses.replace(inst.spec, rate_rps=0.0)
 
     @property
     def hw(self) -> HardwareSpec:

@@ -52,6 +52,20 @@ Three roles:
    pre-generated in `_setup` from the shared per-instance RNG streams,
    so traced scenarios stay byte-identical across engines too.
 
+   Replica groups (docs/simulator.md): a workload served by replicas
+   ``w#0..w#k-1`` draws ONE pooled arrival stream at the summed share
+   rate, split rate-proportionally by `_split_stream` (deterministic
+   weighted round-robin; Poisson thinning) so each slice is a faithful
+   share of the workload's traffic and the pooled stream is exactly
+   partitioned.  At adjust ticks `_resync_replicas` re-splits the
+   FUTURE tail whenever the controller splits/merges a group or
+   appends a fresh replica instance (cluster scope only) — past
+   arrivals keep their assignment.  `SimResult.per_workload`,
+   `request_latencies` and `violations` merge replicas back to BASE
+   names (pooled percentiles, summed rates); `SimResult.per_replica`
+   keeps the unmerged view.  A plan with no replicas takes the exact
+   pre-replication code paths, byte for byte.
+
 3. **Full-cluster validation** (`simulate_full`): every device of an
    m=1000-scale plan simulated at ground truth with events/sec
    throughput reported in `SimResult.stats` — tracked per PR by
@@ -69,6 +83,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import replication
 from repro.core.coefficients import ProfileSample
 from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
 from repro.profiling.metrics import ServedModelDesc
@@ -150,10 +165,14 @@ class ServedInstance:
 
 @dataclass
 class SimResult:
+    # keyed by BASE workload name: a replica group's requests are merged
+    # back into one pooled per-workload record (docs/simulator.md);
+    # per_replica keeps the unmerged per-instance view
     per_workload: Dict[str, Dict[str, float]]
     timeline: List[Dict] = field(default_factory=list)
     request_latencies: Dict[str, np.ndarray] = field(default_factory=dict)
     request_waits: Dict[str, np.ndarray] = field(default_factory=dict)
+    per_replica: Dict[str, Dict[str, float]] = field(default_factory=dict)
     stats: Dict[str, float] = field(default_factory=dict)
 
     def _latency_ms(self, name: str, metric) -> float:
@@ -262,14 +281,155 @@ def _noisy_t_inf(t_load: float, t_sch: float, t_act: float, t_fb: float,
     return t_load + (t_sch * ns + t_act * na) / slow + t_fb
 
 
+# ---------------------------------------------------------------------------
+# Replica groups: arrival-stream splitting (docs/simulator.md).  A base
+# workload's requests form ONE pooled stream; replicas `w#0..w#k-1`
+# each receive a rate-share slice of it.  Splitting is deterministic
+# given (pooled stream, shares, split version) and lives in helpers
+# shared by both engines — that is what keeps replicated and runtime-
+# split runs byte-identical across the scalar oracle and the vec engine.
+# ---------------------------------------------------------------------------
+
+def _split_stream(arr: np.ndarray, fracs: Sequence[float], poisson: bool,
+                  rng: np.random.Generator) -> List[np.ndarray]:
+    """Partition pooled arrivals among k replicas by rate fraction.
+
+    Deterministic arrivals: weighted round-robin — each replica j with
+    fraction f_j owns virtual slots at (m+1)/f_j, and the merged sorted
+    slot order (ties to the lower replica index) assigns arrivals
+    rate-proportionally with maximal interleaving.  Poisson arrivals:
+    i.i.d. thinning — one uniform draw per arrival picks the replica,
+    so each slice is itself Poisson at its share rate.  Zero-share
+    replicas receive nothing; an all-zero share vector leaves the whole
+    stream on replica 0 (a parked group still drains its arrivals).
+    """
+    k = len(fracs)
+    if k == 1:
+        return [arr]
+    n = arr.size
+    if n == 0:
+        return [np.empty(0) for _ in range(k)]
+    fr = np.asarray(fracs, dtype=np.float64)
+    total = float(fr.sum())
+    if total <= 0.0:
+        return [arr] + [np.empty(0) for _ in range(k - 1)]
+    fr = fr / total
+    if poisson:
+        cum = np.cumsum(fr)
+        cum[-1] = max(cum[-1], 1.0)
+        u = rng.uniform(0.0, 1.0, size=n)
+        assign = np.searchsorted(cum, u, side="right")
+    else:
+        slots = []
+        ids = []
+        for j, f in enumerate(fr):
+            if f <= 0.0:
+                continue
+            nj = int(math.ceil(n * f)) + k + 1
+            slots.append(np.arange(1.0, nj + 1.0) / f)
+            ids.append(np.full(nj, j, dtype=np.int64))
+        t = np.concatenate(slots)
+        r = np.concatenate(ids)
+        order = np.lexsort((r, t))[:n]
+        assign = r[order]
+    return [arr[assign == j] for j in range(k)]
+
+
+def _replica_members(instances: List[ServedInstance]
+                     ) -> Dict[str, List[int]]:
+    """Instance indices grouped by base workload name, in replica order
+    (replica index, then instance order — stable across engines)."""
+    groups: Dict[str, List[int]] = {}
+    for i, inst in enumerate(instances):
+        groups.setdefault(replication.base_name(inst.spec.name),
+                          []).append(i)
+    for base, idxs in groups.items():
+        idxs.sort(key=lambda i: (replication.replica_index(
+            instances[i].spec.name) or 0, i))
+    return groups
+
+
+class _ReplicaRouter:
+    """Book-keeping for pooled base streams and their current split.
+
+    ``base``/``anchor`` hold, per base workload, the pooled arrival
+    array and the instance index whose RNG stream generated it (replica
+    0 at setup); ``sig`` caches the last applied membership signature —
+    member indices plus NORMALIZED shares, so equal-proportion resizes
+    never force a pointless re-split; ``version`` counts re-splits to
+    key the thinning RNG (``default_rng([seed, anchor, 3, version])``).
+    """
+    __slots__ = ("seed", "poisson", "base", "anchor", "version", "sig")
+
+    def __init__(self, seed: int, poisson: bool):
+        self.seed = seed
+        self.poisson = poisson
+        self.base: Dict[str, np.ndarray] = {}
+        self.anchor: Dict[str, int] = {}
+        self.version: Dict[str, int] = {}
+        self.sig: Dict[str, tuple] = {}
+
+    @staticmethod
+    def signature(members: Sequence[Tuple[int, float]]) -> tuple:
+        total = sum(sh for _, sh in members)
+        if total <= 0.0:
+            total = 1.0
+        return tuple((i, round(sh / total, 9)) for i, sh in members)
+
+    def assign_rng(self, base: str) -> np.random.Generator:
+        return np.random.default_rng(
+            [self.seed, self.anchor[base], 3, self.version[base]])
+
+
+def _resync_replicas(router: _ReplicaRouter,
+                     instances: List[ServedInstance],
+                     arrivals: List[np.ndarray],
+                     now_ms: float) -> List[int]:
+    """Re-split changed replica groups' FUTURE arrivals (> now) after an
+    adjust tick: splits, merges, renames and appended instances all show
+    up as a membership/share-signature change.  Arrivals at or before
+    ``now`` keep their existing assignment (they were already queued or
+    served).  Returns the instance indices whose arrays changed —
+    shared by both engines, so the re-split is exact by construction.
+    """
+    changed: List[int] = []
+    for base, idxs in sorted(_replica_members(instances).items()):
+        members = [(i, instances[i].spec.rate_rps) for i in idxs]
+        sig = router.signature(members)
+        if sig == router.sig.get(base):
+            continue
+        router.sig[base] = sig
+        if base not in router.base:
+            continue       # no pooled stream (workload unknown at setup)
+        barr = router.base[base]
+        tail = barr[int(np.searchsorted(barr, now_ms, side="right")):]
+        router.version[base] += 1
+        parts = _split_stream(tail, [sh for _, sh in members],
+                              router.poisson, router.assign_rng(base))
+        for i, part in zip(idxs, parts):
+            old = arrivals[i]
+            past = old[:int(np.searchsorted(old, now_ms, side="right"))]
+            arrivals[i] = np.concatenate([past, part]) \
+                if past.size else part
+            changed.append(i)
+    return changed
+
+
 def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
            shadow: bool, shadow_extra: float, horizon_ms: float,
            poisson: bool, seed: int,
            trace: Optional["traces_mod.Trace"] = None):
-    """Instances, device grouping, per-instance arrival arrays and noise
-    streams — identical for both engines.  With a `trace`, workloads it
-    names draw their arrivals from the piecewise-constant schedule
-    instead of the static rate (same per-instance RNG stream)."""
+    """Instances, device grouping, per-instance arrival arrays, noise
+    streams and the replica router — identical for both engines.  With
+    a `trace`, workloads it names (by BASE name) draw their arrivals
+    from the piecewise-constant schedule instead of the static rate.
+
+    Replica groups (`w#0..w#k-1`) get ONE pooled stream at the summed
+    share rate, generated from replica 0's RNG stream and split by
+    `_split_stream`; an unreplicated workload keeps the exact
+    pre-replication path (same RNG key, same array), which is what
+    makes k=1 plans byte-identical to pre-replication output.
+    """
     instances: List[ServedInstance] = []
     for p in plan.placements:
         instances.append(ServedInstance(
@@ -284,24 +444,37 @@ def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
             used = sum(instances[k].r for k in by_gpu[inst.gpu])
             inst.shadow_r = min(shadow_extra, max(0.0, 1.0 - used))
 
-    arrivals = []
-    for i, inst in enumerate(instances):
-        rng = np.random.default_rng([seed, i, 0])
-        if trace is not None and inst.spec.name in trace.scales:
-            edges, scales = trace.segments(inst.spec.name, horizon_ms)
-            arrivals.append(traces_mod.gen_arrivals(
-                inst.spec.rate_rps, edges, scales, horizon_ms, poisson,
-                rng))
+    router = _ReplicaRouter(seed, poisson)
+    arrivals: List[Optional[np.ndarray]] = [None] * len(instances)
+    for base, idxs in _replica_members(instances).items():
+        anchor = idxs[0]
+        rate = float(sum(instances[i].spec.rate_rps for i in idxs))
+        rng = np.random.default_rng([seed, anchor, 0])
+        if trace is not None and base in trace.scales:
+            edges, scales = trace.segments(base, horizon_ms)
+            pooled = traces_mod.gen_arrivals(rate, edges, scales,
+                                             horizon_ms, poisson, rng)
         else:
-            arrivals.append(_gen_arrivals(inst.spec.rate_rps, horizon_ms,
-                                          poisson, rng))
+            pooled = _gen_arrivals(rate, horizon_ms, poisson, rng)
+        router.base[base] = pooled
+        router.anchor[base] = anchor
+        router.version[base] = 0
+        members = [(i, instances[i].spec.rate_rps) for i in idxs]
+        router.sig[base] = router.signature(members)
+        if len(idxs) == 1:
+            arrivals[anchor] = pooled
+        else:
+            parts = _split_stream(pooled, [sh for _, sh in members],
+                                  poisson, router.assign_rng(base))
+            for i, part in zip(idxs, parts):
+                arrivals[i] = part
     noise_a = [_NoiseStream(np.random.default_rng([seed, i, 1]),
                             physics.NOISE_SIGMA)
                for i in range(len(instances))]
     noise_s = [_NoiseStream(np.random.default_rng([seed, i, 2]),
                             2 * physics.NOISE_SIGMA)
                for i in range(len(instances))]
-    return instances, by_gpu, arrivals, noise_a, noise_s
+    return instances, by_gpu, arrivals, noise_a, noise_s, router
 
 
 def _epoch_times(horizon_ms: float, monitor_period_s: float,
@@ -340,38 +513,53 @@ def _snap_placement(inst: ServedInstance):
 
 def _call_adjust(adjust_fn: AdjustFn, now_s: float,
                  insts: List[ServedInstance]
-                 ) -> Tuple[List[Tuple[ServedInstance, int]], float]:
-    """Invoke the callback; return ([(changed_inst, old_gpu)], wall_ms).
-    A "reconfiguration" is any change to an instance's placement tuple
-    (gpu, r, batch, shadow_r, shadow_active)."""
+                 ) -> Tuple[List[Tuple[ServedInstance, int]],
+                            List[ServedInstance], float]:
+    """Invoke the callback; return ([(changed_inst, old_gpu)],
+    [appended new instances], wall_ms).  A "reconfiguration" is any
+    change to an instance's placement tuple (gpu, r, batch, shadow_r,
+    shadow_active); a scale-out callback may APPEND fresh
+    `ServedInstance`s (replica scale-out) to the list it was handed."""
+    n0 = len(insts)
     snaps = [_snap_placement(i) for i in insts]
     t0 = _time.perf_counter()
     adjust_fn(now_s, insts)
     wall_ms = (_time.perf_counter() - t0) * 1000.0
-    changed = [(inst, s[0]) for inst, s in zip(insts, snaps)
+    changed = [(inst, s[0]) for inst, s in zip(insts[:n0], snaps)
                if _snap_placement(inst) != s]
-    return changed, wall_ms
+    return changed, list(insts[n0:]), wall_ms
 
 
 def _dispatch_adjust(adjust_fn: AdjustFn, now_s: float,
                      instances: List[ServedInstance],
                      by_gpu: Dict[int, List[int]], adjust_scope: str
-                     ) -> Tuple[List[Tuple[ServedInstance, int]], float]:
+                     ) -> Tuple[List[Tuple[ServedInstance, int]],
+                                List[ServedInstance], float]:
     """Scope-aware adjust_fn dispatch, shared by BOTH engines so the
     call grouping/ordering that the byte-identical contract depends on
     lives in exactly one place.  Returns (changed instances with their
-    pre-call gpu, total wall ms)."""
+    pre-call gpu, appended instances, total wall ms).  Instance
+    creation is a cluster-scope capability: under the per-device scope
+    the callback only sees throwaway sub-lists, so an append there is
+    rejected loudly instead of being dropped."""
     if adjust_scope == "cluster":
         calls = [instances]
     else:
         calls = [[instances[k] for k in by_gpu[g]] for g in sorted(by_gpu)]
     changed_all: List[Tuple[ServedInstance, int]] = []
+    new_all: List[ServedInstance] = []
     wall_ms = 0.0
     for insts_c in calls:
-        changed, dt = _call_adjust(adjust_fn, now_s, insts_c)
+        changed, new, dt = _call_adjust(adjust_fn, now_s, insts_c)
+        if new and adjust_scope != "cluster":
+            raise RuntimeError(
+                "adjust_fn appended instances under adjust_scope="
+                "'device'; replica scale-out requires "
+                "adjust_scope='cluster'")
         changed_all.extend(changed)
+        new_all.extend(new)
         wall_ms += dt
-    return changed_all, wall_ms
+    return changed_all, new_all, wall_ms
 
 
 def _sync_recent_arrivals(instances: List[ServedInstance],
@@ -399,22 +587,48 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
     per = {}
     req = {}
     wts = {}
-    for inst in instances:
-        lats = np.array(inst.latencies) if inst.latencies else np.array([np.inf])
-        waits = np.array(inst.waits) if inst.waits else np.array([np.inf])
-        per[inst.spec.name] = {
+    per_rep = {}
+    groups = _replica_members(instances)
+    for base, idxs in groups.items():
+        members = [instances[i] for i in idxs]
+        # replica-merged per-workload accounting: one pooled request
+        # stream per BASE workload (singleton groups reproduce the
+        # pre-replication records bit-for-bit)
+        lat_parts = [np.asarray(m.latencies) for m in members]
+        wait_parts = [np.asarray(m.waits) for m in members]
+        pooled_lat = np.concatenate(lat_parts) if len(members) > 1 \
+            else lat_parts[0]
+        pooled_wait = np.concatenate(wait_parts) if len(members) > 1 \
+            else wait_parts[0]
+        lats = pooled_lat if pooled_lat.size else np.array([np.inf])
+        waits = pooled_wait if pooled_wait.size else np.array([np.inf])
+        per[base] = {
             "p99_ms": float(np.percentile(lats, 99)),
             "p50_ms": float(np.percentile(lats, 50)),
             "avg_ms": float(np.mean(lats)),
             "wait_avg_ms": float(np.mean(waits)),
             "wait_p99_ms": float(np.percentile(waits, 99)),
-            "rps": inst.completed / duration_s,
-            "r_final": inst.r_eff,
-            "batch_final": inst.batch,
-            "shadow_used": inst.shadow_active,
+            "rps": sum(m.completed for m in members) / duration_s,
+            "r_final": sum(m.r_eff for m in members),
+            "batch_final": members[0].batch,
+            "shadow_used": any(m.shadow_active for m in members),
+            "n_replicas": len(members),
         }
-        req[inst.spec.name] = np.asarray(inst.latencies)
-        wts[inst.spec.name] = np.asarray(inst.waits)
+        req[base] = pooled_lat
+        wts[base] = pooled_wait
+        if len(members) > 1 or replication.is_replica(
+                members[0].spec.name):
+            for m in members:
+                m_lats = np.asarray(m.latencies)
+                per_rep[m.spec.name] = {
+                    "p99_ms": float(np.percentile(m_lats, 99))
+                    if m_lats.size else math.inf,
+                    "rps": m.completed / duration_s,
+                    "rate_share_rps": m.spec.rate_rps,
+                    "r_final": m.r_eff,
+                    "batch_final": m.batch,
+                    "gpu": m.gpu,
+                }
     # cluster-wide end-to-end latency + queueing-delay aggregates: the
     # measured counterpart of the provisioner's t_queue budget term
     all_lats = np.concatenate([v for v in req.values() if v.size]) \
@@ -429,7 +643,8 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
         "wait_p99_ms": float(np.percentile(all_waits, 99)),
     })
     return SimResult(per_workload=per, timeline=timeline,
-                     request_latencies=req, request_waits=wts, stats=stats)
+                     request_latencies=req, request_waits=wts,
+                     per_replica=per_rep, stats=stats)
 
 
 # ---------------------------------------------------------------------------
@@ -442,20 +657,29 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                      trace) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0                      # ms
-    instances, by_gpu, arrivals, noise_a, noise_s = _setup(
+    instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
         plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
 
-    events: List[Tuple[float, int, str, int]] = []     # (t, seq, kind, idx)
+    # (t, prio, seq, kind, idx, ver): the kind priority pins the same-
+    # time ordering the setup-time push order used to imply (arrival <
+    # monitor < adjust < done), so arrivals re-pushed MID-RUN by a
+    # replica re-split keep the arrival-before-boundary contract the
+    # vec engine's run_passes assumes
+    events: List[Tuple[float, int, int, str, int, int]] = []
     seq = 0
+    _PRIO = {"arrival": 0, "monitor": 1, "adjust": 2, "done": 3}
 
-    def push(t, kind, idx):
+    def push(t, kind, idx, ver=0):
         nonlocal seq
-        heapq.heappush(events, (t, seq, kind, idx))
+        heapq.heappush(events, (t, _PRIO[kind], seq, kind, idx, ver))
         seq += 1
 
     for i, arr in enumerate(arrivals):
         for t in arr.tolist():
             push(t, "arrival", i)
+    # per-instance arrival-stream version: a replica re-split bumps it
+    # and re-pushes the new tail, orphaning the stale queued events
+    arr_ver = [0] * len(instances)
     mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
                             adjust_period_s)
     for t in mon:
@@ -505,8 +729,10 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         push(done, "done", i)
 
     while events:
-        now, _, kind, idx = heapq.heappop(events)
+        now, _, _, kind, idx, ver = heapq.heappop(events)
         if kind == "arrival":
+            if ver != arr_ver[idx]:
+                continue               # stale stream (re-split tail)
             instances[idx].queue.append(now)
             try_serve(idx, now)
         elif kind == "done":
@@ -538,11 +764,30 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                         inst.shadow_active = True
         elif kind == "adjust" and adjust_fn is not None:
             _sync_recent_arrivals(instances, arrivals, now, adj_window_ms)
-            changed, wall_ms = _dispatch_adjust(
+            n_before = len(instances)
+            changed, new, wall_ms = _dispatch_adjust(
                 adjust_fn, now / 1000.0, instances, by_gpu, adjust_scope)
-            n_reconfigs += len(changed)
+            n_reconfigs += len(changed) + len(new)
             adjust_wall_ms += wall_ms
-            if any(old_g != inst.gpu for inst, old_g in changed):
+            for j in range(n_before, len(instances)):
+                # appended replica: fresh per-instance RNG streams keyed
+                # by its (new, never-reused) global index — the vec
+                # engine derives the identical keys
+                noise_a.append(_NoiseStream(
+                    np.random.default_rng([seed, j, 1]),
+                    physics.NOISE_SIGMA))
+                noise_s.append(_NoiseStream(
+                    np.random.default_rng([seed, j, 2]),
+                    2 * physics.NOISE_SIGMA))
+                arrivals.append(np.empty(0))
+                recent.append(deque())
+                arr_ver.append(0)
+            for i in _resync_replicas(router, instances, arrivals, now):
+                arr_ver[i] += 1
+                a = arrivals[i]
+                for t in a[np.searchsorted(a, now, side="right"):].tolist():
+                    push(t, "arrival", i, arr_ver[i])
+            if new or any(old_g != inst.gpu for inst, old_g in changed):
                 by_gpu = _regroup(instances)
 
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
@@ -587,7 +832,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                   trace) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0
-    instances, by_gpu, arrivals, noise_a, noise_s = _setup(
+    instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
         plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
     n_inst = len(instances)
 
@@ -723,11 +968,31 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 al = arr_l[i]
                 inst.queue = al[jptr[i]:bisect_right(al, T, jptr[i])]
             _sync_recent_arrivals(instances, arr_np, T, adj_window_ms)
-            changed, wall_ms = _dispatch_adjust(
+            n_before = n_inst
+            changed, new, wall_ms = _dispatch_adjust(
                 adjust_fn, T / 1000.0, instances, by_gpu, adjust_scope)
-            n_reconfigs += len(changed)
+            n_reconfigs += len(changed) + len(new)
             adjust_wall_ms += wall_ms
-            moved = False
+            for j in range(n_before, len(instances)):
+                # appended replica: same RNG keys as the scalar oracle
+                noise_a.append(_NoiseStream(
+                    np.random.default_rng([seed, j, 1]),
+                    physics.NOISE_SIGMA))
+                noise_s.append(_NoiseStream(
+                    np.random.default_rng([seed, j, 2]),
+                    2 * physics.NOISE_SIGMA))
+                arr_np.append(np.empty(0))
+                arr_l.append([])
+                jptr.append(0)
+                busy.append(0.0)
+                completed.append(0)
+                done_flat.append([])
+                wptr.append(0)
+                dirty.add(instances[j].gpu)
+            n_inst = len(instances)
+            for i in _resync_replicas(router, instances, arr_np, T):
+                arr_l[i] = arr_np[i].tolist()
+            moved = bool(new)
             for inst, old_g in changed:
                 dirty.add(old_g)
                 dirty.add(inst.gpu)

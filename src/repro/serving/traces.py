@@ -13,10 +13,21 @@ loop: per-workload piecewise-constant rate multipliers over the horizon
                     arrivals (rate 0 until an onset time), the
                     add/remove half of the control plane's job.
 
+Traces are what the control plane's estimators chase: the diurnal ramp
+drives sustained drift past the reconciler's hysteresis band, the
+step spike probes the debounce (a short flash crowd must not trigger a
+permanent reallocation), and churn exercises departure/re-arrival — the
+shared vocabulary (band, debounce, burstiness floor) is defined in
+docs/control-plane.md.
+
 Arrival streams are pre-generated per instance by `simulator._setup`
 from per-instance RNG streams shared by BOTH engines, so any trace stays
 byte-identical across the scalar oracle and the vectorized engine by
-construction.  `gen_arrivals` implements the two arrival processes:
+construction.  Trace keys are BASE workload names: a replica group
+(``w#0..w#k-1``, docs/simulator.md) draws ONE pooled stream for ``w``
+at the summed share rate, which the simulator then splits
+rate-proportionally.  `gen_arrivals` implements the two arrival
+processes:
 
   * deterministic ("constant-rate" analogue): arrivals at the inverse of
     the cumulative rate integral, i.e. evenly spaced *in expected count*

@@ -158,6 +158,11 @@ def test_hysteresis_quiet_on_noise_only_input(ctx12):
 
 
 def test_reconciler_fires_on_sustained_updrift(ctx12):
+    """A sustained up-drift reconfigures: either a same-count resize or
+    — when the drifted rate is infeasible even solo on a full device —
+    a replica split (the allocated rate shares then sum to the new
+    target instead of clamping at r = 1.0)."""
+    from repro.core import replication
     ctx, plan = ctx12
     rec = Reconciler(plan, ctx.profiles, ctx.hw)
     ests = _estimators(plan)
@@ -171,10 +176,12 @@ def test_reconciler_fires_on_sustained_updrift(ctx12):
         changed |= rec.reconcile(k + 1.0, ests)
     assert changed
     acts = [e for e in rec.edits if e.workload == name]
-    assert acts and acts[0].action == "resize"
+    assert acts and acts[0].action in ("resize", "split")
     assert rec.targets[name].rate_rps > base * 1.3
-    by_name = {p.workload.name: p for p in rec.plan.placements}
-    assert by_name[name].workload.rate_rps > base * 1.3
+    group = replication.group_placements(rec.plan.placements)[name]
+    assert len(group) == acts[-1].replicas
+    assert sum(p.workload.rate_rps for p in group) == \
+        pytest.approx(rec.targets[name].rate_rps)
 
 
 def test_reconciler_departure_and_rearrival(ctx12):
@@ -206,7 +213,13 @@ def test_reconciler_departure_and_rearrival(ctx12):
             est.observe(_det_window(rate, t0=k * WINDOW_MS), WINDOW_MS)
         rec.reconcile(k + 1.0, ests)
     assert name not in rec.departed
-    assert any(p.workload.name == name for p in rec.plan.placements)
+    # re-added possibly as a replica group (w#0..w#k-1) when the
+    # recovered rate + headroom is infeasible for a single instance
+    from repro.core import replication
+    group = replication.group_placements(rec.plan.placements).get(name)
+    assert group, f"{name} not re-added"
+    assert sum(p.workload.rate_rps for p in group) == \
+        pytest.approx(rec.targets[name].rate_rps)
     assert any(e.action == "add" and e.workload == name for e in rec.edits)
 
 

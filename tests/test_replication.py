@@ -1,0 +1,394 @@
+"""Replica groups end to end: naming/share conventions, the plan-layer
+split fallback, arrival-stream splitting, replica-merged accounting,
+and runtime scale-out — with the scalar engines pinned as oracles.
+
+The satellite guarantees pinned here (docs/provisioning.md,
+docs/simulator.md):
+
+  * k=1 replica plans are byte-identical to pre-replication plans, in
+    provisioning output AND in both simulator engines' latency streams;
+  * rate shares renormalize on replica removal (merge_workload) — the
+    survivors' shares always sum to the base workload's rate;
+  * merged per-workload p99 equals the percentile of the POOLED request
+    stream across replicas, and replica arrival slices exactly
+    partition the pooled base stream;
+  * a split plan and a runtime-splitting controlled run stay
+    byte-identical across the vec engine and the scalar oracle.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core import replication as repl
+from repro.core.experiments import fitted_context
+from repro.core.types import WorkloadSpec
+from repro.serving import traces
+from repro.serving.controller import Controller
+from repro.serving.simulator import (_ReplicaRouter, _setup, _split_stream,
+                                     simulate_full, simulate_plan)
+from repro.serving.workload import models, synthetic_workloads, \
+    twelve_workloads
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return fitted_context()
+
+
+@pytest.fixture(scope="module")
+def m100(ctx):
+    specs = synthetic_workloads(100, 0)
+    return specs, prov.provision(specs, ctx.profiles, ctx.hw,
+                                 replicate=True)
+
+
+# ---------------------------------------------------------------------------
+# Conventions: names, shares, grouping
+# ---------------------------------------------------------------------------
+
+def test_replica_naming_roundtrip():
+    assert repl.base_name("w#3") == "w"
+    assert repl.base_name("w") == "w"
+    assert repl.replica_index("w#3") == 3
+    assert repl.replica_index("w") is None
+    assert repl.replica_name("w", 2) == "w#2"
+    assert repl.is_replica("w#0") and not repl.is_replica("w")
+
+
+def test_make_replicas_shares_sum_to_rate():
+    s = WorkloadSpec("w", "m", 100.0, 90.0)
+    assert repl.make_replicas(s, 1) == [s]       # k=1: the plain spec
+    reps = repl.make_replicas(s, 3)
+    assert [r.name for r in reps] == ["w#0", "w#1", "w#2"]
+    assert sum(r.rate_rps for r in reps) == pytest.approx(90.0)
+    with pytest.raises(ValueError):
+        repl.make_replicas(reps[0], 2)           # split from the base only
+    with pytest.raises(ValueError):
+        repl.make_replicas(s, 0)
+
+
+# ---------------------------------------------------------------------------
+# Plan layer: split fallback, edits, renormalization
+# ---------------------------------------------------------------------------
+
+def test_k1_plans_byte_identical_to_prereplication(ctx):
+    """A workload mix where nothing needs splitting: replicate=True must
+    be a no-op bit for bit (plans AND both engines' latency streams)."""
+    specs = [s for s in twelve_workloads()
+             if prov.required_replicas(s, ctx.profiles[s.model],
+                                       ctx.hw) == 1]
+    assert len(specs) >= 8               # the mix is mostly feasible
+    base = prov.provision(specs, ctx.profiles, ctx.hw)
+    for engine in ("vec", "scalar"):
+        p = prov.provision(specs, ctx.profiles, ctx.hw, engine=engine,
+                           replicate=True)
+        assert [(x.workload, x.gpu, x.r, x.batch) for x in p.placements] \
+            == [(x.workload, x.gpu, x.r, x.batch) for x in base.placements]
+    mods = models()
+    a = simulate_plan(base, mods, ctx.hw, duration_s=3.0, poisson=True,
+                      engine="scalar")
+    b = simulate_plan(prov.provision(specs, ctx.profiles, ctx.hw,
+                                     replicate=True),
+                      mods, ctx.hw, duration_s=3.0, poisson=True,
+                      engine="vec")
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+
+
+def test_replicated_provision_clears_honest_residuals(ctx, m100):
+    """m=100 pin: the residual workloads that clamp at r=1.0 under the
+    queueing budget split into replicas and the model predicts clean —
+    and the scalar engine emits the identical replicated plan."""
+    specs, plan_r = m100
+    plan_0 = prov.provision(specs, ctx.profiles, ctx.hw)
+    v0 = prov.predicted_violations(plan_0, ctx.profiles, ctx.hw)
+    vr = prov.predicted_violations(plan_r, ctx.profiles, ctx.hw)
+    assert len(v0) > 0                   # the ceiling is real pre-split
+    assert vr == []                      # ...and split away
+    groups = repl.group_placements(plan_r.placements)
+    split = {b: g for b, g in groups.items() if len(g) > 1}
+    assert set(split) >= set(v0)         # every residual got replicas
+    for b, g in split.items():
+        base_rate = next(s.rate_rps for s in specs if s.name == b)
+        assert sum(p.workload.rate_rps for p in g) == \
+            pytest.approx(base_rate)
+    oracle = prov.provision(specs, ctx.profiles, ctx.hw, engine="scalar",
+                            replicate=True)
+    assert [(p.workload.name, p.gpu, round(p.r, 9), p.batch)
+            for p in oracle.placements] == \
+        [(p.workload.name, p.gpu, round(p.r, 9), p.batch)
+         for p in plan_r.placements]
+
+
+def test_merge_renormalizes_shares(ctx):
+    """Shares always sum to the base rate: after split 3 -> merge 2 ->
+    merge 1, each intermediate group renormalizes and k=1 restores the
+    plain name."""
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    w = specs[4]
+    plan3 = prov.split_workload(plan, w, 3, ctx.profiles, ctx.hw)
+    g3 = repl.group_placements(plan3.placements)[w.name]
+    assert [p.workload.name for p in g3] == [f"{w.name}#{j}"
+                                            for j in range(3)]
+    assert sum(p.workload.rate_rps for p in g3) == pytest.approx(w.rate_rps)
+    plan2 = prov.merge_workload(plan3, w, 2, ctx.profiles, ctx.hw)
+    g2 = repl.group_placements(plan2.placements)[w.name]
+    assert len(g2) == 2
+    assert sum(p.workload.rate_rps for p in g2) == pytest.approx(w.rate_rps)
+    assert all(p.workload.rate_rps == pytest.approx(w.rate_rps / 2)
+               for p in g2)              # equal shares, renormalized
+    plan1 = prov.merge_workload(plan2, w, 1, ctx.profiles, ctx.hw)
+    g1 = repl.group_placements(plan1.placements)[w.name]
+    assert [p.workload.name for p in g1] == [w.name]
+    assert g1[0].workload.rate_rps == pytest.approx(w.rate_rps)
+    with pytest.raises(ValueError):
+        prov.split_workload(plan3, w, 2, ctx.profiles, ctx.hw)
+    with pytest.raises(ValueError):
+        prov.merge_workload(plan1, w, 1, ctx.profiles, ctx.hw)
+
+
+# ---------------------------------------------------------------------------
+# Arrival-stream splitting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("poisson", [False, True], ids=["rr", "thin"])
+def test_split_stream_partitions_exactly(poisson):
+    rng = np.random.default_rng(7)
+    arr = np.sort(rng.uniform(0.0, 10_000.0, size=5000))
+    fracs = [0.5, 0.3, 0.2]
+    parts = _split_stream(arr, fracs, poisson,
+                          np.random.default_rng([0, 1, 3, 0]))
+    merged = np.sort(np.concatenate(parts))
+    assert np.array_equal(merged, arr)   # exact partition, nothing lost
+    counts = np.array([p.size for p in parts]) / arr.size
+    tol = 0.001 if not poisson else 0.05
+    assert np.allclose(counts, fracs, atol=tol)
+
+
+def test_split_stream_round_robin_interleaves():
+    """Equal shares reduce to strict round-robin (i mod k)."""
+    arr = np.arange(12, dtype=np.float64)
+    parts = _split_stream(arr, [0.5, 0.5], False,
+                          np.random.default_rng(0))
+    assert np.array_equal(parts[0], arr[0::2])
+    assert np.array_equal(parts[1], arr[1::2])
+
+
+def test_split_stream_zero_share_and_all_zero():
+    arr = np.arange(10, dtype=np.float64)
+    parts = _split_stream(arr, [1.0, 0.0], False, np.random.default_rng(0))
+    assert np.array_equal(parts[0], arr) and parts[1].size == 0
+    parts = _split_stream(arr, [0.0, 0.0], True, np.random.default_rng(0))
+    assert np.array_equal(parts[0], arr) and parts[1].size == 0
+
+
+@pytest.mark.parametrize("poisson", [False, True], ids=["det", "poisson"])
+def test_setup_pools_replica_group_arrivals(ctx, m100, poisson):
+    """Replica slices exactly partition the pooled base stream, and the
+    pooled stream is the one the base workload would have drawn."""
+    specs, plan_r = m100
+    instances, _, arrivals, _, _, router = _setup(
+        plan_r, models(), False, 0.0, 4000.0, poisson, 0)
+    groups = {}
+    for i, inst in enumerate(instances):
+        groups.setdefault(repl.base_name(inst.spec.name), []).append(i)
+    n_split = 0
+    for base, idxs in groups.items():
+        if len(idxs) == 1:
+            assert arrivals[idxs[0]] is router.base[base]
+            continue
+        n_split += 1
+        merged = np.sort(np.concatenate([arrivals[i] for i in idxs]))
+        assert np.array_equal(merged, router.base[base])
+    assert n_split >= 5                  # the m=100 mix really splits
+
+
+# ---------------------------------------------------------------------------
+# Simulation: merged accounting + engine equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("poisson", [False, True], ids=["det", "poisson"])
+def test_split_plan_engines_byte_identical(ctx, m100, poisson):
+    specs, plan_r = m100
+    mods = models()
+    a = simulate_full(plan_r, mods, ctx.hw, duration_s=3.0, seed=2,
+                      poisson=poisson, engine="scalar")
+    b = simulate_full(plan_r, mods, ctx.hw, duration_s=3.0, seed=2,
+                      poisson=poisson, engine="vec")
+    assert set(a.request_latencies) == {s.name for s in specs}
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+        assert np.array_equal(a.request_waits[w], b.request_waits[w]), w
+    assert a.per_workload == b.per_workload
+    assert a.per_replica == b.per_replica
+    assert a.stats["n_requests"] == b.stats["n_requests"]
+
+
+def test_merged_p99_matches_pooled_stream(ctx, m100):
+    """per_workload percentiles are computed over the POOLED request
+    stream, whose size is the sum of the replica streams (nothing
+    dropped, nothing double-counted)."""
+    specs, plan_r = m100
+    res = simulate_full(plan_r, models(), ctx.hw, duration_s=3.0, seed=2)
+    groups = repl.group_placements(plan_r.placements)
+    checked = 0
+    for base, g in groups.items():
+        if len(g) == 1:
+            continue
+        pooled = res.request_latencies[base]
+        names = [p.workload.name for p in g]
+        assert set(names) <= set(res.per_replica)
+        assert res.per_workload[base]["n_replicas"] == len(g)
+        assert res.per_workload[base]["p99_ms"] == \
+            pytest.approx(float(np.percentile(pooled, 99)))
+        assert res.per_workload[base]["rps"] == pytest.approx(
+            sum(res.per_replica[n]["rps"] for n in names))
+        checked += 1
+    assert checked >= 5
+
+
+def test_violations_accept_base_specs(ctx, m100):
+    specs, plan_r = m100
+    res = simulate_full(plan_r, models(), ctx.hw, duration_s=3.0, seed=0)
+    viols = res.violations({s.name: s for s in specs})
+    assert set(viols) <= {s.name for s in specs}
+
+
+# ---------------------------------------------------------------------------
+# Runtime scale-out (controller-driven splits)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ramped(ctx):
+    """A 12-workload diurnal ramp hot enough to force runtime splits."""
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    tr = traces.diurnal([s.name for s in specs], 8000.0, peak=2.2)
+    mods = models()
+    out = {}
+    for engine in ("scalar", "vec"):
+        ctl = Controller(plan, ctx.profiles, ctx.hw)
+        out[engine] = (ctl, simulate_plan(
+            plan, mods, ctx.hw, duration_s=8.0, trace=tr, adjust_fn=ctl,
+            adjust_scope="cluster", adjust_period_s=1.0, engine=engine))
+    return specs, plan, tr, out
+
+
+def test_runtime_split_occurs_and_appends_instances(ramped):
+    specs, plan, tr, out = ramped
+    ctl, res = out["vec"]
+    splits = [e for e in ctl.edits if e.action == "split"]
+    assert splits, "the 2.2x ramp must force at least one split"
+    assert all(e.replicas > 1 for e in splits)
+    split_bases = {e.workload for e in splits}
+    # the plan now carries replica placements with renormalized shares
+    groups = repl.group_placements(ctl.plan.placements)
+    for base in split_bases:
+        g = groups[base]
+        assert len(g) > 1
+        assert sum(p.workload.rate_rps for p in g) == pytest.approx(
+            ctl.reconciler.targets[base].rate_rps)
+    # and the simulation served them: merged accounting + per_replica
+    assert set(res.per_workload) == {s.name for s in specs}
+    assert any(res.per_workload[b]["n_replicas"] > 1 for b in split_bases)
+    assert res.stats["n_reconfigs"] > 0
+
+
+def test_runtime_split_engine_identical(ramped):
+    """Scale-out mid-run (appended instances, re-split arrival tails)
+    stays byte-identical across engines."""
+    specs, plan, tr, out = ramped
+    (ctl_a, a), (ctl_b, b) = out["scalar"], out["vec"]
+    assert [dataclasses.astuple(e) for e in ctl_a.edits] == \
+        [dataclasses.astuple(e) for e in ctl_b.edits]
+    assert a.stats["n_reconfigs"] == b.stats["n_reconfigs"]
+    assert a.stats["n_requests"] == b.stats["n_requests"]
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+        assert np.array_equal(a.request_waits[w], b.request_waits[w]), w
+    assert a.per_workload == b.per_workload
+    assert a.per_replica == b.per_replica
+
+
+def test_runtime_split_improves_ramped_violations(ctx, ramped):
+    specs, plan, tr, out = ramped
+    ctl, res_c = out["vec"]
+    res_s = simulate_plan(plan, models(), ctx.hw, duration_s=8.0,
+                          trace=tr)
+    scaled = {s.name: dataclasses.replace(
+        s, rate_rps=s.rate_rps * tr.mean_scale(s.name, 8000.0))
+        for s in specs}
+    assert len(res_c.violations(scaled)) <= len(res_s.violations(scaled))
+
+
+def test_required_replicas_none_when_hopeless(ctx):
+    """'Feasible as one instance' (1) and 'hopeless at any split'
+    (None) must stay distinguishable — the controller keeps hopeless
+    workloads at their CURRENT replica count instead of merging a
+    working group into one guaranteed-violating instance."""
+    impossible = WorkloadSpec("X", "qwen2-vl-7b", slo_ms=1.0,
+                              rate_rps=10.0)
+    c = ctx.profiles[impossible.model]
+    assert prov.required_replicas(impossible, c, ctx.hw) is None
+    feasible = twelve_workloads()[0]
+    assert prov.required_replicas(feasible,
+                                  ctx.profiles[feasible.model],
+                                  ctx.hw) == 1
+
+
+def test_hopeless_drift_keeps_group_membership(ctx, monkeypatch):
+    """A drift tick on a split group whose new rate is infeasible at
+    EVERY k must resize the existing replicas in place — never remove
+    the group (the atomicity hole: removals before a raising add would
+    silently drop the workload from the plan)."""
+    from repro.serving.controller import (ArrivalEstimator,
+                                          ControllerConfig, Reconciler)
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    w = specs[4]
+    plan = prov.split_workload(plan, w, 2, ctx.profiles, ctx.hw)
+    cfg = ControllerConfig()
+    rec = Reconciler(plan, ctx.profiles, ctx.hw, cfg=cfg)
+    monkeypatch.setattr(prov, "required_replicas",
+                        lambda *a, **k: None)
+    ests = {}
+    for base, spec in rec.targets.items():
+        est = ArrivalEstimator(spec.rate_rps, cfg)
+        rate = spec.rate_rps * (1.5 if base == w.name else 1.0)
+        for k in range(4):
+            est.observe(np.arange(0.5, 1000.0, 1000.0 / rate)
+                        + k * 1000.0, 1000.0)
+        ests[base] = est
+    rec.reconcile(4.0, ests)
+    group = repl.group_placements(rec.plan.placements)[w.name]
+    assert [p.workload.name for p in group] == \
+        [f"{w.name}#0", f"{w.name}#1"]   # membership preserved
+    acts = [e for e in rec.edits if e.workload == w.name]
+    assert acts and acts[-1].action in ("resize", "infeasible")
+    assert not any(e.action in ("merge", "split") for e in acts)
+
+
+def test_scale_out_requires_cluster_scope(ctx):
+    """Appending instances under the per-device scope is rejected
+    loudly instead of silently dropping the new replica."""
+    specs = twelve_workloads()
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    mods = models()
+
+    def rogue(now, insts):
+        from repro.serving.simulator import ServedInstance
+        insts.append(ServedInstance(
+            spec=dataclasses.replace(insts[0].spec, name="X#1",
+                                     rate_rps=1.0),
+            desc=insts[0].desc, r=0.05, batch=1, gpu=insts[0].gpu))
+
+    with pytest.raises(RuntimeError, match="cluster"):
+        simulate_plan(plan, mods, ctx.hw, duration_s=2.0,
+                      adjust_fn=rogue, adjust_period_s=1.0,
+                      adjust_scope="device")
