@@ -30,15 +30,27 @@ Scenarios:
   churn      10% of workloads depart / 10% arrive mid-run — exercises
              remove_workload / add_workload reconciliation.
 
+The reconciler's Theorem-1 probes are memoized across edits
+(`provisioner.ProbeCache`): repeat (spec, budget) probes — the dominant
+cost of a reconciliation burst at large m — are O(1) after their first
+miss.  Rows report the cache's ``probe_hits`` / ``probe_misses``, and
+--check enforces the m=1000 diurnal edit-overhead bound
+(``EDIT_TARGET_MS``) the cache is responsible for.  ``--backend jax``
+threads the jitted planner + simulator hot paths through the run
+(m=10,000 rides the informational CI tier this way).
+
 Run:  PYTHONPATH=src python -m benchmarks.dynamic_sweep [--quick] [--check]
       --quick        m <= 100 only (CI per-PR smoke; uploads artifact)
       --sizes M,...  explicit cluster sizes
       --scenarios s, explicit scenario subset (default: all four)
+      --backend B    "numpy" (default) or "jax" planner/simulator backend
       --check        exit non-zero if any scenario's controlled
                      violations exceed the static plan's, if a no-drift
                      run reconfigures at all (or its plan is not
-                     bit-identical), or if an m=1000 controlled sim
-                     exceeds the scale_sweep wall-clock bound
+                     bit-identical), if an m=1000 controlled sim
+                     exceeds the scale_sweep wall-clock bound, or if
+                     the m=1000 diurnal controller overhead exceeds
+                     EDIT_TARGET_MS
       --sim-floor N  exit non-zero if any sim ran below N events/s
 
 Writes a JSON row dump (default benchmarks/dynamic_sweep_results.json —
@@ -58,6 +70,9 @@ SIZES_FULL = (100, 1000)
 SIZES_QUICK = (100,)
 SCENARIOS = ("no_drift", "diurnal", "spike", "churn")
 SIM_TARGET_S = 60.0      # same bound as scale_sweep's m=1000 full sim
+EDIT_TARGET_MS = 10000.0  # m=1000 diurnal controller overhead bound:
+                          # ~13 s before PR 6 (ProbeCache + vectorized
+                          # probe path), ~7 s after
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
                            "dynamic_sweep_results.json")
 
@@ -99,13 +114,16 @@ def _mean_violation_rate(res, specs) -> float:
     return float(np.mean(list(rates.values())))
 
 
-def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
+def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
+          backend: str = "numpy"):
     from repro.core import provisioner as prov
     from repro.core.experiments import fitted_context
+    from repro.core.types import PlannerConfig
     from repro.serving.controller import Controller
     from repro.serving.simulator import simulate_full
     from repro.serving.workload import models, synthetic_workloads
 
+    cfg = PlannerConfig(backend=backend)
     ctx5 = fitted_context("tpu-v5e")
     ctx4 = fitted_context("tpu-v4")
     profiles_by_hw = {ctx5.hw.name: ctx5.profiles,
@@ -119,26 +137,30 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
         specs = synthetic_workloads(m, seed)
         names = [s.name for s in specs]
         t0 = time.perf_counter()
-        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware,
+                                           config=cfg)
         prov_wall = time.perf_counter() - t0
         profiles = profiles_by_hw[hw.name]
         for scenario in scenarios:
             tr, poisson = _make_trace(scenario, names, horizon_ms, seed)
             t0 = time.perf_counter()
             res_s = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
-                                  seed=seed, poisson=poisson, trace=tr)
+                                  seed=seed, poisson=poisson, trace=tr,
+                                  backend=backend)
             static_wall = time.perf_counter() - t0
-            ctl = Controller(plan, profiles, hw)
+            ctl = Controller(plan, profiles, hw,
+                             config=cfg.replace(batch="joint"))
             t0 = time.perf_counter()
             res_c = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
                                   seed=seed, poisson=poisson, trace=tr,
                                   adjust_fn=ctl, adjust_scope="cluster",
-                                  adjust_period_s=1.0)
+                                  adjust_period_s=1.0, backend=backend)
             ctl_wall = time.perf_counter() - t0
             from repro.core import replication
             groups = replication.group_placements(ctl.plan.placements)
             row = {
                 "bench": "dynamic_sweep", "m": m, "scenario": scenario,
+                "backend": backend,
                 "hardware": hw.name, "n_devices": plan.n_gpus,
                 "provision_wall_s": round(prov_wall, 3),
                 "static_violations": len(_violations(res_s, specs, tr,
@@ -161,6 +183,8 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0):
                                   if len(g) > 1),
                 "reconfig_latency_ms":
                     round(res_c.stats["reconfig_latency_ms"], 1),
+                "probe_hits": ctl.reconciler.probes.hits,
+                "probe_misses": ctl.reconciler.probes.misses,
                 "plan_identical": ctl.plan is plan,
                 "static_cost_per_hour": round(plan.cost_per_hour(), 2),
                 "final_cost_per_hour":
@@ -193,6 +217,8 @@ def main(argv=None) -> int:
                     help="comma-separated scenario subset "
                          f"(default: {','.join(SCENARIOS)})")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="planner/simulator backend (default: numpy)")
     ap.add_argument("--sim-duration", type=float, default=10.0)
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     ap.add_argument("--check", action="store_true",
@@ -211,7 +237,7 @@ def main(argv=None) -> int:
     scenarios = (tuple(args.scenarios.split(",")) if args.scenarios
                  else SCENARIOS)
     rows = sweep(sizes, scenarios, seed=args.seed,
-                 sim_duration_s=args.sim_duration)
+                 sim_duration_s=args.sim_duration, backend=args.backend)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {args.out} ({len(rows)} rows)")
@@ -247,6 +273,16 @@ def main(argv=None) -> int:
                   f"({'PASS' if fast else 'FAIL'})")
             if args.check and not fast:
                 status = 1
+            if row["scenario"] == "diurnal":
+                cheap = row["reconfig_latency_ms"] < EDIT_TARGET_MS
+                print(f"# {tag}: controller edit overhead "
+                      f"{row['reconfig_latency_ms']:.0f}ms "
+                      f"{'<' if cheap else '>='} {EDIT_TARGET_MS:.0f}ms "
+                      f"(probe cache {row['probe_hits']} hits / "
+                      f"{row['probe_misses']} misses; "
+                      f"{'PASS' if cheap else 'FAIL'})")
+                if args.check and not cheap:
+                    status = 1
         if args.sim_floor and row["sim_events_per_s"] < args.sim_floor:
             print(f"# {tag}: throughput {row['sim_events_per_s']:.0f} "
                   f"events/s < {args.sim_floor:.0f} floor (FAIL)")

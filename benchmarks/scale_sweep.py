@@ -25,11 +25,24 @@ ground truth at FULL cluster scale:
     honest full-device residual becomes servable — replica counts and
     the remaining residual are tracked per m (docs/provisioning.md).
 
+The jitted backend (`--backend jax`, `PlannerConfig(backend="jax")`)
+extends the sweep to m = 10,000 (~8k devices): provisioning runs
+through `perf_model_jax.alloc_all_jax` and the simulator's latency
+tables through the bulk `physics_jax` twin, with numpy staying the
+pinned oracle (plans are checked identical at m <= 1000 by the jax
+test suite).  Above `CMP_MAX_M` the half-split and replica comparison
+plans are skipped — they would triple the simulation cost of the
+informational m=10k tier without adding coverage the m=1000 row
+doesn't already pin.
+
 Run:  PYTHONPATH=src python -m benchmarks.scale_sweep [--quick] [--check]
       --quick        m <= 100 only (CI per-PR smoke; uploads artifact)
-      --check        exit non-zero if m=1000 exceeds TARGET_S (provision)
-                     or SIM_TARGET_S (full-cluster simulation), or if its
-                     simulated violations exceed 2x the predicted count
+      --backend B    "numpy" (default) or "jax": planner + simulator
+                     hot-path backend for every plan in the sweep
+      --check        exit non-zero if any swept m in TARGETS exceeds its
+                     (provision, full-simulation) wall-clock targets, or
+                     if its simulated violations exceed 2x the predicted
+                     count
       --sim-floor N  exit non-zero if any full simulation ran below N
                      simulated events per wall-clock second
       --gap-budget N exit non-zero if, for any m, the queueing-aware
@@ -53,6 +66,10 @@ SIZES_FULL = (10, 100, 500, 1000)
 SIZES_QUICK = (10, 100)
 TARGET_S = 10.0          # CI bound for m=1000 provisioning (paper: 4.61 s)
 SIM_TARGET_S = 60.0      # CI bound for the m=1000 FULL-cluster simulation
+# per-m (provision, full-simulation) wall-clock targets --check enforces;
+# m=10,000 rides the informational jax-tier job (single-digit minutes)
+TARGETS = {1000: (TARGET_S, SIM_TARGET_S), 10000: (240.0, 300.0)}
+CMP_MAX_M = 1000         # half-split / replica comparison plans up to here
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
                            "scale_sweep_results.json")
 
@@ -67,11 +84,13 @@ def _context():
 
 
 def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
-          sim_duration_s: float = 10.0):
+          sim_duration_s: float = 10.0, backend: str = "numpy"):
     from repro.core import provisioner as prov
+    from repro.core.types import PlannerConfig
     from repro.serving.simulator import simulate_full
     from repro.serving.workload import models, synthetic_workloads
 
+    cfg = PlannerConfig(backend=backend)
     profiles_by_hw, hardware = _context()
     mods = models()
     rows = []
@@ -79,18 +98,19 @@ def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
         specs = synthetic_workloads(m, seed)
         sb = {s.name: s for s in specs}
         t0 = time.perf_counter()
-        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware)
+        plan, hw = prov.provision_cheapest(specs, profiles_by_hw, hardware,
+                                           config=cfg)
         wall = time.perf_counter() - t0
         viol = prov.predicted_violations(plan, profiles_by_hw[hw.name], hw)
         row = {
             "bench": "scale_sweep", "m": m,
-            "budget": "queueing",
+            "budget": "queueing", "backend": backend,
             "wall_s": round(wall, 3),
             "n_devices": plan.n_gpus,
             "hardware": hw.name,
             "cost_per_hour": round(plan.cost_per_hour(), 2),
             "predicted_violations": len(viol),
-            "target_s": TARGET_S if m == 1000 else None,
+            "target_s": TARGETS[m][0] if m in TARGETS else None,
         }
         if m <= oracle_max_m:
             t0 = time.perf_counter()
@@ -107,7 +127,7 @@ def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
         # reported next to the model-predicted count
         t0 = time.perf_counter()
         res = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
-                            seed=seed)
+                            seed=seed, backend=backend)
         sim_wall = time.perf_counter() - t0
         row.update({
             "sim_devices": plan.n_gpus,
@@ -120,52 +140,64 @@ def sweep(sizes, *, seed: int = 0, oracle_max_m: int = 100,
             "sim_events_per_s": round(res.stats["events_per_s"]),
             "sim_wait_mean_ms": round(res.stats["wait_mean_ms"], 3),
             "sim_wait_p99_ms": round(res.stats["wait_p99_ms"], 3),
-            "sim_target_s": SIM_TARGET_S if m == 1000 else None,
+            "sim_target_s": TARGETS[m][1] if m in TARGETS else None,
         })
         row["gap"] = row["sim_violations"] - row["predicted_violations"]
-        # the paper-faithful half split, same workloads: the historical
-        # 5-vs-178 gap stays visible next to the queueing-aware numbers
-        plan_h, hw_h = prov.provision_cheapest(specs, profiles_by_hw,
-                                               hardware, budget="half")
-        viol_h = prov.predicted_violations(plan_h, profiles_by_hw[hw_h.name],
-                                           hw_h, budget="half")
-        res_h = simulate_full(plan_h, mods, hw_h, duration_s=sim_duration_s,
-                              seed=seed)
-        row.update({
-            "half_n_devices": plan_h.n_gpus,
-            "half_cost_per_hour": round(plan_h.cost_per_hour(), 2),
-            "half_predicted_violations": len(viol_h),
-            "half_sim_violations": len(res_h.violations(sb)),
-        })
-        row["half_gap"] = (row["half_sim_violations"]
-                           - row["half_predicted_violations"])
-        # replica groups (replicate=True): workloads infeasible even
-        # solo at r = 1.0 are split into rate-share replicas instead of
-        # clamped — the honest full-device residual becomes servable
-        from repro.core import replication
-        plan_r, hw_r = prov.provision_cheapest(specs, profiles_by_hw,
-                                               hardware, replicate=True)
-        viol_r = prov.predicted_violations(plan_r,
-                                           profiles_by_hw[hw_r.name], hw_r)
-        res_r = simulate_full(plan_r, mods, hw_r,
-                              duration_s=sim_duration_s, seed=seed)
-        groups = replication.group_placements(plan_r.placements)
-        row.update({
-            "repl_n_devices": plan_r.n_gpus,
-            "repl_cost_per_hour": round(plan_r.cost_per_hour(), 2),
-            "repl_predicted_violations": len(viol_r),
-            "repl_sim_violations": len(res_r.violations(sb)),
-            "repl_split_workloads": sum(1 for g in groups.values()
-                                        if len(g) > 1),
-            "repl_n_replicas": sum(len(g) for g in groups.values()
-                                   if len(g) > 1),
-        })
-        row["repl_gap"] = (row["repl_sim_violations"]
-                           - row["repl_predicted_violations"])
+        if m <= CMP_MAX_M:
+            _comparison_plans(row, specs, sb, profiles_by_hw, hardware,
+                              mods, cfg, sim_duration_s, seed)
         rows.append(row)
         print(",".join(f"{k}={v}" for k, v in row.items() if v is not None),
               flush=True)
     return rows
+
+
+def _comparison_plans(row, specs, sb, profiles_by_hw, hardware, mods, cfg,
+                      sim_duration_s, seed):
+    """Half-split + replica-group comparison rows (m <= CMP_MAX_M)."""
+    from repro.core import provisioner as prov
+    from repro.core import replication
+    from repro.serving.simulator import simulate_full
+
+    # the paper-faithful half split, same workloads: the historical
+    # 5-vs-178 gap stays visible next to the queueing-aware numbers
+    plan_h, hw_h = prov.provision_cheapest(specs, profiles_by_hw, hardware,
+                                           config=cfg.replace(budget="half"))
+    viol_h = prov.predicted_violations(plan_h, profiles_by_hw[hw_h.name],
+                                       hw_h, budget="half")
+    res_h = simulate_full(plan_h, mods, hw_h, duration_s=sim_duration_s,
+                          seed=seed, backend=cfg.backend)
+    row.update({
+        "half_n_devices": plan_h.n_gpus,
+        "half_cost_per_hour": round(plan_h.cost_per_hour(), 2),
+        "half_predicted_violations": len(viol_h),
+        "half_sim_violations": len(res_h.violations(sb)),
+    })
+    row["half_gap"] = (row["half_sim_violations"]
+                       - row["half_predicted_violations"])
+    # replica groups (replicate=True): workloads infeasible even
+    # solo at r = 1.0 are split into rate-share replicas instead of
+    # clamped — the honest full-device residual becomes servable
+    plan_r, hw_r = prov.provision_cheapest(specs, profiles_by_hw, hardware,
+                                           config=cfg.replace(replicate=True))
+    viol_r = prov.predicted_violations(plan_r,
+                                       profiles_by_hw[hw_r.name], hw_r)
+    res_r = simulate_full(plan_r, mods, hw_r,
+                          duration_s=sim_duration_s, seed=seed,
+                          backend=cfg.backend)
+    groups = replication.group_placements(plan_r.placements)
+    row.update({
+        "repl_n_devices": plan_r.n_gpus,
+        "repl_cost_per_hour": round(plan_r.cost_per_hour(), 2),
+        "repl_predicted_violations": len(viol_r),
+        "repl_sim_violations": len(res_r.violations(sb)),
+        "repl_split_workloads": sum(1 for g in groups.values()
+                                    if len(g) > 1),
+        "repl_n_replicas": sum(len(g) for g in groups.values()
+                               if len(g) > 1),
+    })
+    row["repl_gap"] = (row["repl_sim_violations"]
+                       - row["repl_predicted_violations"])
 
 
 def run():
@@ -182,12 +214,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sim-duration", type=float, default=10.0,
                     help="simulated seconds for the full-cluster run")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="planner + simulator hot-path backend")
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     ap.add_argument("--check", action="store_true",
-                    help="fail if m=1000 exceeds the %.0f s provisioning "
-                         "or %.0f s full-simulation target, or if its "
-                         "simulated violations exceed 2x the predicted "
-                         "count" % (TARGET_S, SIM_TARGET_S))
+                    help="fail if any swept m in TARGETS exceeds its "
+                         "(provision, full-simulation) wall-clock targets "
+                         "(m=1000: %.0f s / %.0f s) or if its simulated "
+                         "violations exceed 2x the predicted count"
+                         % (TARGET_S, SIM_TARGET_S))
     ap.add_argument("--sim-floor", type=float, default=0.0,
                     help="fail if any full simulation ran below this many "
                          "events/sec (0 = off)")
@@ -201,11 +236,13 @@ def main(argv=None) -> int:
         sizes = tuple(int(s) for s in args.sizes.split(","))
     else:
         sizes = SIZES_QUICK if args.quick else SIZES_FULL
-    if args.check and 1000 not in sizes:
-        print("error: --check requires m=1000 in the sweep "
-              f"(selected sizes: {sizes})", file=sys.stderr)
+    if args.check and not any(m in TARGETS for m in sizes):
+        print("error: --check requires a target size "
+              f"({sorted(TARGETS)}) in the sweep (selected: {sizes})",
+              file=sys.stderr)
         return 2
-    rows = sweep(sizes, seed=args.seed, sim_duration_s=args.sim_duration)
+    rows = sweep(sizes, seed=args.seed, sim_duration_s=args.sim_duration,
+                 backend=args.backend)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {args.out} ({len(rows)} rows)")
@@ -220,43 +257,50 @@ def main(argv=None) -> int:
         if args.gap_budget >= 0:
             gap_ok = (row["sim_violations"]
                       <= row["predicted_violations"] + args.gap_budget)
+            half = ("; half split: "
+                    f"{row['half_predicted_violations']} predicted / "
+                    f"{row['half_sim_violations']} simulated"
+                    if "half_sim_violations" in row else "")
             print(f"# m={row['m']} violation gap: "
                   f"predicted={row['predicted_violations']} "
                   f"simulated={row['sim_violations']} "
                   f"(budget +{args.gap_budget}, "
-                  f"{'PASS' if gap_ok else 'FAIL'}; half split: "
-                  f"{row['half_predicted_violations']} predicted / "
-                  f"{row['half_sim_violations']} simulated)")
+                  f"{'PASS' if gap_ok else 'FAIL'}{half})")
             if not gap_ok:
                 status = 1
-        if row["m"] == 1000:
-            ok = row["wall_s"] < TARGET_S
-            print(f"# m=1000 provisioning {row['wall_s']:.2f}s "
-                  f"{'<' if ok else '>='} {TARGET_S:.0f}s target "
-                  f"({'PASS' if ok else 'FAIL'}; paper reports 4.61s)")
-            sim_ok = row["sim_wall_s"] < SIM_TARGET_S
-            print(f"# m=1000 full-cluster sim ({row['sim_devices']} devices, "
+        if row["m"] in TARGETS:
+            m = row["m"]
+            target_s, sim_target_s = TARGETS[m]
+            ok = row["wall_s"] < target_s
+            print(f"# m={m} provisioning {row['wall_s']:.2f}s "
+                  f"{'<' if ok else '>='} {target_s:.0f}s target "
+                  f"({'PASS' if ok else 'FAIL'}"
+                  f"{'; paper reports 4.61s' if m == 1000 else ''})")
+            sim_ok = row["sim_wall_s"] < sim_target_s
+            half = (f" (half split: {row['half_predicted_violations']}/"
+                    f"{row['half_sim_violations']})"
+                    if "half_sim_violations" in row else "")
+            print(f"# m={m} full-cluster sim ({row['sim_devices']} devices, "
                   f"{row['sim_duration_s']:.0f}s sim) {row['sim_wall_s']:.2f}s "
-                  f"{'<' if sim_ok else '>='} {SIM_TARGET_S:.0f}s target "
+                  f"{'<' if sim_ok else '>='} {sim_target_s:.0f}s target "
                   f"({'PASS' if sim_ok else 'FAIL'}); "
                   f"violations predicted={row['predicted_violations']} "
-                  f"simulated={row['sim_violations']} "
-                  f"(half split: {row['half_predicted_violations']}/"
-                  f"{row['half_sim_violations']})")
+                  f"simulated={row['sim_violations']}{half}")
             # acceptance bound: simulated within 2x of predicted (the
             # half split sat at ~36x: 5 predicted vs 178 simulated)
             two_ok = (row["sim_violations"]
                       <= 2 * max(row["predicted_violations"], 1))
-            print(f"# m=1000 simulated/predicted "
+            print(f"# m={m} simulated/predicted "
                   f"{row['sim_violations']}/{row['predicted_violations']} "
                   f"within 2x bound ({'PASS' if two_ok else 'FAIL'})")
-            print(f"# m=1000 replica groups: "
-                  f"{row['repl_split_workloads']} workloads split into "
-                  f"{row['repl_n_replicas']} replicas; violations "
-                  f"predicted={row['repl_predicted_violations']} "
-                  f"simulated={row['repl_sim_violations']} "
-                  f"({row['repl_n_devices']} devices, "
-                  f"${row['repl_cost_per_hour']}/h)")
+            if "repl_n_replicas" in row:
+                print(f"# m={m} replica groups: "
+                      f"{row['repl_split_workloads']} workloads split into "
+                      f"{row['repl_n_replicas']} replicas; violations "
+                      f"predicted={row['repl_predicted_violations']} "
+                      f"simulated={row['repl_sim_violations']} "
+                      f"({row['repl_n_devices']} devices, "
+                      f"${row['repl_cost_per_hour']}/h)")
             if args.check and not (ok and sim_ok and two_ok):
                 status = 1
     return status

@@ -23,8 +23,9 @@ from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
 from repro.core.queueing import BudgetLike, QUEUEING, resolve
-from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
-                              WorkloadCoefficients, WorkloadSpec)
+from repro.core.types import (HardwareSpec, Placement, PlannerConfig,
+                              ProvisioningPlan, WorkloadCoefficients,
+                              WorkloadSpec, planner_config)
 
 R_MAX = 1.0
 
@@ -36,14 +37,14 @@ R_MAX = 1.0
 def provision_ffd(specs: Sequence[WorkloadSpec],
                   profiles: Dict[str, WorkloadCoefficients],
                   hw: HardwareSpec, *, use_alloc_gpus: bool = False,
-                  engine: str = "vec",
-                  budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
-    if engine not in ("vec", "scalar"):
-        raise ValueError(f"unknown engine {engine!r}")
-    bm = resolve(budget)
+                  config: Optional[PlannerConfig] = None,
+                  engine: Optional[str] = None,
+                  budget: Optional[BudgetLike] = None) -> ProvisioningPlan:
+    cfg = planner_config(config, engine=engine, budget=budget)
+    bm = resolve(cfg.budget)
     prepared = prov._prepare(specs, profiles, hw, budget=bm)
-    if use_alloc_gpus and engine == "vec":
-        return _provision_ffd_vec(prepared, hw, bm)
+    if use_alloc_gpus and cfg.engine == "vec":
+        return _provision_ffd_vec(prepared, hw, bm, backend=cfg.backend)
 
     devs: List[prov._Dev] = []
     for (s, c, b, rl) in prepared:
@@ -75,10 +76,11 @@ def provision_ffd(specs: Sequence[WorkloadSpec],
 
 
 def _provision_ffd_vec(prepared, hw: HardwareSpec,
-                       budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
+                       budget: BudgetLike = QUEUEING, *,
+                       backend: str = "numpy") -> ProvisioningPlan:
     """FFD++ through the batched scorer: Alg. 2 runs against every open
     device in one call, first-fit picks the earliest feasible one."""
-    cl = pmv.VecCluster(hw, budget=budget)
+    cl = pmv.VecCluster(hw, budget=budget, backend=backend)
     for (s, c, b, rl) in prepared:
         q_fit = -1
         if cl.d:
@@ -114,7 +116,8 @@ def provision_gslice(specs: Sequence[WorkloadSpec],
                      profiles: Dict[str, WorkloadCoefficients],
                      hw: HardwareSpec, measure_fn: MeasureFn, *,
                      rounds: int = 5, threshold: float = 0.10,
-                     budget: BudgetLike = QUEUEING
+                     config: Optional[PlannerConfig] = None,
+                     budget: Optional[BudgetLike] = None
                      ) -> ProvisioningPlan:
     """GSLICE+ — iGniter's *placement* (per the paper's patch) but GSLICE's
     allocation policy: start from an equal spatial split of each device,
@@ -124,8 +127,9 @@ def provision_gslice(specs: Sequence[WorkloadSpec],
     over-subscribed (sum r > 100%) — the pathology of Fig. 15/16 — and
     resources are reclaimed whenever latency sits below the threshold
     band, which trades SLO safety for utilization."""
-    bm = resolve(budget)
-    base = prov.provision(specs, profiles, hw, budget=bm)
+    cfg = planner_config(config, budget=budget)
+    bm = resolve(cfg.budget)
+    base = prov.provision(specs, profiles, hw, config=cfg.replace(budget=bm))
     devs: Dict[int, List[Tuple[WorkloadSpec, WorkloadCoefficients, int, float]]] = {}
     for p in base.placements:
         devs.setdefault(p.gpu, []).append(
@@ -209,8 +213,10 @@ def _most_efficient_r(spec: WorkloadSpec, c: WorkloadCoefficients, b: int,
 def provision_gpulets(specs: Sequence[WorkloadSpec],
                       profiles: Dict[str, WorkloadCoefficients],
                       hw: HardwareSpec, *,
-                      budget: BudgetLike = QUEUEING) -> ProvisioningPlan:
-    bm = resolve(budget)
+                      config: Optional[PlannerConfig] = None,
+                      budget: Optional[BudgetLike] = None) -> ProvisioningPlan:
+    cfg = planner_config(config, budget=budget)
+    bm = resolve(cfg.budget)
     prepared = []
     for s in specs:
         c = profiles[s.model]

@@ -1,0 +1,314 @@
+"""JAX-jitted twins of the batched iGniter model and budget solver.
+
+`repro.core.perf_model_vec` is the numpy hot path and stays the pinned
+oracle; this module re-expresses its three inner loops as jitted XLA
+programs for the m=10,000 tier:
+
+  * ``predict_device_batch_jax``  Eqs. (1)-(11) over padded (D, N)
+                                  device arrays under `jax.jit` (the
+                                  `perf_model_vec._eval` twin)
+  * ``budget_ms_vec_jax``         the queueing-aware SLO budget split as
+                                  a fixed-iteration `lax.fori_loop`
+                                  bisection (`queueing.budget_ms_vec`
+                                  twin — SOLVE_ITERS halvings, same
+                                  bracket, same cap at T_slo/2)
+  * ``alloc_all_jax``             Algorithm 2 against every open device
+                                  as ONE `lax.while_loop` with
+                                  fixed-capacity shapes (the
+                                  `VecCluster.alloc_all` twin), driving
+                                  both Alg. 1 placement and the
+                                  controller's feasibility probes when
+                                  `PlannerConfig(backend="jax")`
+
+Layout contract: shapes are the VecCluster capacities (powers of two),
+NOT the live device count d — d arrives as a traced scalar and
+``row_valid = arange(cap_d) < d`` masks the padding rows, so XLA
+recompiles only when a capacity doubles (~log2(D) times per sweep).
+Per-entry SLO budgets are always solved on the numpy side
+(`queueing.BudgetModel`) and passed in as arrays: both backends consume
+bit-identical thresholds, and only the model arithmetic itself crosses
+into XLA.
+
+Numerical contract: agreement with the numpy oracle is pinned at
+<= 1e-6 (tests/test_perf_model_jax.py), NOT the scalar-vs-vec 1e-9 —
+XLA may reassociate sums and fuse multiply-adds, so last-bit equality is
+out of scope by design (docs/reproduction-notes.md, deviation 5).
+Plan-level decisions still agree exactly on the pinned workloads
+because Alg. 1/2 thresholds carry 1e-9 epsilons, orders of magnitude
+above the float divergence.
+
+float64 is mandatory: the 1e-9 decision epsilons drown in float32
+noise.  Importing this module enables jax x64 mode process-wide.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 switch on purpose)
+from jax import lax  # noqa: E402
+
+from repro.core import perf_model as pm  # noqa: E402
+from repro.core import perf_model_vec as pmv  # noqa: E402
+from repro.core.queueing import (  # noqa: E402
+    RHO_MAX, SOLVE_ITERS, BudgetModel)
+from repro.core.types import (  # noqa: E402
+    HardwareSpec, WorkloadCoefficients, WorkloadSpec)
+
+R_MAX = pmv.R_MAX
+
+# Index layout of the flat coefficient tuples handed to jitted kernels
+# (same order as perf_model_vec.COEFF_FIELDS).
+_F = {name: i for i, name in enumerate(pmv.COEFF_FIELDS)}
+
+
+def _coeff_scalars(c: WorkloadCoefficients) -> Tuple[float, ...]:
+    return tuple(float(getattr(c, f)) for f in pmv.COEFF_FIELDS)
+
+
+def _coeff_arrays(ca: pmv.CoeffArrays) -> Tuple[np.ndarray, ...]:
+    return tuple(getattr(ca, f) for f in pmv.COEFF_FIELDS)
+
+
+def _k_act(ca, b, r):
+    """Eq. (11) on a flat coefficient tuple."""
+    return ((ca[_F["k1"]] * b * b + ca[_F["k2"]] * b + ca[_F["k3"]])
+            / (r + ca[_F["k4"]]) + ca[_F["k5"]])
+
+
+# ---------------------------------------------------------------------------
+# Eqs. (1)-(11), jitted
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def _eval_jit(ca, b, r, mask, hw: HardwareSpec):
+    """`perf_model_vec._eval` under jit: identical formula sequence."""
+    k_act = _k_act(ca, b, r)
+    ability = jnp.where(mask, b / k_act, 0.0)
+    power = jnp.where(mask, ca[_F["alpha_power"]] * ability
+                      + ca[_F["beta_power"]], 0.0)
+    cache = jnp.where(mask, ca[_F["alpha_cacheutil"]] * ability
+                      + ca[_F["beta_cacheutil"]], 0.0)
+
+    n_co = mask.sum(axis=-1)
+    ds = jnp.where(n_co <= 1, 0.0, hw.alpha_sch * n_co + hw.beta_sch)
+    p_demand = hw.idle_power + power.sum(axis=-1)
+    freq = jnp.where(p_demand <= hw.power_cap, hw.max_freq,
+                     jnp.maximum(hw.max_freq
+                                 + hw.alpha_f * (p_demand - hw.power_cap),
+                                 0.3 * hw.max_freq))
+    slowdown = freq / hw.max_freq
+
+    other_cache = cache.sum(axis=-1)[..., None] - cache
+    t_load = ca[_F["d_load"]] * b / hw.pcie_bw
+    t_feedback = ca[_F["d_feedback"]] * b / hw.pcie_bw
+    t_sch = (ca[_F["k_sch"]] + ds[..., None]) * ca[_F["n_kernels"]]
+    t_act = k_act * (1.0 + ca[_F["alpha_cache"]] * other_cache)
+    t_gpu = (t_sch + t_act) / slowdown[..., None]
+    t_inf = t_load + t_gpu + t_feedback
+    throughput = jnp.where(mask, 1000.0 * b / (t_gpu + t_feedback), 0.0)
+    return (freq, p_demand, ds, t_load, t_sch, t_act, t_gpu,
+            t_feedback, t_inf, throughput)
+
+
+def predict_device_batch_jax(devices: Sequence[Sequence[pm.PlacedWorkload]],
+                             hw: HardwareSpec) -> pmv.BatchPrediction:
+    """Jitted drop-in for `perf_model_vec.predict_device_batch`."""
+    ca, b, r, mask = pmv._pad_stack(devices)
+    out = _eval_jit(_coeff_arrays(ca), b, r, mask, hw)
+    (freq, p_demand, ds, t_load, t_sch, t_act, t_gpu,
+     t_feedback, t_inf, throughput) = (np.asarray(a) for a in out)
+    return pmv.BatchPrediction(
+        mask=mask, freq=freq, p_demand=p_demand, delta_sch=ds,
+        t_load=t_load, t_sch=t_sch, t_act=t_act, t_gpu=t_gpu,
+        t_feedback=t_feedback, t_inf=t_inf, throughput=throughput)
+
+
+# ---------------------------------------------------------------------------
+# Queueing-aware budget split, jitted bisection
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _budget_bisect_jit(slo, rate, batch, quantile, slack_frac, burstiness):
+    """`queueing.budget_ms_vec`'s fixed-iteration bisection under jit."""
+    r_ms = rate / 1000.0
+    b = batch
+    target = slo * (1.0 - slack_frac)
+    qf = -jnp.log1p(-quantile)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        rho = r_ms * mid / b
+        w = burstiness * rho * mid / (2.0 * b * (1.0 - rho))
+        tail = jnp.where(rho >= RHO_MAX, jnp.inf, (b - 1.0) / r_ms + w * qf)
+        tail = jnp.where(r_ms > 0.0, tail, 0.0)
+        ok = mid + tail <= target
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, hi = lax.fori_loop(0, SOLVE_ITERS, body,
+                           (jnp.zeros_like(slo), slo))
+    return jnp.minimum(lo, slo / 2.0)
+
+
+def budget_ms_vec_jax(bm: BudgetModel, slo_ms, rate_rps, batch) -> np.ndarray:
+    """Batched budget split on the JAX backend (numpy arrays in/out)."""
+    slo = np.asarray(slo_ms, dtype=np.float64)
+    if bm.mode == "half":
+        return slo / 2.0
+    out = _budget_bisect_jit(slo, np.asarray(rate_rps, dtype=np.float64),
+                             np.asarray(batch, dtype=np.float64),
+                             np.float64(bm.quantile),
+                             np.float64(bm.slack_frac),
+                             np.float64(bm.burstiness))
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 over every open device: lax.while_loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def _alloc_all_jit(hw: HardwareSpec, mask, n, ca, b, r0, budget_ms,
+                   k_act0, power0, cache0, t_io, t_schk,
+                   power_sum, cache_sum, d,
+                   cw, bn, r_lower, budget_new, grid):
+    """One newcomer vs every open device, full Alg. 2 grant loop.
+
+    Shapes are the cluster CAPACITIES; ``d`` is traced and
+    ``row_valid`` masks the padding rows (they start inactive and
+    infeasible-irrelevant, and the caller slices them off).  The body
+    mirrors `VecCluster.alloc_all` statement for statement; the one
+    reordering is the per-row grant delta sums (`np.subtract.at`'s
+    sequential accumulation becomes a masked row sum), covered by the
+    1e-6 contract.
+    """
+    cap_d = mask.shape[0]
+    row_valid = jnp.arange(cap_d) < d
+
+    def round_grid(x):
+        # np.round(x, 10) equivalent.  ``grid`` (1e10) is a TRACED
+        # operand on purpose: with a constant divisor XLA's fast-math
+        # rewrites ``/ 1e10`` into ``* 1e-10`` (an inexact reciprocal),
+        # and the allocations drift one ulp off the numpy oracle's grid
+        # — enough to fail bit-identical plan checks.
+        return jnp.round(x * grid) / grid
+
+    def solo_new(rn):
+        k_act = ((cw[_F["k1"]] * bn * bn + cw[_F["k2"]] * bn + cw[_F["k3"]])
+                 / (rn + cw[_F["k4"]]) + cw[_F["k5"]])
+        ability = bn / k_act
+        return (k_act,
+                cw[_F["alpha_power"]] * ability + cw[_F["beta_power"]],
+                cw[_F["alpha_cacheutil"]] * ability
+                + cw[_F["beta_cacheutil"]])
+
+    rn0 = jnp.full(cap_d, r_lower)
+    kan0, pn0, cn0 = solo_new(rn0)
+    p_sum0 = power_sum + pn0
+    c_sum0 = cache_sum + cn0
+    n_co = n + 1
+    ds = jnp.where(n_co <= 1, 0.0, hw.alpha_sch * n_co + hw.beta_sch)
+    t_load_new = cw[_F["d_load"]] * bn / hw.pcie_bw
+    t_fb_new = cw[_F["d_feedback"]] * bn / hw.pcie_bw
+    t_schk_new = cw[_F["k_sch"]] * cw[_F["n_kernels"]]
+
+    def cond(st):
+        return st[-2].any()
+
+    def body(st):
+        (rr, rn, ka, pw, cu, kan, pn, cn,
+         p_sum, c_sum, active, feasible) = st
+        tot = jnp.where(mask, rr, 0.0).sum(axis=1) + rn
+        over = active & (tot > R_MAX + 1e-9)
+        feasible = feasible & ~over
+        act = active & ~over
+
+        p_dem = hw.idle_power + p_sum                               # Eq. 10
+        freq = jnp.where(p_dem <= hw.power_cap, hw.max_freq,        # Eq. 9
+                         jnp.maximum(hw.max_freq + hw.alpha_f
+                                     * (p_dem - hw.power_cap),
+                                     0.3 * hw.max_freq))
+        slow = freq / hw.max_freq
+        other_res = c_sum[:, None] - cu
+        t_act = ka * (1.0 + ca[_F["alpha_cache"]] * other_res)
+        t_sch = t_schk + ds[:, None] * ca[_F["n_kernels"]]
+        t_gpu = (t_sch + t_act) / slow[:, None]
+        t_inf = t_io[:, :, 0] + t_gpu + t_io[:, :, 1]
+        viol_res = mask & (t_inf > budget_ms + 1e-9) & act[:, None]
+
+        other_new = c_sum - cn
+        t_act_n = kan * (1.0 + cw[_F["alpha_cache"]] * other_new)
+        t_gpu_n = (t_schk_new + ds * cw[_F["n_kernels"]] + t_act_n) / slow
+        t_inf_n = t_load_new + t_gpu_n + t_fb_new
+        viol_new = (t_inf_n > budget_new + 1e-9) & act
+
+        conv = act & ~viol_res.any(axis=1) & ~viol_new
+        act = act & ~conv
+
+        # grants: +r_unit to every violator on still-active devices
+        grow = viol_res & act[:, None]
+        rr2 = jnp.where(grow, round_grid(rr + hw.r_unit), rr)
+        k_act_g = _k_act(ca, b, rr2)
+        ability_g = b / k_act_g
+        p_g = ca[_F["alpha_power"]] * ability_g + ca[_F["beta_power"]]
+        c_g = (ca[_F["alpha_cacheutil"]] * ability_g
+               + ca[_F["beta_cacheutil"]])
+        ka = jnp.where(grow, k_act_g, ka)
+        p_sum = p_sum - jnp.where(grow, pw - p_g, 0.0).sum(axis=1)
+        c_sum = c_sum - jnp.where(grow, cu - c_g, 0.0).sum(axis=1)
+        pw = jnp.where(grow, p_g, pw)
+        cu = jnp.where(grow, c_g, cu)
+
+        grow_n = viol_new & act
+        rn2 = jnp.where(grow_n, round_grid(rn + hw.r_unit), rn)
+        kan_g, pn_g, cn_g = solo_new(rn2)
+        p_sum = p_sum + jnp.where(grow_n, pn_g - pn, 0.0)
+        c_sum = c_sum + jnp.where(grow_n, cn_g - cn, 0.0)
+        kan = jnp.where(grow_n, kan_g, kan)
+        pn = jnp.where(grow_n, pn_g, pn)
+        cn = jnp.where(grow_n, cn_g, cn)
+        return (rr2, rn2, ka, pw, cu, kan, pn, cn,
+                p_sum, c_sum, act, feasible)
+
+    init = (r0, rn0, k_act0, power0, cache0, kan0, pn0, cn0,
+            p_sum0, c_sum0, row_valid, jnp.ones(cap_d, dtype=bool))
+    (rr, rn, _, _, _, _, _, _, _, _, _, feasible) = lax.while_loop(
+        cond, body, init)
+
+    grown = jnp.where(mask, jnp.maximum(0.0, rr - r0), 0.0)
+    r_inter = grown.sum(axis=1) + jnp.maximum(0.0, rn - r_lower)
+    r_inter = jnp.where(feasible, r_inter, jnp.inf)
+    return feasible, rr, rn, r_inter
+
+
+def alloc_all_jax(cl: "pmv.VecCluster", spec: WorkloadSpec,
+                  coeffs: WorkloadCoefficients, batch: int, r_lower: float
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Backend dispatch target for `VecCluster.alloc_all` ("jax").
+
+    The per-entry ``budget_ms`` thresholds and the newcomer's budget are
+    numpy-solved (cached on the cluster / `BudgetModel.budget_ms`), so
+    the jitted kernel sees bit-identical decision thresholds to the
+    numpy loop.
+    """
+    d = cl.d
+    if d == 0:
+        z = np.zeros(0)
+        return z.astype(bool), np.zeros((0, 1)), z, z
+    hw = cl.hw
+    budget_new = cl.bm.budget_ms(spec.slo_ms, spec.rate_rps, batch)
+    feasible, rr, rn, r_inter = _alloc_all_jit(
+        hw, cl.mask, cl.n, _coeff_arrays(cl.ca), cl.b, cl.r, cl.budget_ms,
+        cl.k_act, cl.power, cl.cache, cl.t_io, cl.t_schk,
+        cl.power_sum, cl.cache_sum, np.int64(d),
+        _coeff_scalars(coeffs), np.float64(batch), np.float64(r_lower),
+        np.float64(budget_new), np.float64(1e10))
+    return (np.asarray(feasible)[:d], np.asarray(rr)[:d],
+            np.asarray(rn)[:d], np.asarray(r_inter)[:d])

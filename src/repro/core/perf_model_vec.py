@@ -205,8 +205,11 @@ class VecCluster:
     """
 
     def __init__(self, hw: HardwareSpec, cap_d: int = 8, cap_n: int = 4,
-                 budget: BudgetLike = QUEUEING):
+                 budget: BudgetLike = QUEUEING, backend: str = "numpy"):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.hw = hw
+        self.backend = backend
         self.bm = resolve(budget)
         self.d = 0                                  # open devices
         self._cap_d, self._cap_n = cap_d, cap_n
@@ -392,12 +395,20 @@ class VecCluster:
         `provisioner.alloc_gpus`: each iteration grants +r_unit to every
         resident or newcomer whose predicted t_inf exceeds T_slo/2, a
         device leaves the loop when it converges or exceeds r_max.
+
+        With ``backend="jax"`` the loop runs as the jitted
+        `perf_model_jax.alloc_all_jax` twin instead (<= 1e-6 agreement;
+        identical plans on the pinned workloads).
         """
         hw = self.hw
         d = self.d
         if d == 0:
             z = np.zeros(0)
             return z.astype(bool), np.zeros((0, 1)), z, z
+        if self.backend == "jax":
+            from repro.core import perf_model_jax
+            return perf_model_jax.alloc_all_jax(self, spec, coeffs,
+                                                batch, r_lower)
         ncap = self.mask.shape[1]
         mask = self.mask[:d]
 
@@ -512,11 +523,12 @@ def alloc_gpus_vec(residents: Sequence[Tuple[WorkloadSpec,
                    spec: WorkloadSpec, coeffs: WorkloadCoefficients,
                    batch: int, r_lower: float,
                    hw: HardwareSpec, *,
-                   budget: BudgetLike = QUEUEING) -> Optional[List[float]]:
+                   budget: BudgetLike = QUEUEING,
+                   backend: str = "numpy") -> Optional[List[float]]:
     """Single-device convenience wrapper matching `provisioner.alloc_gpus`
     (same signature semantics: returns the new allocation vector with the
     newcomer last, or None when the device cannot host it)."""
-    cl = VecCluster(hw, budget=budget)
+    cl = VecCluster(hw, budget=budget, backend=backend)
     q = cl.add_device()
     for (s, c, b, r) in residents:
         cl.add_entry(q, s, c, b, r)

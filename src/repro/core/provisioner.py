@@ -27,19 +27,28 @@ import numpy as np
 from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
 from repro.core import replication
-from repro.core.queueing import BudgetLike, QUEUEING, resolve
-from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
-                              WorkloadCoefficients, WorkloadSpec)
+from repro.core.queueing import BudgetLike, BudgetModel, QUEUEING, resolve
+from repro.core.types import (HardwareSpec, K_MAX, Placement, PlannerConfig,
+                              ProvisioningPlan, WorkloadCoefficients,
+                              WorkloadSpec, planner_config)
 
 R_MAX = 1.0
-# Replica-count ceiling for the split fallback (`required_replicas`):
-# a workload still infeasible at 1/K_MAX of its rate stays an honest
-# residual instead of shattering into arbitrarily many slivers.
-K_MAX = 8
+# Replica-count ceiling (`required_replicas`) — canonical home is
+# `types.K_MAX`; re-exported here for backward compatibility.
 
 
 class InfeasibleError(RuntimeError):
-    """A workload cannot meet its SLO even alone on a full device."""
+    """A workload cannot meet its SLO even alone on a full device.
+
+    When raised by `provision_cheapest`, ``per_hw`` maps each hardware
+    name to the error string of the workload that made that type
+    infeasible — structured diagnostics instead of one joined string,
+    so m=10k infeasibility reports stay actionable."""
+
+    def __init__(self, message: str = "", *,
+                 per_hw: Optional[Dict[str, str]] = None):
+        super().__init__(message)
+        self.per_hw: Dict[str, str] = dict(per_hw) if per_hw else {}
 
 
 # ---------------------------------------------------------------------------
@@ -89,12 +98,23 @@ def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
         raise ValueError(f"unknown batch mode {batch!r} "
                          "(expected 'eq17' or 'joint')")
 
+    # One vectorized bisection solves every candidate's budget at once —
+    # bitwise-identical to the scalar solver (see `budget_ms_vec`), so
+    # the candidate ranking cannot drift from the scalar path.  The
+    # controller re-runs this scan on every edit at ever-fresh estimated
+    # rates, where 64 scalar bisections per probe dominated the edit
+    # overhead.
+    bs = np.arange(1, b_max + 1, dtype=np.float64)
+    Bs = bm.budget_ms_vec(np.full(b_max, spec.slo_ms),
+                          np.full(b_max, spec.rate_rps), bs)
+
     def _r_lower_at(bb: int) -> Optional[float]:
-        B = bm.budget_ms(spec.slo_ms, spec.rate_rps, bb)
+        B = float(Bs[bb - 1])
         if B <= 1e-6 or (r_ms > 0.0 and bb / r_ms < B - 1e-9):
             return None          # degenerate budget / unstable at B
         try:
-            return resource_lower_bound(spec, c, hw, bb, budget=bm)
+            return resource_lower_bound(spec, c, hw, bb, budget=bm,
+                                        solved_budget_ms=B)
         except InfeasibleError:
             return None
     best_b, best_r = b, _r_lower_at(b)
@@ -119,7 +139,8 @@ def appropriate_batch(spec: WorkloadSpec, c: WorkloadCoefficients,
 
 def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
                          hw: HardwareSpec, b_appr: Optional[int] = None, *,
-                         budget: BudgetLike = QUEUEING) -> float:
+                         budget: BudgetLike = QUEUEING,
+                         solved_budget_ms: Optional[float] = None) -> float:
     """Eq. (18): minimal solo resource fraction meeting the inference
     budget (T_slo/2 under ``budget="half"``, the queueing-aware split
     otherwise).
@@ -129,6 +150,11 @@ def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
     residual then surfaces in `predicted_violations`, mirroring the
     `self_grant` fallback); a workload infeasible even at the paper's
     half split still raises InfeasibleError in both modes.
+
+    ``solved_budget_ms`` lets a caller that already solved the budget at
+    ``b_appr`` (e.g. the joint-batch scan's vectorized bisection) skip
+    re-solving it; it must equal ``budget.budget_ms(slo, rate, b_appr)``
+    bit-for-bit.
     """
     bm = resolve(budget)
     b = b_appr if b_appr is not None else appropriate_batch(spec, c, hw,
@@ -153,7 +179,8 @@ def resource_lower_bound(spec: WorkloadSpec, c: WorkloadCoefficients,
         return min(r_lower, R_MAX)
 
     try:
-        return _r_lower(bm.budget_ms(spec.slo_ms, spec.rate_rps, b))
+        return _r_lower(solved_budget_ms if solved_budget_ms is not None
+                        else bm.budget_ms(spec.slo_ms, spec.rate_rps, b))
     except InfeasibleError:
         if bm.mode == "half":
             raise
@@ -281,6 +308,95 @@ def required_replicas(spec: WorkloadSpec, coeffs: WorkloadCoefficients,
 
 
 # ---------------------------------------------------------------------------
+# Theorem-1 probe cache (online control plane): one reconcile pass probes
+# the same (spec, budget) pair 3-4 times — required_replicas, _validate,
+# then the PlanState edit itself — and a k-replica scale-out probes every
+# k' < k again on the next drift.  All probe inputs are frozen/hashable
+# (WorkloadCoefficients, BudgetModel, the batch-mode string), so exact-
+# key memoization is safe; `BudgetModel.with_burstiness` copies hash by
+# VALUE, so an unchanged burstiness floor keeps the cache warm across
+# reconcile rounds.
+# ---------------------------------------------------------------------------
+
+_INFEASIBLE = object()          # cached-InfeasibleError sentinel
+
+
+class ProbeCache:
+    """Memoizes `appropriate_batch` + `resource_lower_bound` (Theorem 1),
+    `solo_feasible` and `required_replicas` across plan edits.
+
+    Keyed by (coeffs, hw name, budget model, batch mode, slo, rate) —
+    everything the probes actually read.  InfeasibleError outcomes are
+    cached as a sentinel and re-raised fresh with the current spec name.
+    ``hits`` / ``misses`` are exposed for the dynamic-sweep benchmark
+    rows."""
+
+    def __init__(self) -> None:
+        self._t1: Dict[tuple, object] = {}
+        self._solo: Dict[tuple, bool] = {}
+        self._reps: Dict[tuple, Optional[int]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(spec: WorkloadSpec, c: WorkloadCoefficients, hw: HardwareSpec,
+             bm: BudgetModel, batch: str) -> tuple:
+        return (c, hw.name, bm, batch, spec.slo_ms, spec.rate_rps)
+
+    def theorem1(self, spec: WorkloadSpec, c: WorkloadCoefficients,
+                 hw: HardwareSpec, bm: BudgetModel,
+                 batch: str) -> Tuple[int, float]:
+        """Cached (b_appr, r_lower); raises InfeasibleError like the
+        underlying probes (also when the miss was cached)."""
+        key = self._key(spec, c, hw, bm, batch)
+        val = self._t1.get(key)
+        if val is not None:
+            self.hits += 1
+            if val is _INFEASIBLE:
+                raise InfeasibleError(
+                    f"{spec.name}: infeasible (cached Theorem-1 probe)")
+            return val          # type: ignore[return-value]
+        self.misses += 1
+        try:
+            b = appropriate_batch(spec, c, hw, budget=bm, batch=batch)
+            rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+        except InfeasibleError:
+            self._t1[key] = _INFEASIBLE
+            raise
+        self._t1[key] = (b, rl)
+        return b, rl
+
+    def solo_feasible(self, spec: WorkloadSpec, c: WorkloadCoefficients,
+                      hw: HardwareSpec, bm: BudgetModel, batch: str) -> bool:
+        key = self._key(spec, c, hw, bm, batch)
+        val = self._solo.get(key)
+        if val is not None:
+            self.hits += 1
+            return val
+        self.misses += 1
+        val = solo_feasible(spec, c, hw, budget=bm, batch=batch)
+        self._solo[key] = val
+        return val
+
+    def required_replicas(self, spec: WorkloadSpec, c: WorkloadCoefficients,
+                          hw: HardwareSpec, bm: BudgetModel, batch: str,
+                          k_max: int = K_MAX) -> Optional[int]:
+        key = self._key(spec, c, hw, bm, batch) + (k_max,)
+        if key in self._reps:
+            self.hits += 1
+            return self._reps[key]
+        # per-k solo probes go through the solo cache, so a k-replica
+        # answer also warms every k' <= k probe for later edits
+        for k in range(1, k_max + 1):
+            probe = spec if k == 1 else replication.make_replicas(spec, k)[0]
+            if self.solo_feasible(probe, c, hw, bm, batch):
+                self._reps[key] = k
+                return k
+        self._reps[key] = None
+        return None
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 1: iGniter provisioning
 # ---------------------------------------------------------------------------
 
@@ -315,15 +431,23 @@ def _prepare(specs: Sequence[WorkloadSpec],
 
 def provision(specs: Sequence[WorkloadSpec],
               profiles: Dict[str, WorkloadCoefficients],
-              hw: HardwareSpec, *, engine: str = "vec",
-              budget: BudgetLike = QUEUEING,
-              batch: str = "eq17", replicate: bool = False,
-              k_max: int = K_MAX) -> ProvisioningPlan:
+              hw: HardwareSpec, *,
+              config: Optional[PlannerConfig] = None,
+              engine: Optional[str] = None,
+              budget: Optional[BudgetLike] = None,
+              batch: Optional[str] = None, replicate: Optional[bool] = None,
+              k_max: Optional[int] = None) -> ProvisioningPlan:
     """Cost-efficient interference-aware provisioning (Alg. 1).
 
+    All knobs live on ``config`` (a `types.PlannerConfig`); the
+    per-knob keywords are deprecated shims (mixing them with
+    ``config=`` is a TypeError).  Defaults: vectorized engine, numpy
+    backend, queueing-aware budget, Eq.-17 batch, no replication.
+
     ``engine="vec"`` scores all open devices through the batched model in
-    one call per placement; ``engine="scalar"`` is the reference
-    per-device loop (identical output, kept as the oracle).
+    one call per placement (``backend="jax"`` runs that scoring loop as
+    the jitted `perf_model_jax.alloc_all_jax`); ``engine="scalar"`` is
+    the reference per-device loop (identical output, kept as the oracle).
 
     ``budget`` selects the SLO split handed to Theorem 1 / Alg. 2:
     ``"queueing"`` (default) budgets a tail queueing-delay term per
@@ -339,14 +463,13 @@ def provision(specs: Sequence[WorkloadSpec],
     instead of clamping it to r = 1.0; a plan that never splits is
     bit-identical to ``replicate=False`` output.
     """
-    bm = resolve(budget)
-    if engine == "vec":
-        return _provision_vec(specs, profiles, hw, bm, batch=batch,
-                              replicate=replicate, k_max=k_max)
-    if engine != "scalar":
-        raise ValueError(f"unknown engine {engine!r}")
-    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch,
-                        replicate=replicate, k_max=k_max)
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch,
+                         replicate=replicate, k_max=k_max)
+    bm = resolve(cfg.budget)
+    if cfg.engine == "vec":
+        return _provision_vec(specs, profiles, hw, cfg)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=cfg.batch,
+                        replicate=cfg.replicate, k_max=cfg.k_max)
 
     devs: List[_Dev] = [_Dev()]
     for (s, c, b, rl) in prepared:
@@ -395,17 +518,16 @@ def _argmin_inter(r_inter: "np.ndarray") -> int:
 
 def _provision_vec(specs: Sequence[WorkloadSpec],
                    profiles: Dict[str, WorkloadCoefficients],
-                   hw: HardwareSpec, budget: BudgetLike = QUEUEING, *,
-                   batch: str = "eq17", replicate: bool = False,
-                   k_max: int = K_MAX) -> ProvisioningPlan:
+                   hw: HardwareSpec,
+                   cfg: PlannerConfig) -> ProvisioningPlan:
     """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
     scores every open device per placement, and the chosen device's
     invariants are refreshed incrementally."""
-    bm = resolve(budget)
-    prepared = _prepare(specs, profiles, hw, budget=bm, batch=batch,
-                        replicate=replicate, k_max=k_max)
+    bm = resolve(cfg.budget)
+    prepared = _prepare(specs, profiles, hw, budget=bm, batch=cfg.batch,
+                        replicate=cfg.replicate, k_max=cfg.k_max)
 
-    cl = pmv.VecCluster(hw, budget=bm)
+    cl = pmv.VecCluster(hw, budget=bm, backend=cfg.backend)
     cl.add_device()
     for (s, c, b, rl) in prepared:
         feasible, rr, rn, r_inter = cl.alloc_all(s, c, b, rl)
@@ -435,16 +557,19 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
 
 def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  profiles: Dict[str, WorkloadCoefficients],
-                 hw: HardwareSpec, *, engine: str = "vec",
-                 budget: BudgetLike = QUEUEING,
-                 batch: str = "eq17") -> ProvisioningPlan:
+                 hw: HardwareSpec, *,
+                 config: Optional[PlannerConfig] = None,
+                 engine: Optional[str] = None,
+                 budget: Optional[BudgetLike] = None,
+                 batch: Optional[str] = None) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
     with Alg. 2 reallocation, or a fresh device.  The vec engine scores
     every existing device in a single `alloc_all` call."""
-    bm = resolve(budget)
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
+    bm = resolve(cfg.budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw, budget=bm, batch=batch)
+    b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
     rl = resource_lower_bound(spec, c, hw, b, budget=bm)
 
     devs: Dict[int, _Dev] = {}
@@ -453,8 +578,8 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
             (p.workload, profiles[p.workload.model], p.batch, p.r))
 
     best_q, best_alloc, best_inter = -1, None, R_MAX + 1.0
-    if engine == "vec":
-        cl = pmv.VecCluster(hw, budget=bm)
+    if cfg.engine == "vec":
+        cl = pmv.VecCluster(hw, budget=bm, backend=cfg.backend)
         gpu_ids = sorted(devs)
         for g in gpu_ids:
             q = cl.add_device()
@@ -467,7 +592,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                 best_q = gpu_ids[row]
                 k = int(cl.n[row])
                 best_alloc = [float(x) for x in rr[row, :k]] + [float(rn[row])]
-    elif engine == "scalar":
+    else:
         for q, dev in sorted(devs.items()):
             r_a = alloc_gpus(dev, spec, c, b, rl, hw, budget=bm)
             if r_a is None:
@@ -476,8 +601,6 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
             r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
             if r_inter < best_inter - 1e-12:
                 best_q, best_alloc, best_inter = q, r_a, r_inter
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
 
     new_plan = ProvisioningPlan(hardware=plan.hardware or hw)
     if best_q == -1:
@@ -524,17 +647,20 @@ def remove_workload(plan: ProvisioningPlan, name: str) -> ProvisioningPlan:
 
 def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                     profiles: Dict[str, WorkloadCoefficients],
-                    hw: HardwareSpec, *, engine: str = "vec",
-                    budget: BudgetLike = QUEUEING,
-                    batch: str = "eq17") -> ProvisioningPlan:
+                    hw: HardwareSpec, *,
+                    config: Optional[PlannerConfig] = None,
+                    engine: Optional[str] = None,
+                    budget: Optional[BudgetLike] = None,
+                    batch: Optional[str] = None) -> ProvisioningPlan:
     """Re-place one workload under a NEW spec (arrival-rate / SLO drift):
     recompute Theorem 1 at the new rate, re-run Alg. 2 on its CURRENT
     device (the O(1-device) fast path — covers both growth, absorbing
     more interference, and shrink, releasing slack), and fall back to
     `migrate_workload` when the current device can no longer host it."""
-    bm = resolve(budget)
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
+    bm = resolve(cfg.budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw, budget=bm, batch=batch)
+    b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
     rl = resource_lower_bound(spec, c, hw, b, budget=bm)
 
     cur = next((p for p in plan.placements if p.workload.name == spec.name),
@@ -545,16 +671,15 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
              if p.gpu == cur.gpu and p.workload.name != spec.name]
     residents = [(p.workload, profiles[p.workload.model], p.batch, p.r)
                  for p in peers]
-    if engine == "vec":
-        r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, hw, budget=bm)
-    elif engine == "scalar":
+    if cfg.engine == "vec":
+        r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, hw, budget=bm,
+                                 backend=cfg.backend)
+    else:
         r_a = alloc_gpus(_Dev(entries=residents), spec, c, b, rl, hw,
                          budget=bm)
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
     if r_a is None:
-        return migrate_workload(plan, spec, profiles, hw, engine=engine,
-                                budget=bm, batch=batch)
+        return migrate_workload(plan, spec, profiles, hw,
+                                config=cfg.replace(budget=bm))
 
     peer_r = dict(zip((p.workload.name for p in peers), r_a[:-1]))
     new_plan = ProvisioningPlan(hardware=plan.hardware)
@@ -574,14 +699,17 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
 def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                      profiles: Dict[str, WorkloadCoefficients],
-                     hw: HardwareSpec, *, engine: str = "vec",
-                     budget: BudgetLike = QUEUEING,
-                     batch: str = "eq17") -> ProvisioningPlan:
+                     hw: HardwareSpec, *,
+                     config: Optional[PlannerConfig] = None,
+                     engine: Optional[str] = None,
+                     budget: Optional[BudgetLike] = None,
+                     batch: Optional[str] = None) -> ProvisioningPlan:
     """Move one workload to the minimum-interference device that can
     host its (possibly updated) spec — remove + `add_workload`, so the
     destination can also be a fresh device (`self_grant`)."""
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     return add_workload(remove_workload(plan, spec.name), spec, profiles,
-                        hw, engine=engine, budget=budget, batch=batch)
+                        hw, config=cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -592,9 +720,8 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
 def _set_replicas(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                   profiles: Dict[str, WorkloadCoefficients],
-                  hw: HardwareSpec, *, engine: str = "vec",
-                  budget: BudgetLike = QUEUEING,
-                  batch: str = "eq17") -> ProvisioningPlan:
+                  hw: HardwareSpec,
+                  cfg: PlannerConfig) -> ProvisioningPlan:
     """Remove every current replica of ``spec`` (a BASE spec: plain name,
     full workload rate), then `add_workload` each of the k new replicas
     at its rate share — min-interference placement incl. fresh devices."""
@@ -608,45 +735,48 @@ def _set_replicas(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
     for p in cur:
         out = remove_workload(out, p.workload.name)
     for rs in replication.make_replicas(spec, k):
-        out = add_workload(out, rs, profiles, hw, engine=engine,
-                           budget=budget, batch=batch)
+        out = add_workload(out, rs, profiles, hw, config=cfg)
     return out
 
 
 def split_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    profiles: Dict[str, WorkloadCoefficients],
-                   hw: HardwareSpec, *, engine: str = "vec",
-                   budget: BudgetLike = QUEUEING,
-                   batch: str = "eq17") -> ProvisioningPlan:
+                   hw: HardwareSpec, *,
+                   config: Optional[PlannerConfig] = None,
+                   engine: Optional[str] = None,
+                   budget: Optional[BudgetLike] = None,
+                   batch: Optional[str] = None) -> ProvisioningPlan:
     """Scale-OUT edit: serve ``spec`` (base name, full rate) with k
     replicas, k strictly above the current count.  Each replica gets an
     equal rate share (summing to ``spec.rate_rps``), its own Theorem-1
     batch/budget at the share rate, and a min-interference placement."""
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     k_cur = len(replication.group_placements(plan.placements)
                 .get(spec.name, ()))
     if k <= k_cur:
         raise ValueError(f"{spec.name!r} already has {k_cur} replicas; "
                          f"split needs k > {k_cur}, got {k}")
-    return _set_replicas(plan, spec, k, profiles, hw, engine=engine,
-                         budget=budget, batch=batch)
+    return _set_replicas(plan, spec, k, profiles, hw, cfg)
 
 
 def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    profiles: Dict[str, WorkloadCoefficients],
-                   hw: HardwareSpec, *, engine: str = "vec",
-                   budget: BudgetLike = QUEUEING,
-                   batch: str = "eq17") -> ProvisioningPlan:
+                   hw: HardwareSpec, *,
+                   config: Optional[PlannerConfig] = None,
+                   engine: Optional[str] = None,
+                   budget: Optional[BudgetLike] = None,
+                   batch: Optional[str] = None) -> ProvisioningPlan:
     """Scale-IN edit: drop to k replicas (k below the current count).
     Survivor shares renormalize to ``spec.rate_rps`` — the merged rate
     is re-split equally, never silently lost; ``k = 1`` returns the
     workload to its plain (unreplicated) name."""
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     k_cur = len(replication.group_placements(plan.placements)
                 .get(spec.name, ()))
     if not 1 <= k < k_cur:
         raise ValueError(f"{spec.name!r} has {k_cur} replicas; "
                          f"merge needs 1 <= k < {k_cur}, got {k}")
-    return _set_replicas(plan, spec, k, profiles, hw, engine=engine,
-                         budget=budget, batch=batch)
+    return _set_replicas(plan, spec, k, profiles, hw, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -656,26 +786,34 @@ def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
 def provision_cheapest(specs: Sequence[WorkloadSpec],
                        profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
                        hardware: Sequence[HardwareSpec], *,
-                       engine: str = "vec",
-                       budget: BudgetLike = QUEUEING,
-                       batch: str = "eq17", replicate: bool = False,
-                       k_max: int = K_MAX
+                       config: Optional[PlannerConfig] = None,
+                       engine: Optional[str] = None,
+                       budget: Optional[BudgetLike] = None,
+                       batch: Optional[str] = None,
+                       replicate: Optional[bool] = None,
+                       k_max: Optional[int] = None
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
-    """Run Alg. 1 per hardware type and pick the cheapest feasible plan."""
+    """Run Alg. 1 per hardware type and pick the cheapest feasible plan.
+
+    When EVERY type is infeasible, the raised `InfeasibleError` carries
+    ``per_hw`` — hardware name -> the failing workload's error string —
+    alongside the joined message, so m=10k reports stay actionable."""
+    cfg = planner_config(config, engine=engine, budget=budget, batch=batch,
+                         replicate=replicate, k_max=k_max)
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
-    errors = []
+    errors: Dict[str, str] = {}
     for hw in hardware:
         try:
-            plan = provision(specs, profiles_by_hw[hw.name], hw,
-                             engine=engine, budget=budget, batch=batch,
-                             replicate=replicate, k_max=k_max)
+            plan = provision(specs, profiles_by_hw[hw.name], hw, config=cfg)
         except InfeasibleError as e:
-            errors.append(str(e))
+            errors[hw.name] = str(e)
             continue
         if best is None or plan.cost_per_hour() < best[0].cost_per_hour():
             best = (plan, hw)
     if best is None:
-        raise InfeasibleError("; ".join(errors))
+        raise InfeasibleError(
+            "; ".join(f"{name}: {msg}" for name, msg in errors.items()),
+            per_hw=errors)
     return best
 
 
@@ -700,7 +838,8 @@ def predicted_plan_metrics(plan: ProvisioningPlan,
 def predicted_violations(plan: ProvisioningPlan,
                          profiles: Dict[str, WorkloadCoefficients],
                          hw: HardwareSpec, *,
-                         budget: BudgetLike = QUEUEING) -> List[str]:
+                         config: Optional[PlannerConfig] = None,
+                         budget: Optional[BudgetLike] = None) -> List[str]:
     """Workloads whose model-predicted t_inf exceeds their inference
     budget (Constraint 14 check used by the scale sweep).  Pass the same
     ``budget`` the plan was provisioned with: the budget IS the per-
@@ -708,7 +847,8 @@ def predicted_violations(plan: ProvisioningPlan,
     BASE names — a workload violates when ANY of its replicas exceeds
     the budget at its rate share — so counts stay comparable across
     replicated and unreplicated plans."""
-    bm = resolve(budget)
+    cfg = planner_config(config, budget=budget)
+    bm = resolve(cfg.budget)
     metrics = predicted_plan_metrics(plan, profiles, hw)
     by_name = {p.workload.name: p for p in plan.placements}
     out: List[str] = []

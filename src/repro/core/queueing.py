@@ -174,28 +174,38 @@ class BudgetModel:
 
     def budget_ms_vec(self, slo_ms: np.ndarray, rate_rps: np.ndarray,
                       batch: np.ndarray) -> np.ndarray:
-        """Batched budget evaluation (same bisection, numpy arrays)."""
+        """Batched budget evaluation — bitwise-identical to `budget_ms`
+        per row (same bracket, iteration count and float operations;
+        the quantile factor MUST come from `math.log1p`, whose last ulp
+        differs from `np.log1p`'s, or the two paths drift 1e-14 apart
+        and the bitwise plan-identity contracts break)."""
         slo = np.asarray(slo_ms, dtype=np.float64)
         if self.mode == "half":
             return slo / 2.0
         r_ms = np.asarray(rate_rps, dtype=np.float64) / 1000.0
         b = np.asarray(batch, dtype=np.float64)
         target = slo * (1.0 - self.slack_frac)
-        qf = -np.log1p(-self.quantile)
+        qf = -math.log1p(-self.quantile)
         lo = np.zeros_like(slo)
         hi = slo.copy()
-        for _ in range(SOLVE_ITERS):
-            mid = 0.5 * (lo + hi)
-            rho = r_ms * mid / b
-            with np.errstate(divide="ignore", invalid="ignore"):
-                w = (self.burstiness * rho * mid
-                     / (2.0 * b * (1.0 - rho)))
-                tail = np.where(rho >= RHO_MAX, np.inf,
-                                (b - 1.0) / r_ms + w * qf)
-            tail = np.where(r_ms > 0.0, tail, 0.0)   # no arrivals: no queue
-            ok = mid + tail <= target
-            lo = np.where(ok, mid, lo)
-            hi = np.where(ok, hi, mid)
+        # Loop constants hoisted (same float ops per iteration as the
+        # scalar solver — `2.0 * b * (...)` associates left, so b2 is
+        # the exact intermediate): this bisection runs on every
+        # controller probe, where per-iteration numpy dispatch is the
+        # dominant edit-overhead term.
+        b2 = 2.0 * b
+        no_arrivals = ~(r_ms > 0.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            acc = (b - 1.0) / r_ms
+            for _ in range(SOLVE_ITERS):
+                mid = 0.5 * (lo + hi)
+                rho = r_ms * mid / b
+                w = self.burstiness * rho * mid / (b2 * (1.0 - rho))
+                tail = np.where(rho >= RHO_MAX, np.inf, acc + w * qf)
+                tail = np.where(no_arrivals, 0.0, tail)
+                ok = mid + tail <= target
+                lo = np.where(ok, mid, lo)
+                hi = np.where(ok, hi, mid)
         return np.minimum(lo, slo / 2.0)
 
 

@@ -10,7 +10,15 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+if TYPE_CHECKING:                      # no runtime dependency: types.py
+    from repro.core.queueing import BudgetLike   # stays import-free
+
+
+# Theorem 1 search ceiling for replica groups (k = 1..K_MAX).  Canonical
+# home; `provisioner.K_MAX` re-exports it for backward compatibility.
+K_MAX = 8
 
 
 @dataclass(frozen=True)
@@ -150,3 +158,87 @@ class ProvisioningPlan:
                              for pl in pls)
             lines.append(f"GPU{g}: {body}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Planner configuration (the unified knob object; docs/provisioning.md)
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("numpy", "jax")
+_ENGINES = ("vec", "scalar")
+_BATCH_MODES = ("eq17", "joint")
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    """All provisioning knobs in one frozen, hashable object.
+
+    Replaces the five parallel keywords (``engine=``, ``budget=``,
+    ``batch=``, ``replicate=``, ``k_max=``) that used to be threaded
+    through every planner entry point, and adds the sixth —
+    ``backend`` — introduced with the JAX port:
+
+      backend    "numpy" (pinned oracle) | "jax" (jitted hot path;
+                 requires the vectorized engine)
+      engine     "vec" (batched Alg. 1/2) | "scalar" (reference oracle)
+      budget     "queueing" | "half" | a `queueing.BudgetModel`
+      batch      "eq17" (closed form) | "joint" (scan b, min r_lower)
+      replicate  split solo-infeasible workloads into replica groups
+      k_max      Theorem-1 replica search ceiling (k = 1..k_max)
+
+    Every public entry point accepts ``config=``; the legacy keywords
+    remain as deprecated shims resolved through `planner_config` (passing
+    both is a TypeError).  Defaults reproduce the historical behavior
+    bit-for-bit.
+    """
+    backend: str = "numpy"
+    engine: str = "vec"
+    budget: "BudgetLike" = "queueing"
+    batch: str = "eq17"
+    replicate: bool = False
+    k_max: int = K_MAX
+
+    def __post_init__(self) -> None:
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.engine not in _ENGINES:
+            raise ValueError(f"engine must be one of {_ENGINES}, "
+                             f"got {self.engine!r}")
+        if self.batch not in _BATCH_MODES:
+            raise ValueError(f"batch must be one of {_BATCH_MODES}, "
+                             f"got {self.batch!r}")
+        if self.backend == "jax" and self.engine != "vec":
+            raise ValueError("backend='jax' jits the vectorized engine; "
+                             "combine it with engine='vec'")
+        if isinstance(self.budget, str) and self.budget not in ("half",
+                                                                "queueing"):
+            raise ValueError(f"budget string must be 'half' or 'queueing', "
+                             f"got {self.budget!r}")
+        if self.k_max < 1:
+            raise ValueError(f"k_max must be >= 1, got {self.k_max}")
+
+    def replace(self, **changes) -> "PlannerConfig":
+        return dataclasses.replace(self, **changes)
+
+
+def planner_config(config: Optional[PlannerConfig] = None,
+                   base: Optional[PlannerConfig] = None,
+                   **legacy) -> PlannerConfig:
+    """Resolve ``config=`` against the deprecated per-knob keywords.
+
+    Entry points declare their legacy keywords with ``None`` sentinels
+    and forward them here: ``config=`` wins, but mixing it with any
+    explicit legacy keyword is a TypeError (silently ignoring either
+    would be worse).  ``base`` carries a call-site default that differs
+    from `PlannerConfig()` (e.g. the controller's ``batch="joint"``).
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if config is not None:
+        if given:
+            raise TypeError(
+                "pass either config=PlannerConfig(...) or the legacy "
+                f"keywords, not both (got config= plus {sorted(given)})")
+        return config
+    cfg = base if base is not None else PlannerConfig()
+    return dataclasses.replace(cfg, **given) if given else cfg

@@ -69,8 +69,9 @@ from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
 from repro.core import replication
 from repro.core.queueing import BudgetLike, QUEUEING, resolve
-from repro.core.types import (HardwareSpec, Placement, ProvisioningPlan,
-                              WorkloadCoefficients, WorkloadSpec)
+from repro.core.types import (HardwareSpec, Placement, PlannerConfig,
+                              ProvisioningPlan, WorkloadCoefficients,
+                              WorkloadSpec, planner_config)
 from repro.serving.simulator import ServedInstance
 
 
@@ -106,6 +107,15 @@ class ControllerConfig:
                                  # workload infeasible even solo at r=1.0
                                  # is split into <= k_max rate-share
                                  # replicas; 1 disables replication)
+    planner: Optional[PlannerConfig] = None
+                                 # planner knobs (backend/engine/budget/
+                                 # batch/k_max) for the reconciler's plan
+                                 # edits; None = PlannerConfig(batch=
+                                 # "joint"), the controller's historical
+                                 # default.  A Reconciler/Controller
+                                 # ``config=`` argument overrides this,
+                                 # which overrides the legacy ``k_max``
+                                 # field above.
 
 
 class ArrivalEstimator:
@@ -215,11 +225,14 @@ class PlanState:
 
     def __init__(self, plan: ProvisioningPlan,
                  profiles: Dict[str, WorkloadCoefficients],
-                 hw: HardwareSpec, budget: BudgetLike = QUEUEING):
+                 hw: HardwareSpec, budget: BudgetLike = QUEUEING,
+                 backend: str = "numpy",
+                 probes: Optional[prov.ProbeCache] = None):
         self.hw = hw
         self.profiles = profiles
         self.hardware = plan.hardware or hw
-        self.cl = pmv.VecCluster(hw, budget=budget)
+        self.probes = probes
+        self.cl = pmv.VecCluster(hw, budget=budget, backend=backend)
         self.row_gpus: List[int] = []          # row q -> plan gpu id
         self.home: Dict[str, int] = {}         # workload name -> row q
         by_gpu: Dict[int, List[Placement]] = {}
@@ -267,12 +280,22 @@ class PlanState:
             cl.add_entry(row, spec, c, b, float(rn[row]))
         self.home[spec.name] = row
 
-    def add(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
-        c = self.profiles[spec.model]
+    def _theorem1(self, spec: WorkloadSpec, c: WorkloadCoefficients,
+                  batch: str) -> tuple:
+        """(b_appr, r_lower) through the shared probe cache when one is
+        attached — repeat edits to a (spec, budget) pair skip the
+        joint-batch scan entirely."""
+        if self.probes is not None:
+            return self.probes.theorem1(spec, c, self.hw, self.cl.bm, batch)
         b = prov.appropriate_batch(spec, c, self.hw, budget=self.cl.bm,
                                    batch=batch)
         rl = prov.resource_lower_bound(spec, c, self.hw, b,
                                        budget=self.cl.bm)
+        return b, rl
+
+    def add(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
+        c = self.profiles[spec.model]
+        b, rl = self._theorem1(spec, c, batch)
         self._place(spec, c, b, rl)
 
     def resize(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
@@ -280,10 +303,7 @@ class PlanState:
         vectorized migration fallback (provisioner.resize_workload
         semantics, O(devices touched))."""
         c = self.profiles[spec.model]
-        b = prov.appropriate_batch(spec, c, self.hw, budget=self.cl.bm,
-                                   batch=batch)
-        rl = prov.resource_lower_bound(spec, c, self.hw, b,
-                                       budget=self.cl.bm)
+        b, rl = self._theorem1(spec, c, batch)
         cl = self.cl
         q = self.home.pop(spec.name)
         cl.remove_entry(q, self._slot_at(q, spec.name))
@@ -343,18 +363,29 @@ class Reconciler:
     def __init__(self, plan: ProvisioningPlan,
                  profiles: Dict[str, WorkloadCoefficients],
                  hw: HardwareSpec, *,
-                 budget: BudgetLike = QUEUEING,
-                 batch: str = "joint",
-                 engine: str = "vec",
+                 config: Optional[PlannerConfig] = None,
+                 budget: Optional[BudgetLike] = None,
+                 batch: Optional[str] = None,
+                 engine: Optional[str] = None,
                  cfg: Optional[ControllerConfig] = None):
         self.plan = plan
         self.profiles = profiles
         self.hw = hw
-        self.base_bm = resolve(budget)
-        self.bm = self.base_bm
-        self.batch = batch
-        self.engine = engine
         self.cfg = cfg or ControllerConfig()
+        # planner-knob resolution: config= > cfg.planner > the legacy
+        # keywords over the controller's joint-batch default
+        base = (self.cfg.planner if self.cfg.planner is not None
+                else PlannerConfig(batch="joint", k_max=self.cfg.k_max))
+        self.planner = planner_config(config, base=base, budget=budget,
+                                      batch=batch, engine=engine)
+        self.base_bm = resolve(self.planner.budget)
+        self.bm = self.base_bm
+        self.batch = self.planner.batch
+        self.engine = self.planner.engine
+        self.k_max = self.planner.k_max
+        # one probe cache across ALL edits: repeat (spec, budget) probes
+        # — the dominant cost of a reconciliation at large m — are O(1)
+        self.probes = prov.ProbeCache()
         # engine="vec": lazily-built persistent VecCluster mirror (the
         # O(devices-touched) hot path); engine="scalar": each edit goes
         # through the plan-in/plan-out provisioner ops (the oracle)
@@ -479,7 +510,9 @@ class Reconciler:
         if self.engine == "vec":
             if self._state is None:
                 self._state = PlanState(self.plan, self.profiles, self.hw,
-                                        budget=self.bm)
+                                        budget=self.bm,
+                                        backend=self.planner.backend,
+                                        probes=self.probes)
                 self._state_bm = self.bm
             elif self.bm != self._state_bm:
                 self._state.set_budget(self.bm)
@@ -498,9 +531,21 @@ class Reconciler:
     # -- plan-edit plumbing (replica-aware) ---------------------------------
 
     def _group(self, base: str) -> List[Placement]:
-        """Current replica placements of one base workload."""
-        return replication.group_placements(self.plan.placements
-                                            ).get(base, [])
+        """Current replica placements of one base workload.
+
+        A direct prefix scan rather than `replication.group_placements`:
+        rebuilding the FULL plan's group index per edit was a dominant
+        controller-overhead term at m=1000 (one O(plan) dict build and
+        per-group sort per probe).  Same membership and replica order —
+        replica names are exactly ``base + SEP + int``.
+        """
+        pref = base + replication.SEP
+        group = [p for p in self.plan.placements
+                 if p.workload.name == base
+                 or p.workload.name.startswith(pref)]
+        group.sort(key=lambda p: replication.replica_index(
+            p.workload.name) or 0)
+        return group
 
     def _remove_name(self, name: str) -> None:
         if self._state is not None:
@@ -512,19 +557,17 @@ class Reconciler:
         if self._state is not None:
             self._state.add(spec, batch=self.batch)
         else:
-            self.plan = prov.add_workload(self.plan, spec, self.profiles,
-                                          self.hw, engine=self.engine,
-                                          budget=self.bm, batch=self.batch)
+            self.plan = prov.add_workload(
+                self.plan, spec, self.profiles, self.hw,
+                config=self.planner.replace(budget=self.bm))
 
     def _resize_spec(self, spec: WorkloadSpec) -> None:
         if self._state is not None:
             self._state.resize(spec, batch=self.batch)
         else:
-            self.plan = prov.resize_workload(self.plan, spec,
-                                             self.profiles, self.hw,
-                                             engine=self.engine,
-                                             budget=self.bm,
-                                             batch=self.batch)
+            self.plan = prov.resize_workload(
+                self.plan, spec, self.profiles, self.hw,
+                config=self.planner.replace(budget=self.bm))
 
     def _validate(self, reps: List[WorkloadSpec],
                   c: WorkloadCoefficients) -> bool:
@@ -533,10 +576,7 @@ class Reconciler:
         InfeasibleError would leave the group half-edited)."""
         try:
             for rs in reps:
-                b = prov.appropriate_batch(rs, c, self.hw, budget=self.bm,
-                                           batch=self.batch)
-                prov.resource_lower_bound(rs, c, self.hw, b,
-                                          budget=self.bm)
+                self.probes.theorem1(rs, c, self.hw, self.bm, self.batch)
         except prov.InfeasibleError:
             return False
         return True
@@ -582,10 +622,10 @@ class Reconciler:
         # current membership: merging a working group down to one
         # guaranteed-violating instance would destroy capacity the
         # residual still uses.
-        k_need = prov.required_replicas(new_spec, c, self.hw,
-                                        budget=self.bm, batch=self.batch,
-                                        k_max=cfg.k_max) \
-            if cfg.k_max > 1 else 1
+        k_need = self.probes.required_replicas(new_spec, c, self.hw,
+                                               self.bm, self.batch,
+                                               k_max=self.k_max) \
+            if self.k_max > 1 else 1
         try:
             if cur is None:               # re-arrival of a departed workload
                 reps = replication.make_replicas(new_spec, k_need or 1)
@@ -602,7 +642,7 @@ class Reconciler:
                     k_new = max(k_cur, k_need)
                 else:
                     k_new = k_need
-                k_new = max(1, min(k_new, cfg.k_max))
+                k_new = max(1, min(k_new, self.k_max))
                 reps = replication.make_replicas(new_spec, k_new)
                 same = [r.name for r in reps] == [p.workload.name
                                                   for p in group]
@@ -663,15 +703,16 @@ class Controller:
     def __init__(self, plan: ProvisioningPlan,
                  profiles: Dict[str, WorkloadCoefficients],
                  hw: HardwareSpec, *,
-                 budget: BudgetLike = QUEUEING,
-                 batch: str = "joint",
-                 engine: str = "vec",
+                 config: Optional[PlannerConfig] = None,
+                 budget: Optional[BudgetLike] = None,
+                 batch: Optional[str] = None,
+                 engine: Optional[str] = None,
                  cfg: Optional[ControllerConfig] = None):
         self.cfg = cfg or ControllerConfig()
-        self.reconciler = Reconciler(plan, profiles, hw, budget=budget,
-                                     batch=batch, engine=engine,
-                                     cfg=self.cfg)
-        bm = resolve(budget)
+        self.reconciler = Reconciler(plan, profiles, hw, config=config,
+                                     budget=budget, batch=batch,
+                                     engine=engine, cfg=self.cfg)
+        bm = self.reconciler.base_bm
         # one estimator per BASE workload: replicas of one workload feed
         # a single merged arrival estimate (their slices partition the
         # pooled stream, so the merge IS the workload's arrival process)

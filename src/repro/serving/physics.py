@@ -131,9 +131,6 @@ def device_state_batch(descs: Sequence[ServedModelDesc],
     over this function, so scalar and batched paths agree bitwise.
     """
     n = len(descs)
-    b = np.asarray(b, dtype=np.float64)
-    r = np.asarray(r, dtype=np.float64)
-    b, r = np.broadcast_arrays(b, r)
     # stacked per-desc constants, shape (n,) broadcasting against (..., n)
     d_load = np.array([d.d_load_mb for d in descs])
     d_fb = np.array([d.d_feedback_mb for d in descs])
@@ -141,6 +138,31 @@ def device_state_batch(descs: Sequence[ServedModelDesc],
     w_bytes = np.array([d.weight_bytes for d in descs])
     a_bytes = np.array([d.act_bytes_per_item for d in descs])
     n_kern = np.array([float(d.n_kernels) for d in descs])
+    return device_state_arrays(d_load, d_fb, flops_i, w_bytes, a_bytes,
+                               n_kern, b, r, n, hw)
+
+
+def device_state_arrays(d_load: np.ndarray, d_fb: np.ndarray,
+                        flops_i: np.ndarray, w_bytes: np.ndarray,
+                        a_bytes: np.ndarray, n_kern: np.ndarray,
+                        b: np.ndarray, r: np.ndarray,
+                        n_co: int, hw: HardwareSpec) -> BatchTrueState:
+    """`device_state_batch` on pre-stacked per-entry constants.
+
+    The per-desc constants may carry any shape broadcastable to
+    ``(..., n_co)`` — in particular ``(R, n_co)`` rows drawn from
+    DIFFERENT devices, which is what lets the simulator build every
+    latency table of one co-location width in one call
+    (`simulator._build_tables_bulk`).  ``n_co`` is the Python-int
+    co-location count: every reduction here runs over a last axis of
+    exactly that width, so a multi-device bulk call is bitwise-identical
+    to the per-device calls it replaces (same summation grouping, and
+    `_pow_stable` is shape-independent by construction).
+    """
+    n = int(n_co)
+    b = np.asarray(b, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    b, r = np.broadcast_arrays(b, r)
 
     # over-subscription: if Sum r > 1 the scheduler time-slices everyone
     # down proportionally AND pays context-thrash overhead (the long-tail

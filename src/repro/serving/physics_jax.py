@@ -1,0 +1,86 @@
+"""Jitted twin of `physics.device_state_arrays` for bulk table builds.
+
+`simulator._build_tables_bulk` batches every latency-table row of one
+co-location width into a single ``(R, n)`` evaluation; with
+``backend="jax"`` that evaluation runs here under ``jax.jit`` instead of
+numpy.  Only the five quantities a `_LatTable` stores are returned
+(t_load, t_sched, t_act, t_feedback, freq).
+
+Numerical contract — same as `repro.core.perf_model_jax`: float64
+(x64 enabled at import), agreement with the numpy path to <= 1e-6
+relative (XLA fuses/reorders float ops, and ``x ** e`` is XLA's pow,
+not the libm loop of `physics._pow_stable`).  The numpy backend stays
+the pinned bitwise oracle; see docs/reproduction-notes.md deviation 5.
+
+Compilation is keyed on (hw, n_co, R): `_build_tables_bulk` pads each
+chunk's row count R up to a power of two so a long run settles into a
+handful of compiled shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # before any jnp array work
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.types import HardwareSpec  # noqa: E402
+from repro.serving import physics  # noqa: E402
+
+
+@functools.partial(jax.jit, static_argnames=("hw", "n_co"))
+def _tables_jit(hw: HardwareSpec, n_co: int,
+                d_load: jnp.ndarray, d_fb: jnp.ndarray,
+                flops_i: jnp.ndarray, w_bytes: jnp.ndarray,
+                a_bytes: jnp.ndarray, n_kern: jnp.ndarray,
+                b: jnp.ndarray, r: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    total_r = r.sum(axis=-1)
+    shrink = jnp.maximum(1.0, total_r)
+    thrash = 1.0 + 0.6 * jnp.maximum(0.0, total_r - 1.0)
+    r = r / shrink[..., None]
+
+    t_load = d_load * b / hw.pcie_bw
+    t_feedback = d_fb * b / hw.pcie_bw
+    flops = flops_i * b * (1.0 + 0.004 * b)
+    bytes_ = w_bytes + a_bytes * b
+    t_compute = flops / (hw.peak_flops * hw.mxu_efficiency) * 1e3
+    t_mem = bytes_ / hw.hbm_bw * 1e3
+    r_eff = jnp.maximum(r, 1e-3)
+    t_c = t_compute / r_eff
+    t_m = t_mem / r_eff
+    t_act_solo = jnp.maximum(t_c, t_m) + 0.35 * jnp.minimum(t_c, t_m) + 0.05
+    cache_util = jnp.minimum(1.0, (bytes_ / (t_act_solo * 1e-3)) / hw.hbm_bw)
+    util = t_c / t_act_solo
+    power = hw.power_cap * physics.ACTIVE_W_SCALE * r_eff * (0.35 + 0.65 * util)
+    per_kernel = 0.002 + 5e-6 * n_kern
+
+    total_bw = cache_util.sum(axis=-1)
+    device_power = hw.idle_power + power.sum(axis=-1)
+    excess = jnp.maximum(device_power - hw.power_cap, 0.0)
+    freq = jnp.where(device_power <= hw.power_cap, hw.max_freq,
+                     jnp.maximum(hw.max_freq
+                                 + hw.alpha_f * excess ** physics.FREQ_EXP,
+                                 0.6 * hw.max_freq))
+
+    per_kernel = per_kernel * (1.0 + physics.SCHED_COLOC_SLOPE *
+                               max(0.0, (n_co - 1)) ** physics.SCHED_COLOC_EXP)
+    t_sched = per_kernel * n_kern * jnp.ones_like(b)
+    infl = jnp.where(total_bw > physics.BW_KNEE,
+                     (total_bw / physics.BW_KNEE) ** physics.BW_EXP, 1.0)
+    t_m_infl = t_m * infl[..., None]
+    t_act = (jnp.maximum(t_c, t_m_infl)
+             + 0.35 * jnp.minimum(t_c, t_m_infl) + 0.05) * thrash[..., None]
+    return (t_load * jnp.ones_like(b), t_sched, t_act,
+            t_feedback * jnp.ones_like(b), freq)
+
+
+def table_values(d_load, d_fb, flops_i, w_bytes, a_bytes, n_kern,
+                 b, r, n_co: int, hw: HardwareSpec):
+    """Numpy-in / numpy-out wrapper over the jitted table evaluation."""
+    import numpy as np
+    out = _tables_jit(hw, int(n_co), d_load, d_fb, flops_i, w_bytes,
+                      a_bytes, n_kern, b, r)
+    return tuple(np.asarray(a) for a in out)

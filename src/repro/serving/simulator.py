@@ -825,11 +825,114 @@ class _LatTable:
         self.t_fb = st.t_feedback[:, 0].tolist()
         self.slow = (st.freq / hw.max_freq).tolist()
 
+    @classmethod
+    def from_values(cls, t_load, t_sch, t_act, t_fb, slow) -> "_LatTable":
+        """Table from precomputed columns (`_build_tables_bulk`)."""
+        self = cls.__new__(cls)
+        self.t_load, self.t_sch, self.t_act, self.t_fb, self.slow = (
+            t_load, t_sch, t_act, t_fb, slow)
+        return self
+
+
+_BULK_CHUNK = 1 << 19    # max rows*n per bulk physics call (~50 MB live)
+
+
+def _build_tables_bulk(instances: List[ServedInstance],
+                       groups: Dict[int, List[int]], hw: HardwareSpec,
+                       backend: str = "numpy") -> Dict[int, "_LatTable"]:
+    """Latency tables for every instance of ``groups`` in a handful of
+    `physics.device_state_arrays` calls instead of one per instance.
+
+    Jobs are bucketed by co-location width n (self + peers): within a
+    bucket every row reduces over a last axis of exactly n entries —
+    the same grouping the per-device `_LatTable` build sees — so the
+    numpy backend is bitwise-identical to it, device by device.  Chunks
+    bound transient memory at ~`_BULK_CHUNK` elements per array; rows
+    are independent, so chunking cannot change results.  With
+    ``backend="jax"`` each chunk is evaluated by the jitted twin
+    (`physics_jax.table_values`, <= 1e-6 relative vs numpy), with the
+    row count padded to a power of two to bound recompilation.
+    """
+    tables: Dict[int, _LatTable] = {}
+    buckets: Dict[int, List[Tuple[int, List[int]]]] = {}
+    for g, idxs in groups.items():
+        for i in idxs:
+            cols = [i] + [k for k in idxs if k != i]
+            buckets.setdefault(len(cols), []).append((i, cols))
+    for n, jobs in sorted(buckets.items()):
+        start = 0
+        while start < len(jobs):
+            end, rows = start, 0
+            while end < len(jobs):
+                bmax = max(1, instances[jobs[end][0]].batch)
+                if rows and (rows + bmax) * n > _BULK_CHUNK:
+                    break
+                rows += bmax
+                end += 1
+            _build_tables_chunk(instances, jobs[start:end], n, rows, hw,
+                                backend, tables)
+            start = end
+    return tables
+
+
+def _build_tables_chunk(instances: List[ServedInstance],
+                        jobs: List[Tuple[int, List[int]]], n: int,
+                        rows: int, hw: HardwareSpec, backend: str,
+                        tables: Dict[int, "_LatTable"]) -> None:
+    R = rows
+    if backend == "jax":       # stable jit shapes: pad rows to 2^k
+        R = 1 << (rows - 1).bit_length() if rows > 1 else 1
+    b = np.empty((R, n))
+    r = np.empty((R, n))
+    consts = [np.empty((R, n)) for _ in range(6)]
+    d_load, d_fb, flops_i, w_bytes, a_bytes, n_kern = consts
+    blocks: List[Tuple[int, int, int]] = []
+    row = 0
+    for (i, cols) in jobs:
+        inst = instances[i]
+        bmax = max(1, inst.batch)
+        sl = slice(row, row + bmax)
+        b[sl, 0] = np.arange(1, bmax + 1)
+        r[sl, 0] = inst.r_eff
+        for j, k in enumerate(cols[1:]):
+            b[sl, j + 1] = instances[k].batch
+            r[sl, j + 1] = instances[k].r_eff
+        for j, k in enumerate(cols):
+            dsc = instances[k].desc
+            d_load[sl, j] = dsc.d_load_mb
+            d_fb[sl, j] = dsc.d_feedback_mb
+            flops_i[sl, j] = dsc.flops_per_item
+            w_bytes[sl, j] = dsc.weight_bytes
+            a_bytes[sl, j] = dsc.act_bytes_per_item
+            n_kern[sl, j] = float(dsc.n_kernels)
+        blocks.append((i, row, bmax))
+        row += bmax
+    if R > rows:               # benign values in the padding rows
+        for a in (b, r, *consts):
+            a[rows:] = a[0]
+    if backend == "jax":
+        from repro.serving import physics_jax
+        t_load, t_sch, t_act, t_fb, freq = physics_jax.table_values(
+            d_load, d_fb, flops_i, w_bytes, a_bytes, n_kern, b, r, n, hw)
+    else:
+        st = physics.device_state_arrays(d_load, d_fb, flops_i, w_bytes,
+                                         a_bytes, n_kern, b, r, n, hw)
+        t_load, t_sch, t_act, t_fb, freq = (st.t_load, st.t_sched,
+                                            st.t_act, st.t_feedback,
+                                            st.freq)
+    slow = freq / hw.max_freq
+    for (i, row0, bmax) in blocks:
+        sl = slice(row0, row0 + bmax)
+        tables[i] = _LatTable.from_values(
+            t_load[sl, 0].tolist(), t_sch[sl, 0].tolist(),
+            t_act[sl, 0].tolist(), t_fb[sl, 0].tolist(),
+            slow[sl].tolist())
+
 
 def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                   shadow_extra, monitor_period_s, adjust_fn,
                   adjust_period_s, record_timeline, adjust_scope,
-                  trace) -> SimResult:
+                  trace, backend="numpy") -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0
     instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
@@ -866,13 +969,11 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
     tables: Dict[int, _LatTable] = {}
 
     def rebuild_gpu(g: int) -> None:
-        idxs = by_gpu[g]
-        for i in idxs:
-            peers = [instances[k] for k in idxs if k != i]
-            tables[i] = _LatTable(instances[i], peers, hw)
+        tables.update(_build_tables_bulk(instances, {g: by_gpu[g]}, hw,
+                                         backend=backend))
 
-    for g in by_gpu:
-        rebuild_gpu(g)
+    tables.update(_build_tables_bulk(instances, by_gpu, hw,
+                                     backend=backend))
 
     def run_passes(i: int, T: float) -> None:
         """Advance instance i's pass recurrence up to epoch boundary T.
@@ -1033,12 +1134,19 @@ def simulate_plan(plan: ProvisioningPlan,
                   adjust_scope: str = "device",
                   record_timeline: bool = False,
                   trace: Optional["traces_mod.Trace"] = None,
-                  engine: str = "vec") -> SimResult:
+                  engine: str = "vec",
+                  backend: str = "numpy") -> SimResult:
     """Run the serving cluster for `duration_s` simulated seconds.
 
     ``engine="vec"`` (default) runs the table-cached epoch-major loop;
     ``engine="scalar"`` the reference global-heap loop.  Same seed =>
     byte-identical per-request latency streams across engines.
+
+    ``backend="jax"`` (vec engine only) evaluates the bulk latency-table
+    builds through the jitted physics twin (`physics_jax`): same event
+    recurrence, table values within 1e-6 relative of the numpy oracle —
+    use it for the m=10,000 sweeps, keep ``"numpy"`` for bitwise
+    engine-identity checks.
 
     `adjust_fn` contract — IDENTICAL across engines (see `AdjustFn`):
     ``adjust_scope="device"`` (default) calls it once per device with
@@ -1055,6 +1163,8 @@ def simulate_plan(plan: ProvisioningPlan,
     """
     if adjust_scope not in ("device", "cluster"):
         raise ValueError(f"unknown adjust_scope {adjust_scope!r}")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
     kwargs = dict(duration_s=duration_s, seed=seed, poisson=poisson,
                   shadow=shadow, shadow_extra=shadow_extra,
                   monitor_period_s=monitor_period_s, adjust_fn=adjust_fn,
@@ -1062,9 +1172,12 @@ def simulate_plan(plan: ProvisioningPlan,
                   record_timeline=record_timeline,
                   adjust_scope=adjust_scope, trace=trace)
     if engine == "vec":
-        return _simulate_vec(plan, models, hw, **kwargs)
+        return _simulate_vec(plan, models, hw, backend=backend, **kwargs)
     if engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
+    if backend != "numpy":
+        raise ValueError("backend='jax' requires engine='vec' (the scalar "
+                         "oracle is numpy by definition)")
     return _simulate_scalar(plan, models, hw, **kwargs)
 
 

@@ -23,6 +23,8 @@ README_MAX_LINES = 120
 MODULES = {
     "perf_model": "src/repro/core/perf_model.py",
     "perf_model_vec": "src/repro/core/perf_model_vec.py",
+    "perf_model_jax": "src/repro/core/perf_model_jax.py",
+    "physics_jax": "src/repro/serving/physics_jax.py",
     "provisioner": "src/repro/core/provisioner.py",
     "queueing": "src/repro/core/queueing.py",
     "replication": "src/repro/core/replication.py",
@@ -44,6 +46,8 @@ CLASSES = {
     "WorkloadSpec": "src/repro/core/types.py",
     "Placement": "src/repro/core/types.py",
     "ProvisioningPlan": "src/repro/core/types.py",
+    "PlannerConfig": "src/repro/core/types.py",
+    "ProbeCache": "src/repro/core/provisioner.py",
     "CoeffArrays": "src/repro/core/perf_model_vec.py",
     "VecCluster": "src/repro/core/perf_model_vec.py",
     "BudgetModel": "src/repro/core/queueing.py",

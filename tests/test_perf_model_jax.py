@@ -1,0 +1,217 @@
+"""JAX backend vs the numpy oracle: model, solver, allocator, simulator.
+
+The numerical contract (docs/reproduction-notes.md, deviation 5): the
+jitted twins agree with the numpy hot path to <= 1e-6 relative — XLA
+reassociates sums and fuses multiply-adds, so bitwise equality is out of
+scope — while every plan-level DECISION (placements, batches, grid-
+snapped allocations, device counts) is bit-identical, because Alg. 1/2
+thresholds carry 1e-9 epsilons that dwarf the float divergence.
+"""
+import numpy as np
+import pytest
+
+from repro.core import perf_model_vec as pmv
+from repro.core import provisioner as prov
+from repro.core.queueing import resolve
+from repro.core.types import V5E, PlannerConfig, WorkloadSpec
+from tests.test_perf_model_vec import (
+    _profiles, plan_key, random_device, random_specs)
+
+pytestmark = pytest.mark.jax   # needs the JAX toolchain (jax CI job)
+
+TOL = dict(rtol=1e-6, atol=1e-9)
+FIELDS = ("t_load", "t_sch", "t_act", "t_gpu", "t_feedback", "t_inf",
+          "throughput", "freq", "p_demand")
+
+
+# ---------------------------------------------------------------------------
+# Eqs. (1)-(11): jitted forward eval
+# ---------------------------------------------------------------------------
+
+def test_predict_device_batch_jax_matches_numpy():
+    from repro.core import perf_model_jax as pmj
+    rng = np.random.default_rng(0)
+    devices = [random_device(rng) for _ in range(16)]
+    a = pmv.predict_device_batch(devices, V5E)
+    b = pmj.predict_device_batch_jax(devices, V5E)
+    assert (a.mask == b.mask).all()
+    for f in FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(b, f))[a.mask if getattr(a, f).ndim == 2
+                                      else slice(None)],
+            getattr(a, f)[a.mask if getattr(a, f).ndim == 2
+                          else slice(None)],
+            err_msg=f, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Queueing-aware budget split: jitted bisection
+# ---------------------------------------------------------------------------
+
+def test_budget_solver_jax_matches_numpy():
+    from repro.core import perf_model_jax as pmj
+    rng = np.random.default_rng(1)
+    slo = rng.uniform(40.0, 500.0, size=500)
+    rate = rng.uniform(0.0, 300.0, size=500)
+    batch = rng.integers(1, 33, size=500).astype(float)
+    for mode in ("queueing", "half"):
+        bm = resolve(mode)
+        ref = bm.budget_ms_vec(slo, rate, batch)
+        got = pmj.budget_ms_vec_jax(bm, slo, rate, batch)
+        np.testing.assert_allclose(got, ref, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 against every open device: lax.while_loop twin
+# ---------------------------------------------------------------------------
+
+def test_alloc_all_jax_matches_numpy_randomized():
+    """Same feasibility verdicts, grid-identical allocations, same
+    Alg. 1 scores (to 1e-6) on randomized resident mixes."""
+    profiles = _profiles()
+    rng = np.random.default_rng(2)
+    checked = 0
+    for trial in range(40):
+        cls = {be: pmv.VecCluster(V5E, budget="queueing", backend=be)
+               for be in ("numpy", "jax")}
+        for q in range(int(rng.integers(1, 5))):
+            for cl in cls.values():
+                cl.add_device()
+            for i in range(int(rng.integers(0, 4))):
+                m = str(rng.choice(["light", "mid", "heavy"]))
+                s = WorkloadSpec(f"R{q}_{i}", m,
+                                 float(rng.uniform(80, 400)), 30.0)
+                b = int(rng.integers(1, 17))
+                r = float(rng.choice([0.1, 0.2, 0.25]))
+                for cl in cls.values():
+                    cl.add_entry(q, s, profiles[m], b, r)
+        m = str(rng.choice(["light", "mid", "heavy"]))
+        s_new = WorkloadSpec("NEW", m, float(rng.uniform(80, 400)),
+                             float(rng.uniform(5, 60)))
+        try:
+            b = prov.appropriate_batch(s_new, profiles[m], V5E)
+            rl = prov.resource_lower_bound(s_new, profiles[m], V5E, b)
+        except prov.InfeasibleError:
+            continue
+        fa, rra, rna, ia = cls["numpy"].alloc_all(s_new, profiles[m], b, rl)
+        fb, rrb, rnb, ib = cls["jax"].alloc_all(s_new, profiles[m], b, rl)
+        np.testing.assert_array_equal(fb, fa)
+        # allocations are +r_unit grid points snapped by round(x, 10):
+        # the backends must land on the SAME points, not just close ones
+        np.testing.assert_array_equal(rrb[:, :rra.shape[1]][fa], rra[fa])
+        np.testing.assert_array_equal(rnb[fa], rna[fa])
+        np.testing.assert_allclose(ib[fa], ia[fa], **TOL)
+        checked += 1
+    assert checked > 10
+
+
+# ---------------------------------------------------------------------------
+# Plan identity: backend="jax" end to end
+# ---------------------------------------------------------------------------
+
+def test_provision_backend_jax_plans_identical_randomized():
+    profiles = _profiles()
+    rng = np.random.default_rng(3)
+    compared = 0
+    for _ in range(25):
+        specs = random_specs(rng)
+        try:
+            ref = prov.provision(specs, profiles, V5E)
+        except prov.InfeasibleError:
+            continue
+        jx = prov.provision(specs, profiles, V5E,
+                            config=PlannerConfig(backend="jax"))
+        assert plan_key(jx) == plan_key(ref)
+        compared += 1
+    assert compared > 8
+
+
+@pytest.mark.parametrize("budget", ["half", "queueing"])
+def test_provision_backend_jax_identical_on_paper_workload(budget):
+    from repro.core.experiments import fitted_context
+    from repro.serving.workload import twelve_workloads
+    ctx = fitted_context()
+    specs = twelve_workloads()
+    ref = prov.provision(specs, ctx.profiles, ctx.hw, budget=budget)
+    jx = prov.provision(specs, ctx.profiles, ctx.hw,
+                        config=PlannerConfig(budget=budget, backend="jax"))
+    assert plan_key(jx) == plan_key(ref)
+
+
+def test_replicate_no_split_plan_identical_on_jax():
+    """replicate=True on a feasible workload set must be a no-op (k=1
+    everywhere) on BOTH backends, and both land on the same plan."""
+    profiles = _profiles()
+    specs = [WorkloadSpec("W0", "mid", 150.0, 40.0),
+             WorkloadSpec("W1", "light", 200.0, 30.0),
+             WorkloadSpec("W2", "heavy", 300.0, 10.0)]
+    ref = prov.provision(specs, profiles, V5E)
+    for backend in ("numpy", "jax"):
+        p = prov.provision(specs, profiles, V5E,
+                           config=PlannerConfig(replicate=True,
+                                                backend=backend))
+        assert plan_key(p) == plan_key(ref)
+        assert all("#" not in pl.workload.name for pl in p.placements)
+
+
+# ---------------------------------------------------------------------------
+# Simulator backend="jax": bulk table build parity
+# ---------------------------------------------------------------------------
+
+def test_physics_table_values_match_numpy():
+    from repro.serving import physics
+    from repro.serving import physics_jax
+    rng = np.random.default_rng(4)
+    for n in (1, 2, 3, 5):
+        R = int(rng.integers(4, 64))
+        shape = (R, n)
+        args = (rng.uniform(1e6, 1e8, shape),    # d_load
+                rng.uniform(1e5, 1e7, shape),    # d_fb
+                rng.uniform(1e9, 1e12, shape),   # flops_i
+                rng.uniform(1e7, 1e9, shape),    # w_bytes
+                rng.uniform(1e5, 1e7, shape),    # a_bytes
+                rng.integers(20, 400, shape).astype(float))   # n_kern
+        b = rng.integers(1, 33, shape).astype(float)
+        r = rng.uniform(0.05, 0.6, shape)
+        ref = physics.device_state_arrays(*args, b, r, n, V5E)
+        got = physics_jax.table_values(*args, b, r, n, V5E)
+        for name, a, g in zip(("t_load", "t_sched", "t_act", "t_feedback",
+                               "freq"),
+                              (ref.t_load, ref.t_sched, ref.t_act,
+                               ref.t_feedback, ref.freq), got):
+            np.testing.assert_allclose(g, a, err_msg=name, **TOL)
+
+
+def test_simulate_full_backend_jax_matches_numpy():
+    from repro.core.experiments import fitted_context
+    from repro.serving.simulator import simulate_full
+    from repro.serving.workload import models, synthetic_workloads
+    ctx = fitted_context("tpu-v5e")
+    specs = synthetic_workloads(30, 0)
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    mods = models()
+    res_n = simulate_full(plan, mods, ctx.hw, duration_s=3.0, seed=0)
+    res_j = simulate_full(plan, mods, ctx.hw, duration_s=3.0, seed=0,
+                          backend="jax")
+    sb = {s.name: s for s in specs}
+    assert res_j.violations(sb) == res_n.violations(sb)
+    assert set(res_j.request_latencies) == set(res_n.request_latencies)
+    for name, lat_n in res_n.request_latencies.items():
+        lat_j = res_j.request_latencies[name]
+        assert lat_j.shape == lat_n.shape
+        np.testing.assert_allclose(lat_j, lat_n, **TOL)
+
+
+def test_simulator_scalar_engine_rejects_jax_backend():
+    from repro.core.experiments import fitted_context
+    from repro.serving.simulator import simulate_full
+    from repro.serving.workload import models, synthetic_workloads
+    ctx = fitted_context("tpu-v5e")
+    specs = synthetic_workloads(5, 0)
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    with pytest.raises(ValueError):
+        simulate_full(plan, models(), ctx.hw, duration_s=0.5,
+                      engine="scalar", backend="jax")
+    with pytest.raises(ValueError):
+        simulate_full(plan, models(), ctx.hw, duration_s=0.5,
+                      backend="tensorflow")

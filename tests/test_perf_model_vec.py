@@ -10,10 +10,15 @@ from repro.core import baselines as B
 from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
-from repro.core.types import V5E, WorkloadCoefficients, WorkloadSpec
+from repro.core.types import (PlannerConfig, V5E, WorkloadCoefficients,
+                              WorkloadSpec)
 from tests.test_perf_model import make_coeffs
 
 TOL = dict(rtol=1e-9, atol=1e-9)
+# the scalar-vs-vec suites also pin the jitted backend where it plugs in
+# (plan identity / grid-identical allocations); jax params ride the
+# jax-marked CI job, numpy params stay in tier 1
+BACKENDS = ("numpy", pytest.param("jax", marks=pytest.mark.jax))
 FIELDS = ("t_load", "t_sch", "t_act", "t_gpu", "t_feedback", "t_inf",
           "throughput")
 
@@ -145,8 +150,9 @@ def test_veccluster_incremental_matches_fresh():
 # Algorithm 2: batched == scalar
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("budget", ["half", "queueing"])
-def test_alloc_gpus_vec_matches_scalar_randomized(budget):
+def test_alloc_gpus_vec_matches_scalar_randomized(budget, backend):
     rng = np.random.default_rng(4)
     profiles = _profiles()
     checked = 0
@@ -170,7 +176,7 @@ def test_alloc_gpus_vec_matches_scalar_randomized(budget):
         ref = prov.alloc_gpus(dev, s_new, profiles[m], b, rl, V5E,
                               budget=budget)
         got = pmv.alloc_gpus_vec(residents, s_new, profiles[m], b, rl, V5E,
-                                 budget=budget)
+                                 budget=budget, backend=backend)
         assert (ref is None) == (got is None)
         if ref is not None:
             np.testing.assert_allclose(got, ref, **TOL)
@@ -182,8 +188,9 @@ def test_alloc_gpus_vec_matches_scalar_randomized(budget):
 # Algorithm 1: identical plans from both engines
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("budget", ["half", "queueing"])
-def test_provision_engines_identical_randomized(budget):
+def test_provision_engines_identical_randomized(budget, backend):
     rng = np.random.default_rng(5)
     profiles = _profiles()
     compared = 0
@@ -194,15 +201,18 @@ def test_provision_engines_identical_randomized(budget):
                                     budget=budget)
         except prov.InfeasibleError:
             continue
-        vec = prov.provision(specs, profiles, V5E, engine="vec",
-                             budget=budget)
+        vec = prov.provision(specs, profiles, V5E,
+                             config=PlannerConfig(engine="vec",
+                                                  budget=budget,
+                                                  backend=backend))
         assert plan_key(vec) == plan_key(scalar)
         compared += 1
     assert compared > 10
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("budget", ["half", "queueing"])
-def test_provision_vec_identical_on_paper_workload(budget):
+def test_provision_vec_identical_on_paper_workload(budget, backend):
     """The paper's 4-model 12-workload App study: the batched provisioner
     emits a plan identical to the scalar oracle under both budget
     splits."""
@@ -212,8 +222,9 @@ def test_provision_vec_identical_on_paper_workload(budget):
     specs = twelve_workloads()
     scalar = prov.provision(specs, ctx.profiles, ctx.hw, engine="scalar",
                             budget=budget)
-    vec = prov.provision(specs, ctx.profiles, ctx.hw, engine="vec",
-                         budget=budget)
+    vec = prov.provision(specs, ctx.profiles, ctx.hw,
+                         config=PlannerConfig(engine="vec", budget=budget,
+                                              backend=backend))
     assert plan_key(vec) == plan_key(scalar)
     if budget == "queueing":
         # and the defaults are: vectorized engine, queueing budget
@@ -251,9 +262,11 @@ def test_budget_terms_batched_matches_scalar_in_cluster():
         np.testing.assert_allclose(vec, ref, **TOL)
 
 
-def test_ffd_and_online_engines_identical():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ffd_and_online_engines_identical(backend):
     rng = np.random.default_rng(6)
     profiles = _profiles()
+    cfg = PlannerConfig(engine="vec", backend=backend)
     for _ in range(15):
         specs = random_specs(rng)
         try:
@@ -262,13 +275,13 @@ def test_ffd_and_online_engines_identical():
         except prov.InfeasibleError:
             continue
         b = B.provision_ffd(specs, profiles, V5E, use_alloc_gpus=True,
-                            engine="vec")
+                            config=cfg)
         assert plan_key(b) == plan_key(a)
         # online arrival of one extra workload
         extra = WorkloadSpec("EXTRA", "mid", 250.0, 25.0)
         base = prov.provision(specs, profiles, V5E)
         pa = prov.add_workload(base, extra, profiles, V5E, engine="scalar")
-        pb = prov.add_workload(base, extra, profiles, V5E, engine="vec")
+        pb = prov.add_workload(base, extra, profiles, V5E, config=cfg)
         assert sorted(plan_key(pa)[0]) == sorted(plan_key(pb)[0])
 
 

@@ -1,0 +1,194 @@
+"""The unified `PlannerConfig` surface: legacy-shim equivalence,
+validation, knob precedence, structured infeasibility diagnostics, and
+the reconciler's Theorem-1 probe cache.
+
+The compatibility contract is bit-level: a legacy keyword call and its
+``config=`` spelling must produce IDENTICAL plans (`experiments`-style
+placements, batches, grid allocations), not merely equivalent ones.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import baselines as B
+from repro.core import provisioner as prov
+from repro.core.queueing import resolve
+from repro.core.types import (PlannerConfig, V5E, WorkloadSpec,
+                              planner_config)
+from repro.serving.controller import ControllerConfig, Reconciler
+from tests.test_perf_model_vec import _profiles, plan_key
+
+
+def _specs():
+    return [WorkloadSpec("W0", "mid", 150.0, 40.0),
+            WorkloadSpec("W1", "light", 200.0, 30.0),
+            WorkloadSpec("W2", "heavy", 300.0, 10.0)]
+
+
+# ---------------------------------------------------------------------------
+# Resolution rules
+# ---------------------------------------------------------------------------
+
+def test_defaults_reproduce_historical_knobs():
+    cfg = PlannerConfig()
+    assert (cfg.backend, cfg.engine, cfg.budget, cfg.batch,
+            cfg.replicate, cfg.k_max) == \
+        ("numpy", "vec", "queueing", "eq17", False, prov.K_MAX)
+
+
+def test_config_plus_legacy_keyword_is_type_error():
+    with pytest.raises(TypeError, match="not both"):
+        planner_config(PlannerConfig(), budget="half")
+    with pytest.raises(TypeError):
+        prov.provision(_specs(), _profiles(), V5E,
+                       config=PlannerConfig(), budget="half")
+    # None-valued legacy keywords are sentinels, not conflicts
+    assert planner_config(PlannerConfig(budget="half"),
+                          budget=None).budget == "half"
+
+
+def test_base_carries_call_site_defaults():
+    base = PlannerConfig(batch="joint", k_max=3)
+    assert planner_config(None, base=base) is base
+    # legacy keywords override the base, not the global defaults
+    got = planner_config(None, base=base, budget="half")
+    assert (got.batch, got.k_max, got.budget) == ("joint", 3, "half")
+    # an explicit config replaces the base outright
+    assert planner_config(PlannerConfig(), base=base).batch == "eq17"
+
+
+def test_validation_rejects_unknown_knobs():
+    for bad in (dict(backend="tensorflow"), dict(engine="gpu"),
+                dict(batch="auto"), dict(budget="thirds"),
+                dict(k_max=0), dict(backend="jax", engine="scalar")):
+        with pytest.raises(ValueError):
+            PlannerConfig(**bad)
+
+
+def test_frozen_and_hashable():
+    cfg = PlannerConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.budget = "half"
+    assert cfg.replace(budget="half") == PlannerConfig(budget="half")
+    assert cfg == PlannerConfig() and hash(cfg) == hash(PlannerConfig())
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims: bit-identical plans
+# ---------------------------------------------------------------------------
+
+def test_legacy_keywords_and_config_identical_plans():
+    specs, profiles = _specs(), _profiles()
+    for budget in ("half", "queueing"):
+        legacy = prov.provision(specs, profiles, V5E, budget=budget)
+        cfg = prov.provision(specs, profiles, V5E,
+                             config=PlannerConfig(budget=budget))
+        assert plan_key(cfg) == plan_key(legacy)
+    a = B.provision_ffd(specs, profiles, V5E, budget="half")
+    b = B.provision_ffd(specs, profiles, V5E,
+                        config=PlannerConfig(budget="half"))
+    assert plan_key(a) == plan_key(b)
+
+
+def test_plan_edits_accept_config():
+    specs, profiles = _specs(), _profiles()
+    plan = prov.provision(specs, profiles, V5E)
+    extra = WorkloadSpec("EXTRA", "mid", 250.0, 25.0)
+    pa = prov.add_workload(plan, extra, profiles, V5E, budget="queueing")
+    pb = prov.add_workload(plan, extra, profiles, V5E,
+                           config=PlannerConfig())
+    assert sorted(plan_key(pa)[0]) == sorted(plan_key(pb)[0])
+    assert prov.predicted_violations(pb, profiles, V5E,
+                                     config=PlannerConfig()) == []
+
+
+# ---------------------------------------------------------------------------
+# Controller knob precedence: config= > cfg.planner > legacy cfg.k_max
+# ---------------------------------------------------------------------------
+
+def test_reconciler_planner_precedence():
+    specs, profiles = _specs(), _profiles()
+    plan = prov.provision(specs, profiles, V5E)
+    r = Reconciler(plan, profiles, V5E)
+    assert r.planner.batch == "joint"         # historical default kept
+    assert r.k_max == ControllerConfig().k_max
+
+    r = Reconciler(plan, profiles, V5E, cfg=ControllerConfig(k_max=3))
+    assert r.k_max == 3
+    r = Reconciler(plan, profiles, V5E, cfg=ControllerConfig(
+        k_max=3, planner=PlannerConfig(batch="joint", k_max=5)))
+    assert r.k_max == 5                       # cfg.planner beats cfg.k_max
+    r = Reconciler(plan, profiles, V5E, config=PlannerConfig(k_max=7),
+                   cfg=ControllerConfig(
+                       planner=PlannerConfig(batch="joint", k_max=5)))
+    assert r.k_max == 7                       # config= beats both
+    with pytest.raises(TypeError):
+        Reconciler(plan, profiles, V5E, config=PlannerConfig(),
+                   budget="half")
+
+
+# ---------------------------------------------------------------------------
+# Structured infeasibility diagnostics
+# ---------------------------------------------------------------------------
+
+def test_provision_cheapest_per_hw_diagnostics():
+    profiles = _profiles()
+    impossible = [WorkloadSpec("DOOM", "heavy", 0.05, 5000.0)]
+    with pytest.raises(prov.InfeasibleError) as ei:
+        prov.provision_cheapest(impossible, {V5E.name: profiles}, [V5E])
+    assert set(ei.value.per_hw) == {V5E.name}
+    assert "DOOM" in ei.value.per_hw[V5E.name]
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 probe cache
+# ---------------------------------------------------------------------------
+
+def test_probe_cache_hits_and_misses():
+    profiles = _profiles()
+    cache = prov.ProbeCache()
+    bm = resolve("queueing")
+    s = WorkloadSpec("W0", "mid", 150.0, 40.0)
+    ref = (prov.appropriate_batch(s, profiles["mid"], V5E),)
+    ref += (prov.resource_lower_bound(s, profiles["mid"], V5E, ref[0]),)
+    assert cache.theorem1(s, profiles["mid"], V5E, bm, "eq17") == ref
+    assert (cache.hits, cache.misses) == (0, 1)
+    assert cache.theorem1(s, profiles["mid"], V5E, bm, "eq17") == ref
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a rename with identical (slo, rate, model) still hits: the key is
+    # the probe's actual inputs, not the workload identity
+    s2 = dataclasses.replace(s, name="RENAMED")
+    assert cache.theorem1(s2, profiles["mid"], V5E, bm, "eq17") == ref
+    assert cache.hits == 2
+
+
+def test_probe_cache_reraises_cached_infeasible():
+    profiles = _profiles()
+    cache = prov.ProbeCache()
+    bm = resolve("queueing")
+    doom = WorkloadSpec("DOOM", "heavy", 0.05, 5000.0)
+    for _ in range(2):           # miss, then cached sentinel
+        with pytest.raises(prov.InfeasibleError):
+            cache.theorem1(doom, profiles["heavy"], V5E, bm, "eq17")
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_probe_cache_required_replicas_warms_solo_probes():
+    profiles = _profiles()
+    cache = prov.ProbeCache()
+    bm = resolve("queueing")
+    hot = WorkloadSpec("HOT", "heavy", 120.0, 400.0)
+    k = cache.required_replicas(hot, profiles["heavy"], V5E, bm, "eq17")
+    assert k == prov.required_replicas(hot, profiles["heavy"], V5E,
+                                       budget=bm, batch="eq17")
+    misses = cache.misses
+    # the second ask is a pure hit, and the per-k solo probes are warm
+    assert cache.required_replicas(hot, profiles["heavy"], V5E, bm,
+                                   "eq17") == k
+    assert cache.misses == misses
+    if k and k > 1:
+        from repro.core import replication
+        probe = replication.make_replicas(hot, k)[0]
+        assert cache.solo_feasible(probe, profiles["heavy"], V5E, bm,
+                                   "eq17")
+        assert cache.misses == misses

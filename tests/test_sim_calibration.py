@@ -23,6 +23,7 @@ import pytest
 from repro.core import provisioner as prov
 from repro.core.experiments import fitted_context
 from repro.core.queueing import QUEUEING, t_queue
+from repro.core.types import PlannerConfig
 from repro.serving.simulator import simulate_full
 from repro.serving.workload import models, synthetic_workloads
 
@@ -31,9 +32,15 @@ SEEDS = (0, 1)
 POISSON_VIOLATION_BOUND = 25      # pinned: measured 16-18 at defaults
 CONSTANT_VIOLATION_BOUND = 3      # pinned: measured 0 at defaults
 
+# the whole calibration tier runs once per backend: jax-planned plans
+# are bit-identical to numpy's, so every pinned bound must hold
+# unchanged with the jitted planner in the loop (jax CI job only)
+BACKENDS = ("numpy", pytest.param("jax", marks=pytest.mark.jax))
 
-@pytest.fixture(scope="module")
-def plans():
+
+@pytest.fixture(scope="module", params=BACKENDS)
+def plans(request):
+    backend = request.param
     ctx5 = fitted_context("tpu-v5e")
     ctx4 = fitted_context("tpu-v4")
     profiles = {ctx5.hw.name: ctx5.profiles, ctx4.hw.name: ctx4.profiles}
@@ -41,10 +48,11 @@ def plans():
     specs = synthetic_workloads(M, 0)
     out = {}
     for budget in ("half", "queueing"):
+        cfg = PlannerConfig(budget=budget, backend=backend)
         plan, hw = prov.provision_cheapest(specs, profiles, hardware,
-                                           budget=budget)
+                                           config=cfg)
         pred = prov.predicted_violations(plan, profiles[hw.name], hw,
-                                         budget=budget)
+                                         config=cfg)
         out[budget] = (plan, hw, set(pred), profiles[hw.name])
     return specs, out
 
