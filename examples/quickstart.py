@@ -8,10 +8,6 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 from repro.core.experiments import all_plans, evaluate_plans, fitted_context
 from repro.core.provisioner import predicted_plan_metrics
 from repro.serving.workload import specs_by_name

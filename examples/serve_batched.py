@@ -4,10 +4,7 @@ shadow-failover behavior.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import numpy as np
 

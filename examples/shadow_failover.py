@@ -5,10 +5,6 @@ the monitor activating the pre-launched shadow process within ~1.5 s.
 
 Run:  PYTHONPATH=src python examples/shadow_failover.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 from repro.core import provisioner as prov
 from repro.core.experiments import fitted_context
 from repro.serving.simulator import simulate_plan

@@ -4,10 +4,7 @@ few hundred steps on the packed synthetic pipeline, with checkpointing.
 Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
 """
 import argparse
-import sys
 import tempfile
-
-sys.path.insert(0, "src")
 
 import numpy as np
 

@@ -19,6 +19,7 @@ Two interchangeable engines drive the algorithms:
 from __future__ import annotations
 
 import math
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -503,6 +504,8 @@ def provision(specs: Sequence[WorkloadSpec],
         for (s, c, b, r) in dev.entries:
             plan.placements.append(Placement(workload=s, gpu=g, r=r, batch=b))
     plan.n_gpus = sum(1 for d in devs if d.entries)
+    if cfg.replicate:
+        _rebalance_replica_shares(plan, profiles, hw)
     return plan
 
 
@@ -545,7 +548,43 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
             plan.placements.append(
                 Placement(workload=s, gpu=g, r=float(cl.r[g, i]), batch=b))
     plan.n_gpus = sum(1 for g in range(cl.d) if cl.entries[g])
+    if cfg.replicate:
+        _rebalance_replica_shares(plan, profiles, hw)
     return plan
+
+
+def _rebalance_replica_shares(plan: ProvisioningPlan,
+                              profiles: Dict[str, WorkloadCoefficients],
+                              hw: HardwareSpec) -> None:
+    """Re-split each replica group's total rate proportionally to the
+    predicted serving capacity of its placements (``batch / t_inf`` at
+    the GRANTED allocation, co-location included), in place.
+
+    `make_replicas`' equal split models identical homes; Alg. 1 places
+    replicas greedily, so later replicas routinely land on busier
+    devices where the same r buys a slower pass — the slow replica then
+    sets the group's pooled p99.  Capacity-proportional shares route
+    traffic toward the replicas with real headroom.  Groups whose
+    capacities are bitwise equal (k = 1 trivially, and identical-
+    composition homes) are left untouched, keeping those plans
+    bit-identical to the equal-split output.
+    """
+    groups = {b: g for b, g
+              in replication.group_placements(plan.placements).items()
+              if len(g) > 1}
+    if not groups:
+        return
+    metrics = predicted_plan_metrics(plan, profiles, hw)
+    for base in sorted(groups):
+        group = groups[base]
+        caps = [1000.0 * p.batch / metrics[p.workload.name].t_inf
+                for p in group]
+        shares = replication.proportional_shares(
+            replication.group_rate([p.workload for p in group]), caps)
+        if shares is None:
+            continue
+        for p, share in zip(group, shares):
+            p.workload = dataclasses.replace(p.workload, rate_rps=share)
 
 
 # ---------------------------------------------------------------------------
@@ -561,29 +600,48 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  config: Optional[PlannerConfig] = None,
                  engine: Optional[str] = None,
                  budget: Optional[BudgetLike] = None,
-                 batch: Optional[str] = None) -> ProvisioningPlan:
+                 batch: Optional[str] = None,
+                 exclude_gpus: Optional[frozenset] = None,
+                 pin: Optional[Tuple[int, float]] = None
+                 ) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
     with Alg. 2 reallocation, or a fresh device.  The vec engine scores
-    every existing device in a single `alloc_all` call."""
+    every existing device in a single `alloc_all` call.
+
+    ``exclude_gpus`` removes devices from candidacy (the controller's
+    health layer quarantines failed/straggling devices); the fresh-
+    device fallback still applies, so placement never lands on an
+    excluded device.
+
+    ``pin`` is an explicit ``(batch, r_floor)`` that REPLACES the
+    Theorem 1 derivation — the health layer's capacity-preserving
+    migration: a moved placement keeps the batch and at least the
+    resource grant it was provisioned with, rather than whatever the
+    controller's drifted budget would re-derive."""
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     bm = resolve(cfg.budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
-    rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+    if pin is not None:
+        b, rl = int(pin[0]), float(pin[1])
+    else:
+        b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
+        rl = resource_lower_bound(spec, c, hw, b, budget=bm)
 
     devs: Dict[int, _Dev] = {}
     for p in plan.placements:
         devs.setdefault(p.gpu, _Dev()).entries.append(
             (p.workload, profiles[p.workload.model], p.batch, p.r))
+    cand = devs if not exclude_gpus else \
+        {g: d for g, d in devs.items() if g not in exclude_gpus}
 
     best_q, best_alloc, best_inter = -1, None, R_MAX + 1.0
     if cfg.engine == "vec":
         cl = pmv.VecCluster(hw, budget=bm, backend=cfg.backend)
-        gpu_ids = sorted(devs)
+        gpu_ids = sorted(cand)
         for g in gpu_ids:
             q = cl.add_device()
-            for (s, cc, bb, r) in devs[g].entries:
+            for (s, cc, bb, r) in cand[g].entries:
                 cl.add_entry(q, s, cc, bb, r)
         if gpu_ids:
             feasible, rr, rn, r_inter = cl.alloc_all(spec, c, b, rl)
@@ -593,7 +651,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                 k = int(cl.n[row])
                 best_alloc = [float(x) for x in rr[row, :k]] + [float(rn[row])]
     else:
-        for q, dev in sorted(devs.items()):
+        for q, dev in sorted(cand.items()):
             r_a = alloc_gpus(dev, spec, c, b, rl, hw, budget=bm)
             if r_a is None:
                 continue
@@ -703,13 +761,16 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                      config: Optional[PlannerConfig] = None,
                      engine: Optional[str] = None,
                      budget: Optional[BudgetLike] = None,
-                     batch: Optional[str] = None) -> ProvisioningPlan:
+                     batch: Optional[str] = None,
+                     exclude_gpus: Optional[frozenset] = None
+                     ) -> ProvisioningPlan:
     """Move one workload to the minimum-interference device that can
     host its (possibly updated) spec — remove + `add_workload`, so the
-    destination can also be a fresh device (`self_grant`)."""
+    destination can also be a fresh device (`self_grant`).
+    ``exclude_gpus`` bans devices (health-layer quarantine)."""
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     return add_workload(remove_workload(plan, spec.name), spec, profiles,
-                        hw, config=cfg)
+                        hw, config=cfg, exclude_gpus=exclude_gpus)
 
 
 # ---------------------------------------------------------------------------

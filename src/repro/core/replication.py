@@ -100,3 +100,24 @@ def group_placements(placements: Sequence[Placement]
 def group_rate(group: Sequence[WorkloadSpec]) -> float:
     """Total workload rate = sum of the group's rate shares."""
     return float(sum(s.rate_rps for s in group))
+
+
+def proportional_shares(total: float,
+                        caps: Sequence[float]) -> Optional[List[float]]:
+    """Rate shares proportional to per-replica serving capacity.
+
+    `make_replicas` splits equally, which is only load-balanced when
+    every replica lands on an identical device composition; on unequal
+    devices the slow replica becomes the group's p99.  Returns ``total``
+    split as ``caps / sum(caps)`` — or None when every capacity is
+    (bitwise) identical, so callers skip the rewrite and equal-device
+    groups stay bit-identical to the equal-split plan.
+    """
+    if not caps:
+        return None
+    if any(not c > 0.0 for c in caps):
+        raise ValueError(f"capacities must be positive, got {list(caps)}")
+    if all(c == caps[0] for c in caps):
+        return None
+    s = float(sum(caps))
+    return [float(total) * float(c) / s for c in caps]

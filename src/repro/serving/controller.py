@@ -65,6 +65,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import perf_model as pm
 from repro.core import perf_model_vec as pmv
 from repro.core import provisioner as prov
 from repro.core import replication
@@ -103,6 +104,61 @@ class ControllerConfig:
     depart_missed: float = 8.0   # expected arrivals missed in a zero-
                                  # arrival stretch before declaring departure
     min_gap_obs: int = 4         # gaps needed before trusting a cv2 update
+    # -- health layer (failure / straggler detection + quarantine) --
+    health: bool = True          # False disables the health layer entirely
+    health_fail_ticks: int = 2   # consecutive no-completion-with-backlog
+                                 # ticks before a device is declared failed
+                                 # (>= 2: the first stalled tick may
+                                 # straddle the actual failure instant)
+    health_straggler_factor: float = 1.7
+                                 # a device's median measured/predicted
+                                 # pass-latency residual above this many
+                                 # times the fleet median residual at the
+                                 # same effective batch = straggling.
+                                 # Clean devices carry up to ~1.5x fleet-
+                                 # relative fitted-model bias (m=1000,
+                                 # batch-normalized); a straggler needs
+                                 # multiplier x its bias to clear 1.7 —
+                                 # >= ~2.2x is reliably caught, milder
+                                 # stragglers hide inside model error
+    health_straggler_abs: float = 2.1
+                                 # absolute backstop: a raw median
+                                 # residual above this flags the device
+                                 # even when fleet-relative scoring
+                                 # cannot (stragglers pile into the
+                                 # full-batch buckets their deep queues
+                                 # create and normalize each other
+                                 # away).  Clean fitted-model bias tops
+                                 # out ~1.8x at m=1000; a 2.5x
+                                 # multiplier lands >= ~2.4x
+    health_straggler_ticks: int = 2
+                                 # consecutive straggling ticks before
+                                 # quarantine (residuals are noisier than
+                                 # completions, but lognormal noise cannot
+                                 # sustain a 30% median residual)
+    health_drain_util: float = 0.6
+                                 # eviction drain headroom: a victim
+                                 # group whose worst member's fitted
+                                 # utilization (x the residual guard)
+                                 # exceeds this is re-placed as enough
+                                 # equal-share replicas to put every
+                                 # member under it — a victim at its
+                                 # throughput ceiling has ~zero drain
+                                 # rate and holds the backlog it
+                                 # accumulated during detection latency
+                                 # forever
+    health_residual_guard: float = 1.3
+                                 # fitted->true utilization guard used
+                                 # in that split decision: the fitted
+                                 # model under-predicts true service
+                                 # time by up to ~1.3-1.8x, so a
+                                 # fitted utilization near 1 can be a
+                                 # TRUE utilization past 1
+    health_readmit_s: float = 30.0
+                                 # quarantine probation: after this long the
+                                 # device is allowed to host placements
+                                 # again (re-detection re-quarantines it —
+                                 # time-based probation, not a health probe)
     k_max: int = prov.K_MAX      # replica ceiling for scale-out (a drifted
                                  # workload infeasible even solo at r=1.0
                                  # is split into <= k_max rate-share
@@ -202,6 +258,212 @@ class ArrivalEstimator:
 
 
 # ---------------------------------------------------------------------------
+# Health layer: failure / straggler detection from live telemetry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HealthReport:
+    """One tick's verdicts: devices newly detected failed / straggling,
+    and quarantined devices whose probation expired."""
+    dead: List[int]
+    stragglers: List[int]
+    readmit: List[int]
+
+
+def _pass_groups(svc: np.ndarray) -> List[tuple]:
+    """Recover (service_ms, batch) per serving pass from per-request
+    ``latency - wait``: every request of a pass completes at the same
+    instant it started serving, so consecutive equal values ARE a pass.
+    The 1e-6 ms tolerance absorbs float re-association; two REAL passes
+    landing within it would only merge into one conservative group."""
+    if svc.size == 0:
+        return []
+    brk = np.flatnonzero(np.abs(np.diff(svc)) > 1e-6) + 1
+    starts = np.concatenate([[0], brk])
+    ends = np.concatenate([brk, [svc.size]])
+    return [(float(svc[s]), int(e - s)) for s, e in zip(starts, ends)]
+
+
+class HealthMonitor:
+    """Device-health detection from what a serving system can actually
+    measure — completion counts and per-request latencies — never from
+    the fault schedule (the controller must DETECT faults, not read
+    them).
+
+    * **Failure**: a device whose instances have pending queued work but
+      complete NOTHING for `health_fail_ticks` consecutive control
+      periods.  A healthy device completes many passes per period, so
+      the only false-positive window is the tick straddling the failure.
+    * **Straggler**: per pass, the ratio of measured service time
+      (``latency - wait``, exactly the pass's realized inference time)
+      to the fitted interference model's prediction at the pass's
+      effective batch; each sample is normalized by the fleet median
+      ratio at the same effective batch, and a device whose median
+      normalized residual sits `health_straggler_factor` above the
+      fleet median of device medians for `health_straggler_ticks` ticks
+      is straggling.  The fitted model's residual vs the true physics
+      varies with effective batch and composition, but the FLEET shares
+      that bias — double normalization cancels it, while a straggler's
+      multiplier exists outside the fitted coefficient space entirely
+      and cannot cancel.  Needs >= 2 reporting devices (a lone device IS
+      the fleet median).  Predictions are memoized per composition.
+
+    Quarantined devices are skipped by detection and re-admitted after
+    `health_readmit_s` (probation — re-detection re-quarantines).
+    """
+
+    def __init__(self, profiles: Dict[str, WorkloadCoefficients],
+                 hw: HardwareSpec, cfg: ControllerConfig):
+        self.profiles = profiles
+        self.hw = hw
+        self.cfg = cfg
+        self.quarantined: Dict[int, tuple] = {}   # gpu -> (kind, t_s)
+        self._completed: Dict[int, int] = {}      # inst idx -> last count
+        self._seen: Dict[int, int] = {}           # inst idx -> consumed lats
+        self._gpu: Dict[int, int] = {}            # inst idx -> last device
+        self._fail_streak: Dict[int, int] = {}
+        self._slow_streak: Dict[int, int] = {}
+        self._pred: Dict[tuple, float] = {}       # composition -> t_inf
+
+    def _predicted(self, inst: ServedInstance,
+                   peers: List[ServedInstance], nb: int) -> float:
+        key = (inst.spec.model, nb, round(inst.r_eff, 9),
+               tuple(sorted((p.spec.model, p.batch, round(p.r_eff, 9))
+                            for p in peers)))
+        t = self._pred.get(key)
+        if t is None:
+            placed = [pm.PlacedWorkload(
+                coeffs=self.profiles[inst.spec.model], batch=nb,
+                r=inst.r_eff)]
+            placed += [pm.PlacedWorkload(
+                coeffs=self.profiles[p.spec.model], batch=p.batch,
+                r=p.r_eff) for p in peers]
+            t = pm.predict_device(placed, self.hw).per_workload[0].t_inf
+            self._pred[key] = t
+        return t
+
+    def observe(self, now_s: float,
+                instances: List[ServedInstance]) -> HealthReport:
+        cfg = self.cfg
+        by_gpu: Dict[int, List[int]] = {}
+        for i, inst in enumerate(instances):
+            by_gpu.setdefault(inst.gpu, []).append(i)
+        dead: List[int] = []
+        strag: List[int] = []
+        dev_samples: Dict[int, List[Tuple[int, float]]] = {}
+        for g in sorted(by_gpu):
+            if g in self.quarantined:
+                continue
+            idxs = by_gpu[g]
+            progress = any(instances[i].completed
+                           > self._completed.get(i, 0) for i in idxs)
+            pending = any(len(instances[i].queue) > 0 for i in idxs)
+            if pending and not progress:
+                streak = self._fail_streak.get(g, 0) + 1
+            else:
+                streak = 0
+            self._fail_streak[g] = streak
+            if streak >= cfg.health_fail_ticks:
+                dead.append(g)
+                continue
+            samples: List[Tuple[int, float]] = []   # (nb, ratio)
+            for i in idxs:
+                inst = instances[i]
+                if self._gpu.get(i, inst.gpu) != inst.gpu:
+                    continue       # migrated mid-window: the new pass
+                                   # samples still blame the OLD device
+                lo = self._seen.get(i, 0)
+                lats = inst.latencies
+                if len(lats) <= lo:
+                    continue
+                svc = (np.asarray(lats[lo:])
+                       - np.asarray(inst.waits[lo:]))
+                peers = [instances[k] for k in idxs if k != i]
+                for (service, nb) in _pass_groups(svc):
+                    nbe = min(nb, inst.batch)
+                    pred = self._predicted(inst, peers, nbe)
+                    if pred > 0.0:
+                        samples.append((nbe, service / pred))
+            if samples:
+                dev_samples[g] = samples
+        # fleet-relative straggler test: the fitted model carries a
+        # residual vs the true physics that depends on the effective
+        # batch served (partial passes mispredict worst) and on the
+        # device's composition — clean devices measure anywhere in
+        # ~[0.9, 1.6]x predicted, so an absolute threshold cannot
+        # separate model bias from a genuine straggler.  The FLEET
+        # shares the bias; a straggler does not share its multiplier.
+        # So: collapse each device to its median ratio per effective
+        # batch, normalize by the LEAVE-ONE-OUT fleet median of the
+        # other devices' medians at that batch (cancels the
+        # nb-dependent bias without letting a device that dominates a
+        # batch bucket normalize its own multiplier away), and compare
+        # the per-device median of those normalized residuals to the
+        # fleet median of device scores (cancels the rest).  A batch
+        # bucket scores a device only when >= 2 OTHER devices report
+        # it; a lone device is always exactly the fleet median.
+        dev_nb_med: Dict[int, Dict[int, float]] = {}
+        for g, samples in dev_samples.items():
+            per_nb: Dict[int, List[float]] = {}
+            for nb, r in samples:
+                per_nb.setdefault(nb, []).append(r)
+            dev_nb_med[g] = {nb: float(np.median(v))
+                             for nb, v in per_nb.items()}
+        bucket: Dict[int, List[Tuple[int, float]]] = {}
+        for g, med_by_nb in dev_nb_med.items():
+            for nb, v in med_by_nb.items():
+                bucket.setdefault(nb, []).append((g, v))
+        score: Dict[int, float] = {}
+        for g, med_by_nb in dev_nb_med.items():
+            normed = []
+            for nb, v in med_by_nb.items():
+                # nearest populated batch bucket: a straggler's slow
+                # passes accumulate deeper queues, so it often serves
+                # at a batch no clean device reports — its own bucket
+                # would be empty after leave-one-out and it would never
+                # be scored.  The fleet bias falls with nb, so on a tie
+                # prefer the SMALLER nb (larger reference, conservative)
+                cands = [nb2 for nb2, pts in bucket.items()
+                         if sum(1 for (h, _) in pts if h != g) >= 2]
+                if not cands:
+                    continue
+                nb_star = min(cands, key=lambda x: (abs(x - nb), x))
+                others = [x for (h, x) in bucket[nb_star] if h != g]
+                normed.append(v / float(np.median(others)))
+            if normed:
+                score[g] = float(np.median(normed))
+        if len(dev_samples) >= 2:
+            fleet = float(np.median(list(score.values()))) if score else 0.0
+            raw = {g: float(np.median([r for _, r in samples]))
+                   for g, samples in dev_samples.items()}
+            for g in sorted(by_gpu):
+                if g in self.quarantined or g in dead:
+                    continue
+                flagged = (g in score and fleet > 0.0
+                           and score[g] / fleet
+                           > cfg.health_straggler_factor)
+                # absolute backstop: when every device in a batch
+                # bucket straggles, fleet-relative scoring is blind —
+                # but the raw residual is not
+                flagged = flagged or (g in raw
+                                      and raw[g] > cfg.health_straggler_abs)
+                if flagged:
+                    slow = self._slow_streak.get(g, 0) + 1
+                else:
+                    slow = 0
+                self._slow_streak[g] = slow
+                if slow >= cfg.health_straggler_ticks:
+                    strag.append(g)
+        for i, inst in enumerate(instances):
+            self._completed[i] = inst.completed
+            self._seen[i] = len(inst.latencies)
+            self._gpu[i] = inst.gpu
+        readmit = sorted(g for g, (_, t0) in self.quarantined.items()
+                         if now_s - t0 >= cfg.health_readmit_s)
+        return HealthReport(dead=dead, stragglers=strag, readmit=readmit)
+
+
+# ---------------------------------------------------------------------------
 # Persistent plan state: the hot path for incremental edits
 # ---------------------------------------------------------------------------
 
@@ -246,6 +508,9 @@ class PlanState:
                                   profiles[p.workload.model], p.batch, p.r)
                 self.home[p.workload.name] = q
         self._next_gpu = (max(by_gpu) + 1) if by_gpu else 0
+        # plan gpu ids placement must avoid (health-layer quarantine);
+        # the Reconciler keeps this in sync with its quarantine set
+        self.banned: set = set()
 
     def set_budget(self, budget: BudgetLike) -> None:
         self.cl.set_budget(budget)
@@ -267,6 +532,11 @@ class PlanState:
         `add_workload` semantics against the live cluster."""
         cl = self.cl
         feasible, rr, rn, r_inter = cl.alloc_all(spec, c, b, rl)
+        if self.banned:
+            mask = np.fromiter((g in self.banned for g in self.row_gpus),
+                               dtype=bool, count=len(self.row_gpus))
+            feasible = feasible & ~mask
+            r_inter = np.where(mask, np.inf, r_inter)
         row = prov._argmin_inter(r_inter) if feasible.any() else -1
         if row == -1:
             row = cl.add_device()
@@ -293,9 +563,16 @@ class PlanState:
                                        budget=self.cl.bm)
         return b, rl
 
-    def add(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
+    def add(self, spec: WorkloadSpec, *, batch: str = "joint",
+            pin: Optional[tuple] = None) -> None:
+        """``pin=(batch, r_floor)`` bypasses Theorem 1 — the health
+        layer's capacity-preserving migration (`prov.add_workload`
+        semantics)."""
         c = self.profiles[spec.model]
-        b, rl = self._theorem1(spec, c, batch)
+        if pin is not None:
+            b, rl = int(pin[0]), float(pin[1])
+        else:
+            b, rl = self._theorem1(spec, c, batch)
         self._place(spec, c, b, rl)
 
     def resize(self, spec: WorkloadSpec, *, batch: str = "joint") -> None:
@@ -307,6 +584,11 @@ class PlanState:
         cl = self.cl
         q = self.home.pop(spec.name)
         cl.remove_entry(q, self._slot_at(q, spec.name))
+        if self.row_gpus[q] in self.banned:
+            # quarantined home device: no same-device fast path — the
+            # resize IS the eviction (min-interference move elsewhere)
+            self._place(spec, c, b, rl)
+            return
         residents = [(s, cc, bb, float(cl.r[q, i]))
                      for i, (s, cc, bb) in enumerate(cl.entries[q])]
         r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, self.hw,
@@ -339,7 +621,8 @@ class PlanEdit:
     """One reconciliation action, recorded for telemetry/benchmarks."""
     t_s: float
     action: str        # "resize" | "remove" | "add" | "split" | "merge"
-                       # | "infeasible"
+                       # | "infeasible" | "migrate" (health eviction)
+                       # | "readmit" (workload = "device:<gpu>")
     workload: str      # BASE workload name (replicas are one workload)
     rate_from: float
     rate_to: float
@@ -408,6 +691,10 @@ class Reconciler:
         self.edits: List[PlanEdit] = []
         self._breach: Dict[str, tuple] = {}    # name -> (kind, streak)
         self._period_ms = 1000.0           # refreshed per reconcile call
+        # health-layer quarantine: plan gpu ids banned from placement
+        # (every edit path — evictions AND ordinary drift edits — avoids
+        # them until readmission)
+        self.quarantined: set = set()
 
     # -- drift detection ----------------------------------------------------
 
@@ -507,16 +794,7 @@ class Reconciler:
             self.bm = self.base_bm.with_burstiness(
                 max(self._cluster_cv2(estimators),
                     self.base_bm.burstiness))
-        if self.engine == "vec":
-            if self._state is None:
-                self._state = PlanState(self.plan, self.profiles, self.hw,
-                                        budget=self.bm,
-                                        backend=self.planner.backend,
-                                        probes=self.probes)
-                self._state_bm = self.bm
-            elif self.bm != self._state_bm:
-                self._state.set_budget(self.bm)
-                self._state_bm = self.bm
+        self._ensure_state()
         changed = False
         backlog = backlog or {}
         for name in pending:
@@ -527,6 +805,129 @@ class Reconciler:
         if changed and self._state is not None:
             self.plan = self._state.to_plan()
         return changed
+
+    def _ensure_state(self) -> None:
+        """Lazily build / budget-sync the persistent VecCluster mirror
+        (engine="vec" only; the scalar oracle edits plan-in/plan-out)."""
+        if self.engine != "vec":
+            return
+        if self._state is None:
+            self._state = PlanState(self.plan, self.profiles, self.hw,
+                                    budget=self.bm,
+                                    backend=self.planner.backend,
+                                    probes=self.probes)
+            self._state_bm = self.bm
+            self._state.banned = set(self.quarantined)
+        elif self.bm != self._state_bm:
+            self._state.set_budget(self.bm)
+            self._state_bm = self.bm
+
+    # -- health-layer actions (quarantine / evict / readmit) ----------------
+
+    def quarantine(self, gpus) -> None:
+        """Ban devices from every placement path until readmission."""
+        self.quarantined.update(int(g) for g in gpus)
+        if self._state is not None:
+            self._state.banned = set(self.quarantined)
+
+    def readmit(self, now_s: float, gpus) -> None:
+        """Lift the ban (probation expired); recorded as edits."""
+        for g in gpus:
+            self.quarantined.discard(int(g))
+            self.edits.append(PlanEdit(now_s, "readmit", f"device:{g}",
+                                       0.0, 0.0, self.bm.burstiness, 0))
+        if self._state is not None:
+            self._state.banned = set(self.quarantined)
+
+    def _fitted_util(self, p: Placement) -> float:
+        """Fitted-model utilization of one placement in isolation:
+        rate x predicted t_inf(batch, r) / (1000 x batch).  Ignoring
+        co-resident interference under-estimates — the residual guard
+        in the eviction split decision covers both gaps."""
+        c = self.profiles[p.workload.model]
+        t = pm.predict_device(
+            [pm.PlacedWorkload(coeffs=c, batch=p.batch, r=p.r)],
+            self.hw).per_workload[0].t_inf
+        return p.workload.rate_rps * t / (1000.0 * p.batch)
+
+    def evict(self, now_s: float) -> bool:
+        """Migrate every live-rate placement off quarantined devices to
+        min-interference homes elsewhere.  Two shapes per victim group:
+
+        * capacity-preserving move — the placement is re-homed with its
+          planned ``(batch, r)`` PINNED (banned `alloc_all` sweep with
+          the fresh-device fallback), never re-derived: the budget may
+          have drifted since provisioning (measured burstiness refresh),
+          and re-running Theorem 1 at eviction time can hand a heavy
+          victim a smaller batch than it was provisioned with — small
+          enough to push its TRUE utilization past 1 on any device.
+        * drain split — a victim pinned at its throughput ceiling can
+          never drain the backlog it accumulated during detection
+          latency (headroom ~0).  When the group's worst fitted
+          utilization x `health_residual_guard` exceeds
+          `health_drain_util`, the whole group is re-placed as enough
+          equal-share replicas — each pinned at the group's planned
+          capacity point — to put every member under that target,
+          buying the drain real headroom.
+
+        Zero-share parked replicas stay put: there is no traffic to
+        save."""
+        cfg = self.cfg
+        bad = self.quarantined
+        if not bad:
+            return False
+        victims = [p for p in self.plan.placements
+                   if p.gpu in bad and p.workload.rate_rps > 0.0]
+        if not victims:
+            return False
+        self._ensure_state()
+        by_base: Dict[str, List[Placement]] = {}
+        for p in victims:
+            by_base.setdefault(replication.base_name(p.workload.name),
+                               []).append(p)
+        for base in sorted(by_base):
+            rate = sum(p.workload.rate_rps for p in by_base[base])
+            group = self._group(base)
+            c = self.profiles[by_base[base][0].workload.model]
+            k_cur = max(1, len(group))
+            k_new = k_cur
+            if self.k_max > 1:
+                util = max(self._fitted_util(p) for p in group) \
+                    * cfg.health_residual_guard
+                if util > cfg.health_drain_util:
+                    k_new = min(self.k_max,
+                                max(k_cur + 1,
+                                    math.ceil(k_cur * util
+                                              / cfg.health_drain_util)))
+            if k_new > k_cur:
+                total = replication.group_rate(
+                    [p.workload for p in group])
+                proto = dataclasses.replace(
+                    by_base[base][0].workload, name=base, rate_rps=total)
+                reps = replication.make_replicas(proto, k_new)
+                # pin every replica at the group's planned capacity
+                # point (heaviest member's batch and grant): per-replica
+                # serving capacity is preserved while the rate share
+                # drops 1/k — that gap IS the drain headroom.  A
+                # re-derived Theorem 1 placement at the share rate would
+                # hand back a minimum-capacity allocation instead, and
+                # minimum capacity is exactly what cannot drain.
+                pin = max(((p.batch, p.r) for p in group),
+                          key=lambda t: (t[0], t[1]))
+                for p in group:
+                    self._remove_name(p.workload.name)
+                for rs in reps:
+                    self._add_spec(rs, pin=pin)
+            else:
+                for p in by_base[base]:
+                    self._remove_name(p.workload.name)
+                    self._add_spec(p.workload, pin=(p.batch, p.r))
+            self.edits.append(PlanEdit(
+                now_s, "migrate", base, rate, rate,
+                self.bm.burstiness, k_new))
+        if self._state is not None:
+            self.plan = self._state.to_plan()
+        return True
 
     # -- plan-edit plumbing (replica-aware) ---------------------------------
 
@@ -553,13 +954,16 @@ class Reconciler:
         else:
             self.plan = prov.remove_workload(self.plan, name)
 
-    def _add_spec(self, spec: WorkloadSpec) -> None:
+    def _add_spec(self, spec: WorkloadSpec,
+                  pin: Optional[tuple] = None) -> None:
         if self._state is not None:
-            self._state.add(spec, batch=self.batch)
+            self._state.add(spec, batch=self.batch, pin=pin)
         else:
             self.plan = prov.add_workload(
                 self.plan, spec, self.profiles, self.hw,
-                config=self.planner.replace(budget=self.bm))
+                config=self.planner.replace(budget=self.bm),
+                exclude_gpus=frozenset(self.quarantined) or None,
+                pin=pin)
 
     def _resize_spec(self, spec: WorkloadSpec) -> None:
         if self._state is not None:
@@ -722,6 +1126,8 @@ class Controller:
                 burstiness=bm.burstiness)
             for base, group in replication.group_placements(
                 plan.placements).items()}
+        self.health = (HealthMonitor(profiles, hw, self.cfg)
+                       if self.cfg.health else None)
         self._last_s = 0.0
         self.n_ticks = 0
         # (t_s, $/h) after each tick: the cost the reconciled plan would
@@ -775,8 +1181,23 @@ class Controller:
                     [np.asarray(i.recent_arrivals) for i in insts_b]))
             est.observe(merged, window_ms)
             backlog[base] = float(sum(len(i.queue) for i in insts_b))
-        if self.reconciler.reconcile(now_s, self.estimators, backlog,
-                                     window_ms):
+        changed = False
+        if self.health is not None:
+            rep = self.health.observe(now_s, instances)
+            if rep.readmit:
+                for g in rep.readmit:
+                    self.health.quarantined.pop(g, None)
+                self.reconciler.readmit(now_s, rep.readmit)
+            for g in rep.dead:
+                self.health.quarantined[g] = ("failed", now_s)
+            for g in rep.stragglers:
+                self.health.quarantined[g] = ("straggler", now_s)
+            if rep.dead or rep.stragglers:
+                self.reconciler.quarantine(rep.dead + rep.stragglers)
+                changed |= self.reconciler.evict(now_s)
+        changed |= self.reconciler.reconcile(now_s, self.estimators,
+                                             backlog, window_ms)
+        if changed:
             self._apply_plan(instances)
         self._last_s = now_s
         self.n_ticks += 1

@@ -78,7 +78,7 @@ import math
 import time as _time
 from bisect import bisect_right
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -87,6 +87,7 @@ from repro.core import replication
 from repro.core.coefficients import ProfileSample
 from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
 from repro.profiling.metrics import ServedModelDesc
+from repro.serving import faults as faults_mod
 from repro.serving import physics
 from repro.serving import traces as traces_mod
 
@@ -582,6 +583,105 @@ def _regroup(instances: List[ServedInstance]) -> Dict[int, List[int]]:
     return by_gpu
 
 
+class _FaultState:
+    """Runtime fault bookkeeping shared by BOTH engines (docstring
+    semantics in `repro.serving.faults`).
+
+    The schedule is pure data, so every decision here depends only on
+    (schedule, arrival arrays, instance->device assignment at the
+    boundary) — never on served-request state.  That is what keeps
+    fault runs byte-identical across engines: the scalar heap may serve
+    a chained pass at exactly a boundary time before the fault event
+    (done has lower priority), the vec engine defers it to the next
+    epoch, and neither order can change any outcome below.
+
+    * **Fail boundary**: replicas of a >=2-member group resident on the
+      failed device have their rate share zeroed (the pre-fail share is
+      saved) and `_resync_replicas` re-splits the pooled stream's
+      future tail, so surviving replicas absorb the dead one's traffic.
+      Solo workloads keep their stream and accumulate backlog.
+    * **Restart boundary**: saved shares are restored (unless the
+      controller re-owned the spec in between — its plan rates win) and
+      the tail re-splits back.  Recovery accounting marks, per instance
+      resident on the device at restart, how many of its arrivals
+      predate the restart: the outage's recovery time is how long past
+      the restart the last of those requests completes (0 when the
+      controller migrated everyone away first).
+    """
+
+    def __init__(self, fs: "faults_mod.FaultSchedule"):
+        self.fs = fs
+        # gpu -> (fail starts, restart ends, straggler multiplier);
+        # plain lists for bisect in the hot pass loops
+        self.dev: Dict[int, Tuple[List[float], List[float], float]] = {}
+        for g in set(fs.down) | set(fs.slow):
+            iv = fs.down.get(g)
+            starts = [float(x) for x in iv[:, 0]] if iv is not None else []
+            ends = [float(x) for x in iv[:, 1]] if iv is not None else []
+            self.dev[g] = (starts, ends, fs.multiplier(g))
+        self.saved: Dict[int, float] = {}      # inst idx -> pre-fail share
+        # (restart_ms, [(inst idx, #arrivals <= restart)]) per outage
+        self.outages: List[Tuple[float, List[Tuple[int, int]]]] = []
+
+    def on_fail(self, g: int, now: float, instances, by_gpu, router,
+                arrivals) -> List[int]:
+        """Zero the shares of replicas on g; returns re-split indices."""
+        groups = _replica_members(instances)
+        changed = False
+        for i in by_gpu.get(g, []):
+            inst = instances[i]
+            base = replication.base_name(inst.spec.name)
+            if len(groups.get(base, ())) < 2:
+                continue
+            if inst.spec.rate_rps > 0.0:
+                self.saved[i] = inst.spec.rate_rps
+                inst.spec = replace(inst.spec, rate_rps=0.0)
+                changed = True
+        return _resync_replicas(router, instances, arrivals, now) \
+            if changed else []
+
+    def on_restart(self, g: int, now: float, instances, by_gpu, router,
+                   arrivals) -> List[int]:
+        """Record recovery marks, restore saved shares; re-split."""
+        members = by_gpu.get(g, [])
+        self.outages.append((now, [
+            (i, int(np.searchsorted(arrivals[i], now, side="right")))
+            for i in members]))
+        restored = False
+        for i in members:
+            saved = self.saved.pop(i, None)
+            if saved is not None and instances[i].spec.rate_rps == 0.0:
+                instances[i].spec = replace(instances[i].spec,
+                                            rate_rps=saved)
+                restored = True
+        return _resync_replicas(router, instances, arrivals, now) \
+            if restored else []
+
+    def fault_stats(self, dones: List[List[float]], horizon_ms: float,
+                    n_requests: int, n_served: int) -> Dict[str, float]:
+        """Downtime / lost-request / recovery accounting for
+        `SimResult.stats` — computed from arrival counts and completion
+        stamps both engines agree on bitwise."""
+        rec = []
+        for (r, marks) in self.outages:
+            worst = 0.0
+            for (i, n) in marks:
+                if n <= 0:
+                    continue           # nothing pending at the restart
+                dn = dones[i]
+                late = dn[n - 1] - r if n <= len(dn) else horizon_ms - r
+                if late > worst:
+                    worst = late
+            rec.append(max(0.0, worst))
+        return {
+            "n_failures": self.fs.n_failures(horizon_ms),
+            "downtime_ms": self.fs.downtime_ms(horizon_ms),
+            "lost_requests": n_requests - n_served,
+            "n_recoveries": len(rec),
+            "recovery_mean_ms": float(np.mean(rec)) if rec else 0.0,
+        }
+
+
 def _finalize(instances: List[ServedInstance], duration_s: float,
               timeline: List[Dict], stats: Dict[str, float]) -> SimResult:
     per = {}
@@ -654,20 +754,23 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
 def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                      shadow_extra, monitor_period_s, adjust_fn,
                      adjust_period_s, record_timeline, adjust_scope,
-                     trace) -> SimResult:
+                     trace, faults) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0                      # ms
     instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
         plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
+    fstate = _FaultState(faults) \
+        if faults is not None and (faults.down or faults.slow) else None
 
     # (t, prio, seq, kind, idx, ver): the kind priority pins the same-
     # time ordering the setup-time push order used to imply (arrival <
-    # monitor < adjust < done), so arrivals re-pushed MID-RUN by a
-    # replica re-split keep the arrival-before-boundary contract the
+    # monitor < adjust < done < fault), so arrivals re-pushed MID-RUN by
+    # a replica re-split keep the arrival-before-boundary contract the
     # vec engine's run_passes assumes
     events: List[Tuple[float, int, int, str, int, int]] = []
     seq = 0
-    _PRIO = {"arrival": 0, "monitor": 1, "adjust": 2, "done": 3}
+    _PRIO = {"arrival": 0, "monitor": 1, "adjust": 2, "done": 3,
+             "fault": 4}
 
     def push(t, kind, idx, ver=0):
         nonlocal seq
@@ -686,6 +789,16 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         push(t, "monitor", -1)
     for t in adj:
         push(t, "adjust", -1)
+    # fault boundaries: idx carries the DEVICE id, ver 0=fail 1=restart.
+    # Restart events past the horizon still fire (the heap drains all
+    # arrivals), mirroring the vec engine's final infinite epoch.
+    if fstate is not None:
+        for (tb, g, up) in fstate.fs.boundaries():
+            push(tb, "fault", g, 1 if up else 0)
+    # per-instance completion stamps, recovery accounting only (the vec
+    # engine keeps these always as its monitor-window index)
+    fault_dones: Optional[List[List[float]]] = \
+        [[] for _ in instances] if fstate is not None else None
 
     timeline: List[Dict] = []
     # last-window latencies, pruned each monitor tick (bounded deque, NOT
@@ -709,6 +822,16 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         inst = instances[i]
         if not inst.queue or inst.busy_until > now:
             return
+        fmult = 1.0
+        if fstate is not None:
+            fl = fstate.dev.get(inst.gpu)
+            if fl is not None:
+                fstarts, fends, fmult = fl
+                if fstarts:
+                    kf = bisect_right(fstarts, now) - 1
+                    if kf >= 0 and now < fends[kf]:
+                        return     # device down: backlog waits for the
+                                   # restart wake (or is lost forever)
         nb = min(inst.batch, len(inst.queue))
         taken, inst.queue = inst.queue[:nb], inst.queue[nb:]
         st = pass_latency(inst, nb)
@@ -717,6 +840,8 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         ns = noise_s[i].next()
         t_inf = _noisy_t_inf(st.t_load, st.t_sched, st.t_act, st.t_feedback,
                              slow, na, ns)
+        if fmult != 1.0:
+            t_inf *= fmult         # straggler: the model never knows
         done = now + t_inf
         inst.busy_until = done
         for arr in taken:
@@ -724,6 +849,8 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
             inst.latencies.append(lat)
             inst.waits.append(now - arr)
             recent[i].append((done, lat))
+        if fault_dones is not None:
+            fault_dones[i].extend([done] * nb)
         inst.completed += nb
         n_passes += 1
         push(done, "done", i)
@@ -782,6 +909,8 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 arrivals.append(np.empty(0))
                 recent.append(deque())
                 arr_ver.append(0)
+                if fault_dones is not None:
+                    fault_dones.append([])
             for i in _resync_replicas(router, instances, arrivals, now):
                 arr_ver[i] += 1
                 a = arrivals[i]
@@ -789,9 +918,41 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                     push(t, "arrival", i, arr_ver[i])
             if new or any(old_g != inst.gpu for inst, old_g in changed):
                 by_gpu = _regroup(instances)
+            if fstate is not None and changed:
+                # migration of a fault-blocked backlog: without faults,
+                # a non-empty queue implies busy_until >= now, so this
+                # clamp is a no-op in clean runs.  With it, the backlog
+                # serves on the NEW device at the tick (the wake event),
+                # exactly when the vec recurrence resumes it — never at
+                # a pre-migration arrival stamp.
+                pos = {id(inst): k for k, inst in enumerate(instances)}
+                for inst, old_g in changed:
+                    if old_g != inst.gpu and inst.busy_until < now:
+                        inst.busy_until = now
+                        push(now, "done", pos[id(inst)])
+        elif kind == "fault":
+            g = idx
+            if ver == 1:
+                resynced = fstate.on_restart(g, now, instances, by_gpu,
+                                             router, arrivals)
+            else:
+                resynced = fstate.on_fail(g, now, instances, by_gpu,
+                                          router, arrivals)
+            for i in resynced:
+                arr_ver[i] += 1
+                a = arrivals[i]
+                for t in a[np.searchsorted(a, now, side="right"):].tolist():
+                    push(t, "arrival", i, arr_ver[i])
+            if ver == 1:
+                for i in by_gpu.get(g, []):
+                    try_serve(i, now)      # restart wake: drain backlog
 
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
                    wall0, n_reconfigs, adjust_wall_ms)
+    if fstate is not None:
+        stats.update(fstate.fault_stats(
+            fault_dones, horizon, sum(len(a) for a in arrivals),
+            sum(inst.completed for inst in instances)))
     return _finalize(instances, duration_s, timeline, stats)
 
 
@@ -932,17 +1093,28 @@ def _build_tables_chunk(instances: List[ServedInstance],
 def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                   shadow_extra, monitor_period_s, adjust_fn,
                   adjust_period_s, record_timeline, adjust_scope,
-                  trace, backend="numpy") -> SimResult:
+                  trace, faults, backend="numpy") -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0
     instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
         plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
     n_inst = len(instances)
+    fstate = _FaultState(faults) \
+        if faults is not None and (faults.down or faults.slow) else None
 
     mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
                             adjust_period_s)
     mon_set, adj_set = set(mon), set(adj)
-    epochs = [(t, t in mon_set, t in adj_set) for t in sorted(mon_set | adj_set)]
+    # fault boundaries become epochs of their own: run_passes advances
+    # everyone to the boundary, then the share zero/restore + re-split
+    # runs — the same (t, gpu, is_up) order the scalar heap processes
+    # its prio-4 fault events in
+    fault_at: Dict[float, List[Tuple[int, bool]]] = {}
+    if fstate is not None:
+        for (tb, g, up) in fstate.fs.boundaries():
+            fault_at.setdefault(tb, []).append((g, up))
+    epochs = [(t, t in mon_set, t in adj_set)
+              for t in sorted(mon_set | adj_set | set(fault_at))]
     epochs.append((math.inf, False, False))            # final drain
 
     arr_np = arrivals
@@ -998,14 +1170,37 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
         wts = instances[i].waits
         dones = done_flat[i]
         anp = arr_np[i]
+        # device fault view, fixed for this segment: the instance's gpu
+        # only changes at adjust boundaries, which end every segment
+        fstarts = fends = None
+        fmult = 1.0
+        if fstate is not None:
+            fl = fstate.dev.get(instances[i].gpu)
+            if fl is not None:
+                fstarts, fends, fmult = fl
+                if not fstarts:
+                    fstarts = None
         while jj < n_arr:
             a = arr[jj]
             if bu > a:                 # chained serve at pass completion
                 start = bu
-                if start >= T:
-                    break
+                chained = True
             else:                      # idle: next arrival triggers
                 start = a
+                chained = False
+            if fstarts is not None:
+                kf = bisect_right(fstarts, start) - 1
+                if kf >= 0 and start < fends[kf]:
+                    # device down at the would-be pass start: the pass
+                    # begins at the restart (inf for a permanent
+                    # failure), the same instant the scalar engine's
+                    # restart wake drains the backlog
+                    start = fends[kf]
+                    chained = True
+            if chained:
+                if start >= T:
+                    break
+            else:
                 if start > T:
                     break
             nb = bisect_right(arr, start, jj) - jj
@@ -1016,6 +1211,8 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
             ns = ns_s.next()
             t_inf = _noisy_t_inf(t_load_t[k], t_sch_t[k], t_act_t[k],
                                  t_fb_t[k], slow_t[k], na, ns)
+            if fmult != 1.0:
+                t_inf *= fmult         # straggler: the model never knows
             done = start + t_inf
             lats.extend((done - anp[jj:jj + nb]).tolist())
             wts.extend((start - anp[jj:jj + nb]).tolist())
@@ -1100,9 +1297,29 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 moved = moved or old_g != inst.gpu
             if moved:
                 by_gpu = _regroup(instances)
+            if fstate is not None and changed:
+                # migration of a fault-blocked backlog: see the scalar
+                # twin — a no-op in clean runs, and with faults it pins
+                # the first post-migration pass to the tick time
+                pos = {id(inst): k for k, inst in enumerate(instances)}
+                for inst, old_g in changed:
+                    if old_g != inst.gpu:
+                        k = pos[id(inst)]
+                        if busy[k] < T:
+                            busy[k] = T
         for g in sorted(dirty):
             if g in by_gpu:
                 rebuild_gpu(g)
+        if fstate is not None and T in fault_at:
+            for (g, up) in fault_at[T]:
+                if up:
+                    resynced = fstate.on_restart(g, T, instances, by_gpu,
+                                                 router, arr_np)
+                else:
+                    resynced = fstate.on_fail(g, T, instances, by_gpu,
+                                              router, arr_np)
+                for i in resynced:
+                    arr_l[i] = arr_np[i].tolist()
 
     for i, inst in enumerate(instances):
         inst.completed = completed[i]
@@ -1113,6 +1330,10 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
 
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
                    wall0, n_reconfigs, adjust_wall_ms)
+    if fstate is not None:
+        stats.update(fstate.fault_stats(
+            done_flat, horizon, sum(len(a) for a in arrivals),
+            sum(completed)))
     return _finalize(instances, duration_s, timeline, stats)
 
 
@@ -1134,6 +1355,7 @@ def simulate_plan(plan: ProvisioningPlan,
                   adjust_scope: str = "device",
                   record_timeline: bool = False,
                   trace: Optional["traces_mod.Trace"] = None,
+                  faults: Optional["faults_mod.FaultSchedule"] = None,
                   engine: str = "vec",
                   backend: str = "numpy") -> SimResult:
     """Run the serving cluster for `duration_s` simulated seconds.
@@ -1160,6 +1382,16 @@ def simulate_plan(plan: ProvisioningPlan,
     `repro.serving.traces.Trace` schedule (diurnal / spike / churn);
     arrivals stay pre-generated from the shared per-instance RNG
     streams, so traced runs remain engine-identical.
+
+    ``faults`` injects a `repro.serving.faults.FaultSchedule` — device
+    down intervals (in-flight passes finish, backlog queues, replica
+    groups absorb the dead replica's share, a ``restart`` of ``inf``
+    loses the backlog) and persistent straggler multipliers the
+    performance model never sees.  Fault runs stay byte-identical
+    across engines; ``SimResult.stats`` gains ``n_failures`` /
+    ``downtime_ms`` / ``lost_requests`` / ``n_recoveries`` /
+    ``recovery_mean_ms``.  ``faults=None`` leaves every code path —
+    and every output byte — exactly as before.
     """
     if adjust_scope not in ("device", "cluster"):
         raise ValueError(f"unknown adjust_scope {adjust_scope!r}")
@@ -1170,7 +1402,7 @@ def simulate_plan(plan: ProvisioningPlan,
                   monitor_period_s=monitor_period_s, adjust_fn=adjust_fn,
                   adjust_period_s=adjust_period_s,
                   record_timeline=record_timeline,
-                  adjust_scope=adjust_scope, trace=trace)
+                  adjust_scope=adjust_scope, trace=trace, faults=faults)
     if engine == "vec":
         return _simulate_vec(plan, models, hw, backend=backend, **kwargs)
     if engine != "scalar":

@@ -35,6 +35,7 @@ MODULES = {
     "simulator": "src/repro/serving/simulator.py",
     "physics": "src/repro/serving/physics.py",
     "traces": "src/repro/serving/traces.py",
+    "faults": "src/repro/serving/faults.py",
     "controller": "src/repro/serving/controller.py",
     "workload": "src/repro/serving/workload.py",
 }

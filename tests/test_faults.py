@@ -1,0 +1,290 @@
+"""Fault injection layer: schedules, simulator semantics, self-healing.
+
+Pins the three contracts the availability story rests on:
+
+* `repro.serving.faults` schedules are validated, seeded, and
+  deterministic data — device sub-streams independent of fleet size.
+* The simulator implements the documented fault semantics IDENTICALLY
+  in both engines: faults-off runs are byte-identical to pre-fault
+  behavior (``faults=None`` == empty schedule), and a fixed-seed fault
+  scenario produces byte-identical streams scalar vs vec.
+* The controller's health layer turns faults into recoveries: failures
+  are detected and migrated off, stragglers are caught from
+  measured-vs-predicted residuals, and the controlled run strictly
+  beats the uncontrolled one.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core import replication
+from repro.core.experiments import fitted_context
+from repro.core.types import PlannerConfig
+from repro.serving import faults
+from repro.serving.controller import Controller
+from repro.serving.simulator import simulate_plan, subplan
+from repro.serving.workload import (models, specs_by_name,
+                                    synthetic_workloads, twelve_workloads)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ctx = fitted_context()
+    plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw)
+    return ctx, plan, models()
+
+
+_WALL_KEYS = ("wall_s", "events_per_s")
+
+
+def _identical(a, b, *, stats=True):
+    assert set(a.request_latencies) == set(b.request_latencies)
+    for k in a.request_latencies:
+        assert np.array_equal(a.request_latencies[k],
+                              b.request_latencies[k]), k
+        assert np.array_equal(a.request_waits[k], b.request_waits[k]), k
+    assert a.per_workload == b.per_workload
+    if stats:
+        sa = {k: v for k, v in a.stats.items() if k not in _WALL_KEYS}
+        sb = {k: v for k, v in b.stats.items() if k not in _WALL_KEYS}
+        assert sa == sb
+
+
+# ---------------------------------------------------------------------------
+# Schedule validation and generators
+# ---------------------------------------------------------------------------
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        faults.FaultSchedule(down={0: [[-1.0, 5.0]]})
+    with pytest.raises(ValueError):
+        faults.FaultSchedule(down={0: [[5.0, 5.0]]})       # restart <= fail
+    with pytest.raises(ValueError):
+        faults.FaultSchedule(down={0: [[0.0, 10.0], [5.0, 20.0]]})
+    with pytest.raises(ValueError):
+        faults.FaultSchedule(slow={0: 0.0})
+    # unity multipliers are dropped; intervals are sorted
+    fs = faults.FaultSchedule(down={0: [[50.0, 60.0], [10.0, 20.0]]},
+                              slow={0: 1.0, 1: 2.5})
+    assert 0 not in fs.slow and fs.slow[1] == 2.5
+    assert fs.down[0][0, 0] == 10.0
+    assert fs.multiplier(0) == 1.0 and fs.multiplier(1) == 2.5
+
+
+def test_schedule_lookups():
+    fs = faults.FaultSchedule(down={3: [[100.0, 200.0], [500.0, math.inf]]})
+    assert not fs.is_down(3, 99.9)
+    assert fs.is_down(3, 100.0)          # half-open [fail, restart)
+    assert not fs.is_down(3, 200.0)
+    assert fs.is_down(3, 1e9)            # permanent
+    assert fs.next_up(3, 150.0) == 200.0
+    assert fs.next_up(3, 600.0) == math.inf
+    assert fs.next_up(3, 50.0) == 50.0
+    assert fs.n_failures(1000.0) == 2
+    assert fs.n_failures(300.0) == 1
+    assert fs.downtime_ms(1000.0) == 100.0 + 500.0
+    bounds = fs.boundaries()             # inf restart has no up event
+    assert bounds == [(100.0, 3, False), (200.0, 3, True), (500.0, 3, False)]
+
+
+def test_generators_seeded_and_fleet_independent():
+    a = faults.random_failures(8, 60_000.0, rate_per_min=2.0, mttr_ms=3000.0,
+                               seed=5)
+    b = faults.random_failures(8, 60_000.0, rate_per_min=2.0, mttr_ms=3000.0,
+                               seed=5)
+    small = faults.random_failures(4, 60_000.0, rate_per_min=2.0,
+                                   mttr_ms=3000.0, seed=5)
+    assert set(a.down) == set(b.down)
+    for g in a.down:
+        assert np.array_equal(a.down[g], b.down[g])
+        if g in small.down:              # per-device default_rng([seed, g])
+            assert np.array_equal(a.down[g], small.down[g])
+    assert faults.random_failures(8, 60_000.0, rate_per_min=0.0,
+                                  mttr_ms=1.0, seed=0).down == {}
+
+    st = faults.stragglers(20, frac=0.25, multiplier=2.0, seed=1)
+    assert len(st.slow) == 5
+    assert all(m == 2.0 for m in st.slow.values())
+
+
+def test_merge_unions_and_rejects_conflicts():
+    fail = faults.FaultSchedule(down={0: [[10.0, 20.0]]})
+    slow = faults.FaultSchedule(slow={1: 2.0})
+    fs = faults.merge(fail, slow)
+    assert fs.is_down(0, 15.0) and fs.multiplier(1) == 2.0
+    with pytest.raises(ValueError):
+        faults.merge(slow, faults.FaultSchedule(slow={1: 3.0}))
+
+
+# ---------------------------------------------------------------------------
+# Simulator semantics: identity and accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["scalar", "vec"])
+def test_faults_none_equals_empty_schedule(setup, engine):
+    """faults=None and an empty schedule leave every stream untouched —
+    the faults-off byte-identity guarantee, per engine."""
+    ctx, plan, mods = setup
+    kw = dict(duration_s=4.0, poisson=True, seed=3, engine=engine)
+    _identical(simulate_plan(plan, mods, ctx.hw, **kw),
+               simulate_plan(plan, mods, ctx.hw,
+                             faults=faults.FaultSchedule(), **kw))
+
+
+@pytest.mark.jax
+def test_faults_none_equals_empty_schedule_jax(setup):
+    ctx, plan, mods = setup
+    kw = dict(duration_s=4.0, poisson=True, seed=3, backend="jax")
+    _identical(simulate_plan(plan, mods, ctx.hw, **kw),
+               simulate_plan(plan, mods, ctx.hw,
+                             faults=faults.FaultSchedule(), **kw))
+
+
+def _scenario_schedule(plan):
+    """One mid-run outage plus one straggler, on distinct devices."""
+    g_w3 = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    g_w5 = next(p.gpu for p in plan.placements if p.workload.name == "W5")
+    return faults.merge(
+        faults.FaultSchedule(down={g_w3: [[1500.0, 4000.0]]}),
+        faults.FaultSchedule(slow={g_w5: 2.0}))
+
+
+def test_fault_scenario_engine_identity(setup):
+    """Fixed-seed faulty runs are byte-identical scalar vs vec,
+    including the fault accounting in SimResult.stats."""
+    ctx, plan, mods = setup
+    fs = _scenario_schedule(plan)
+    kw = dict(duration_s=8.0, poisson=True, seed=11, faults=fs)
+    a = simulate_plan(plan, mods, ctx.hw, engine="scalar", **kw)
+    b = simulate_plan(plan, mods, ctx.hw, engine="vec", **kw)
+    _identical(a, b)
+    assert a.stats["n_failures"] == 1
+    assert a.stats["downtime_ms"] == 2500.0
+
+
+def test_outage_backlogs_then_recovers(setup):
+    """A solo device outage: arrivals queue as backlog (nothing lost),
+    completions stall during the window, and recovery is accounted."""
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(down={g: [[2000.0, 6000.0]]})
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=12.0, faults=fs)
+    clean = simulate_plan(plan, mods, ctx.hw, duration_s=12.0)
+    assert res.stats["n_failures"] == 1
+    assert res.stats["lost_requests"] == 0
+    assert res.stats["n_recoveries"] == 1
+    assert res.stats["recovery_mean_ms"] > 0.0
+    # the outage inflates W3's tail far past its clean value
+    assert res.per_workload["W3"]["p99_ms"] \
+        > 2.0 * clean.per_workload["W3"]["p99_ms"]
+
+
+def test_permanent_failure_loses_backlog(setup):
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(down={g: [[2000.0, math.inf]]})
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=6.0, faults=fs)
+    assert res.stats["lost_requests"] > 0
+    assert res.stats["n_recoveries"] == 0
+
+
+def test_straggler_inflates_measured_latency(setup):
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(slow={g: 2.5})
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=6.0, faults=fs)
+    clean = simulate_plan(plan, mods, ctx.hw, duration_s=6.0)
+    assert res.per_workload["W3"]["p99_ms"] \
+        > 1.5 * clean.per_workload["W3"]["p99_ms"]
+    # the straggler is invisible to the fault accounting (no downtime)
+    assert res.stats["n_failures"] == 0
+    assert res.stats["downtime_ms"] == 0.0
+
+
+def test_shadow_activates_over_outage(setup):
+    """With shadow=True a solo outage fails over to the shadow process
+    instead of just backlogging."""
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(down={g: [[2000.0, 8000.0]]})
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=12.0, faults=fs,
+                        shadow=True)
+    assert res.per_workload["W3"]["shadow_used"]
+    assert res.stats["lost_requests"] == 0
+
+
+def test_replicas_absorb_failed_member():
+    """A replica group keeps serving its base workload through one
+    member's permanent failure — the runtime re-split hands the dead
+    replica's share to the survivors (controller OFF)."""
+    ctx = fitted_context()
+    specs = synthetic_workloads(100, 0)
+    plan = prov.provision(specs, ctx.profiles, ctx.hw, replicate=True)
+    groups = {b: g for b, g in
+              replication.group_placements(plan.placements).items()
+              if len(g) >= 2 and len({p.gpu for p in g}) >= 2}
+    assert groups, "expected at least one multi-device replica group"
+    base = sorted(groups)[0]
+    group = groups[base]
+    gpus = sorted({p.gpu for p in group})
+    sub = subplan(plan, gpus)
+    fs = faults.FaultSchedule(down={gpus[0]: [[1000.0, math.inf]]})
+    res = simulate_plan(sub, models(), ctx.hw, duration_s=6.0, faults=fs)
+    total = sum(s.rate_rps for s in specs if s.name == base)
+    # survivors absorb the share: >= ~5/6 of the full rate still served
+    # (the first second ran at full membership; the dead replica's
+    # backlog is the only loss)
+    assert res.per_workload[base]["rps"] > 0.8 * total
+
+
+# ---------------------------------------------------------------------------
+# Self-healing: the controller closes the loop
+# ---------------------------------------------------------------------------
+
+def _controlled(plan, ctx, mods, fs, **kw):
+    ctl = Controller(plan, ctx.profiles, ctx.hw,
+                     config=PlannerConfig(batch="joint"))
+    res = simulate_plan(plan, mods, ctx.hw, faults=fs, adjust_fn=ctl,
+                        adjust_scope="cluster", adjust_period_s=1.0,
+                        record_timeline=True, **kw)
+    return ctl, res
+
+
+def test_controller_heals_device_failure(setup):
+    """Failure detection -> quarantine -> migration: the controlled run
+    strictly beats the uncontrolled one on violations AND recovery."""
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(down={g: [[2000.0, 8000.0]]})
+    kw = dict(duration_s=10.0, poisson=True, seed=0)
+    off = simulate_plan(plan, mods, ctx.hw, faults=fs, **kw)
+    ctl, on = _controlled(plan, ctx, mods, fs, **kw)
+    spec_map = specs_by_name()
+    assert any(e.action == "migrate" for e in ctl.edits)
+    v_off = float(np.mean(list(off.violation_rates(spec_map).values())))
+    v_on = float(np.mean(list(on.violation_rates(spec_map).values())))
+    assert v_on < v_off
+    assert on.stats["recovery_mean_ms"] < off.stats["recovery_mean_ms"]
+
+
+def test_controller_migrates_straggler_and_recovers(setup):
+    """Straggler detection from measured-vs-predicted residuals: the
+    victim is migrated off and its post-migration tail returns under
+    the SLO."""
+    ctx, plan, mods = setup
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(slow={g: 2.5})
+    ctl, on = _controlled(plan, ctx, mods, fs, duration_s=10.0,
+                          poisson=True, seed=0)
+    migrated = [e for e in ctl.edits if e.action == "migrate"]
+    assert migrated and migrated[0].workload == "W3"
+    slo = specs_by_name()["W3"].slo_ms
+    tail = [t["p99_1s"] for t in on.timeline
+            if replication.base_name(t["workload"]) == "W3"
+            and t["t_s"] >= 7.0 and t["rps_1s"] > 0.0]
+    assert tail and max(tail) <= slo
+    # no collateral quarantines of healthy devices
+    quarantined = set(ctl.reconciler.quarantined)
+    assert quarantined == {g}

@@ -392,3 +392,64 @@ def test_scale_out_requires_cluster_scope(ctx):
         simulate_plan(plan, mods, ctx.hw, duration_s=2.0,
                       adjust_fn=rogue, adjust_period_s=1.0,
                       adjust_scope="device")
+
+
+# ---------------------------------------------------------------------------
+# Capacity-proportional share rebalance (provision-time, unequal devices)
+# ---------------------------------------------------------------------------
+
+def test_proportional_shares_unit():
+    assert repl.proportional_shares(100.0, []) is None
+    assert repl.proportional_shares(100.0, [3.0, 3.0, 3.0]) is None
+    with pytest.raises(ValueError):
+        repl.proportional_shares(100.0, [3.0, 0.0])
+    shares = repl.proportional_shares(90.0, [2.0, 1.0])
+    assert shares == [60.0, 30.0]
+    assert sum(shares) == 90.0
+
+
+def test_rebalance_preserves_group_rates(ctx, m100):
+    """Every replica group's shares still sum to its base rate after
+    the capacity-proportional rewrite, and unreplicated plans are
+    untouched (replicate=False goes nowhere near the rebalance)."""
+    specs, plan = m100
+    by_base = {s.name: s.rate_rps for s in specs}
+    for base, group in repl.group_placements(plan.placements).items():
+        total = repl.group_rate([p.workload for p in group])
+        assert total == pytest.approx(by_base[base], rel=1e-9)
+
+
+def test_rebalance_skips_equal_device_groups(ctx, m100):
+    """Groups whose replicas sit on identical device compositions keep
+    the bitwise-equal-share split (proportional_shares returns None for
+    bitwise-identical capacities)."""
+    specs, plan = m100
+    metrics = prov.predicted_plan_metrics(plan, ctx.profiles, ctx.hw)
+    for base, group in repl.group_placements(plan.placements).items():
+        if len(group) < 2:
+            continue
+        caps = [1000.0 * p.batch / metrics[p.workload.name].t_inf
+                for p in group]
+        shares = [p.workload.rate_rps for p in group]
+        if all(c == caps[0] for c in caps):
+            assert all(s == shares[0] for s in shares)
+        else:
+            total = sum(shares)
+            want = repl.proportional_shares(total, caps)
+            for s, w in zip(shares, want):
+                assert s == pytest.approx(w, rel=1e-9)
+
+
+def test_rebalanced_provision_engine_identical(ctx):
+    """The scalar and vec provision engines emit the same rebalanced
+    replicated plan."""
+    specs = synthetic_workloads(60, 2)
+    a = prov.provision(specs, ctx.profiles, ctx.hw, replicate=True,
+                       engine="scalar")
+    b = prov.provision(specs, ctx.profiles, ctx.hw, replicate=True,
+                       engine="vec")
+    pa = sorted(((p.workload.name, p.workload.rate_rps, p.gpu, p.batch,
+                  p.r) for p in a.placements))
+    pb = sorted(((p.workload.name, p.workload.rate_rps, p.gpu, p.batch,
+                  p.r) for p in b.placements))
+    assert pa == pb
