@@ -29,6 +29,16 @@ Scenarios:
              per-request violation-rate column shows the win).
   churn      10% of workloads depart / 10% arrive mid-run — exercises
              remove_workload / add_workload reconciliation.
+  overload   demand ramps to ~2x an immovable fleet: the plan is
+             provisioned normally, then the controller runs with
+             ``max_devices`` frozen at that fleet size while the low
+             tier (3 of every 4 workloads, priority 0) ramps to
+             OVERLOAD_PEAK_LO and the high tier (priority 1) to
+             OVERLOAD_PEAK_HI.  The admission layer must degrade
+             gracefully: preempt/brownout/shed the low tier, keep the
+             high tier's whole-run p99 inside its SLO.  --check gates
+             zero high-tier violations plus bounded low-tier shed-rate
+             and brownout depth (both reported in the JSON artifact).
 
 The reconciler's Theorem-1 probes are memoized across edits
 (`provisioner.ProbeCache`): repeat (spec, budget) probes — the dominant
@@ -47,10 +57,11 @@ Run:  PYTHONPATH=src python -m benchmarks.dynamic_sweep [--quick] [--check]
       --check        exit non-zero if any scenario's controlled
                      violations exceed the static plan's, if a no-drift
                      run reconfigures at all (or its plan is not
-                     bit-identical), if an m=1000 controlled sim
-                     exceeds the scale_sweep wall-clock bound, or if
-                     the m=1000 diurnal controller overhead exceeds
-                     EDIT_TARGET_MS
+                     bit-identical), if an overload run violates a
+                     high-tier SLO or exceeds the low-tier shed/brownout
+                     bounds, if an m=1000 controlled sim exceeds the
+                     scale_sweep wall-clock bound, or if the m=1000
+                     diurnal controller overhead exceeds EDIT_TARGET_MS
       --sim-floor N  exit non-zero if any sim ran below N events/s
 
 Writes a JSON row dump (default benchmarks/dynamic_sweep_results.json —
@@ -68,7 +79,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SIZES_FULL = (100, 1000)
 SIZES_QUICK = (100,)
-SCENARIOS = ("no_drift", "diurnal", "spike", "churn")
+SCENARIOS = ("no_drift", "diurnal", "spike", "churn", "overload")
+OVERLOAD_HI_EVERY = 4     # every 4th workload is priority 1 (high tier)
+OVERLOAD_PEAK_LO = 3.0    # low-tier diurnal peak ...
+OVERLOAD_PEAK_HI = 1.3    # ... high-tier peak: aggregate demand ~2x fleet
+                          # (the low tier drives the overload; the high
+                          # tier's gentle ramp is what the admission layer
+                          # must keep whole)
+OVERLOAD_SHED_CAP = 0.6   # --check: low-tier shed-rate must stay below
+OVERLOAD_BROWNOUT_FRAC = 1.0  # --check: max brownout depth / low-tier count
+OVERLOAD_RESERVE = 1.4    # high-tier capacity reservation factor at
+                          # provisioning time (> OVERLOAD_PEAK_HI): near
+                          # the r = 1.0 ceiling the planner's queueing
+                          # model understates rho -> 1 delay, so the
+                          # reservation must push ceiling placements into
+                          # configurations with real simulated headroom
 SIM_TARGET_S = 60.0      # same bound as scale_sweep's m=1000 full sim
 EDIT_TARGET_MS = 10000.0  # m=1000 diurnal controller overhead bound:
                           # ~13 s before PR 6 (ProbeCache + vectorized
@@ -91,7 +116,53 @@ def _make_trace(scenario: str, names, horizon_ms: float, seed: int):
     if scenario == "churn":
         return traces.random_churn(names, horizon_ms, depart_frac=0.1,
                                    arrive_frac=0.1, seed=seed), False
+    if scenario == "overload":
+        # Priority-split ramp: aggregate demand peaks at ~2x the capped
+        # fleet, but the high tier only ramps to OVERLOAD_PEAK_HI so the
+        # admission layer can keep it whole by degrading the low tier.
+        hi = [n for i, n in enumerate(names) if i % OVERLOAD_HI_EVERY == 0]
+        lo = [n for i, n in enumerate(names) if i % OVERLOAD_HI_EVERY != 0]
+        t_lo = traces.diurnal(lo, horizon_ms, peak=OVERLOAD_PEAK_LO)
+        t_hi = traces.diurnal(hi, horizon_ms, peak=OVERLOAD_PEAK_HI)
+        return traces.Trace(edges=t_lo.edges,
+                            scales={**t_lo.scales, **t_hi.scales}), False
     raise ValueError(f"unknown scenario {scenario!r}")
+
+
+def _overload_specs(specs):
+    """Same workloads with every OVERLOAD_HI_EVERY-th marked priority 1
+    (matching `_make_trace`'s tier split); the rest stay priority 0."""
+    import dataclasses
+    return [dataclasses.replace(s, priority=1)
+            if i % OVERLOAD_HI_EVERY == 0 else s
+            for i, s in enumerate(specs)]
+
+
+def _overload_plan(o_specs, profiles_by_hw, hardware, cfg):
+    """Provision the overload fleet with the high tier's rate inflated
+    by OVERLOAD_RESERVE (its capacity reservation — what a priority
+    tier buys), then rewrite the placements' spec rates back to the
+    true base rates so arrivals and controller targets see real
+    demand.  The fleet is then frozen at this size: the low tier's
+    ramp must be absorbed by admission control, and the gate checks it
+    never steals the high tier's reserved headroom (zero whole-run p99
+    violations there).  The fleet is pinned to the FIRST (commodity)
+    hardware tier: a roomier accelerator would leave enough slack that
+    the cap never binds and the scenario measures nothing."""
+    import dataclasses
+    from repro.core import provisioner as prov
+    prov_specs = [dataclasses.replace(s, rate_rps=s.rate_rps
+                                      * OVERLOAD_RESERVE)
+                  if s.priority > 0 else s for s in o_specs]
+    plan, hw = prov.provision_cheapest(prov_specs, profiles_by_hw,
+                                       hardware[:1],
+                                       config=cfg.replace(replicate=True))
+    placements = [
+        dataclasses.replace(p, workload=dataclasses.replace(
+            p.workload, rate_rps=p.workload.rate_rps / OVERLOAD_RESERVE))
+        if p.workload.priority > 0 else p
+        for p in plan.placements]
+    return dataclasses.replace(plan, placements=placements), hw
 
 
 def _scaled_specs(specs, tr, horizon_ms):
@@ -119,7 +190,7 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
     from repro.core import provisioner as prov
     from repro.core.experiments import fitted_context
     from repro.core.types import PlannerConfig
-    from repro.serving.controller import Controller
+    from repro.serving.controller import Controller, ControllerConfig
     from repro.serving.simulator import simulate_full
     from repro.serving.workload import models, synthetic_workloads
 
@@ -142,16 +213,37 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
         prov_wall = time.perf_counter() - t0
         profiles = profiles_by_hw[hw.name]
         for scenario in scenarios:
+            o_specs, o_plan, o_hw = specs, plan, hw
+            o_profiles, o_prov_wall, ctl_cfg = profiles, prov_wall, None
+            if scenario == "overload":
+                # Re-provision with priority annotations, then FREEZE the
+                # fleet at the provisioned size: the controller may not
+                # buy its way out of the 2x ramp.
+                o_specs = _overload_specs(specs)
+                t0 = time.perf_counter()
+                o_plan, o_hw = _overload_plan(o_specs, profiles_by_hw,
+                                              hardware, cfg)
+                o_prov_wall = time.perf_counter() - t0
+                o_profiles = profiles_by_hw[o_hw.name]
+                # aggressive resize headroom: under overload the
+                # controller should ask EARLY for the capacity it must
+                # claw back from the low tier (demand never exceeds the
+                # high tier's reservation, so a refused edit is safe)
+                ctl_cfg = ControllerConfig(max_devices=o_plan.n_gpus,
+                                           headroom=0.35)
             tr, poisson = _make_trace(scenario, names, horizon_ms, seed)
             t0 = time.perf_counter()
-            res_s = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
+            res_s = simulate_full(o_plan, mods, o_hw,
+                                  duration_s=sim_duration_s,
                                   seed=seed, poisson=poisson, trace=tr,
                                   backend=backend)
             static_wall = time.perf_counter() - t0
-            ctl = Controller(plan, profiles, hw,
-                             config=cfg.replace(batch="joint"))
+            ctl = Controller(o_plan, o_profiles, o_hw,
+                             config=cfg.replace(batch="joint"),
+                             cfg=ctl_cfg)
             t0 = time.perf_counter()
-            res_c = simulate_full(plan, mods, hw, duration_s=sim_duration_s,
+            res_c = simulate_full(o_plan, mods, o_hw,
+                                  duration_s=sim_duration_s,
                                   seed=seed, poisson=poisson, trace=tr,
                                   adjust_fn=ctl, adjust_scope="cluster",
                                   adjust_period_s=1.0, backend=backend)
@@ -161,16 +253,16 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
             row = {
                 "bench": "dynamic_sweep", "m": m, "scenario": scenario,
                 "backend": backend,
-                "hardware": hw.name, "n_devices": plan.n_gpus,
-                "provision_wall_s": round(prov_wall, 3),
-                "static_violations": len(_violations(res_s, specs, tr,
+                "hardware": o_hw.name, "n_devices": o_plan.n_gpus,
+                "provision_wall_s": round(o_prov_wall, 3),
+                "static_violations": len(_violations(res_s, o_specs, tr,
                                                      horizon_ms)),
-                "controlled_violations": len(_violations(res_c, specs, tr,
+                "controlled_violations": len(_violations(res_c, o_specs, tr,
                                                          horizon_ms)),
                 "static_violation_rate":
-                    round(_mean_violation_rate(res_s, specs), 4),
+                    round(_mean_violation_rate(res_s, o_specs), 4),
                 "controlled_violation_rate":
-                    round(_mean_violation_rate(res_c, specs), 4),
+                    round(_mean_violation_rate(res_c, o_specs), 4),
                 "n_reconfigs": int(res_c.stats["n_reconfigs"]),
                 "n_edits": len(ctl.edits),
                 "n_splits": sum(1 for e in ctl.edits
@@ -185,8 +277,8 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
                     round(res_c.stats["reconfig_latency_ms"], 1),
                 "probe_hits": ctl.reconciler.probes.hits,
                 "probe_misses": ctl.reconciler.probes.misses,
-                "plan_identical": ctl.plan is plan,
-                "static_cost_per_hour": round(plan.cost_per_hour(), 2),
+                "plan_identical": ctl.plan is o_plan,
+                "static_cost_per_hour": round(o_plan.cost_per_hour(), 2),
                 "final_cost_per_hour":
                     round(ctl.plan.cost_per_hour(), 2),
                 "mean_cost_per_hour": round(
@@ -197,6 +289,33 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
                 "sim_events_per_s": round(res_c.stats["events_per_s"]),
                 "sim_duration_s": sim_duration_s,
             }
+            if scenario == "overload":
+                viol = set(_violations(res_c, o_specs, tr, horizon_ms))
+                hi = {s.name for s in o_specs if s.priority > 0}
+                st = res_c.stats
+                row.update({
+                    "max_devices": o_plan.n_gpus,
+                    "hi_workloads": len(hi),
+                    "lo_workloads": len(o_specs) - len(hi),
+                    "hi_violations": len(viol & hi),
+                    "lo_violations": len(viol - hi),
+                    "shed_requests": int(st.get("shed_requests", 0)),
+                    "lo_shed_rate": round(st.get("class0_shed_rate",
+                                                 0.0), 4),
+                    "hi_shed_rate": round(st.get("class1_shed_rate",
+                                                 0.0), 4),
+                    "hi_violation_rate":
+                        round(st.get("class1_violation_rate", 0.0), 4),
+                    "brownout_depth_max":
+                        int(st.get("brownout_depth_max", 0)),
+                    "brownout_ticks": int(st.get("brownout_ticks", 0)),
+                    "admission_preemptions":
+                        int(st.get("admission_preemptions", 0)),
+                    "admission_shed_workloads":
+                        int(st.get("admission_shed_workloads", 0)),
+                    "admission_readmits":
+                        int(st.get("admission_readmits", 0)),
+                })
             rows.append(row)
             print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
     return rows
@@ -264,6 +383,21 @@ def main(argv=None) -> int:
                   f"{row['n_reconfigs']} reconfigs, plan_identical="
                   f"{row['plan_identical']})")
             if args.check and not noop:
+                status = 1
+        if row["scenario"] == "overload":
+            bo_cap = OVERLOAD_BROWNOUT_FRAC * row["lo_workloads"]
+            ok_hi = row["hi_violations"] == 0
+            ok_shed = row["lo_shed_rate"] <= OVERLOAD_SHED_CAP
+            ok_bo = row["brownout_depth_max"] <= bo_cap
+            print(f"# {tag}: overload gates hi_violations="
+                  f"{row['hi_violations']} (want 0), lo_shed_rate="
+                  f"{row['lo_shed_rate']:.3f} (cap {OVERLOAD_SHED_CAP}), "
+                  f"brownout_depth_max={row['brownout_depth_max']} "
+                  f"(cap {bo_cap:.0f}); {row['shed_requests']} shed, "
+                  f"{row['admission_preemptions']} preemptions, "
+                  f"{row['admission_readmits']} readmits "
+                  f"({'PASS' if ok_hi and ok_shed and ok_bo else 'FAIL'})")
+            if args.check and not (ok_hi and ok_shed and ok_bo):
                 status = 1
         if row["m"] == 1000:
             fast = row["controlled_sim_wall_s"] < SIM_TARGET_S

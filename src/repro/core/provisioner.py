@@ -52,6 +52,16 @@ class InfeasibleError(RuntimeError):
         self.per_hw: Dict[str, str] = dict(per_hw) if per_hw else {}
 
 
+class DeviceCapError(InfeasibleError):
+    """The ``max_devices`` fleet cap binds: the workload is physically
+    feasible but placing it would open a device beyond the budget.
+
+    Distinct from a Theorem-1 infeasibility — capacity exists in
+    principle, the fleet just may not grow — so the controller's
+    admission layer can react with shed / brownout / preemption instead
+    of reporting a physics error.  Always carries ``per_hw``."""
+
+
 # ---------------------------------------------------------------------------
 # Theorem 1
 # ---------------------------------------------------------------------------
@@ -430,10 +440,21 @@ def _prepare(specs: Sequence[WorkloadSpec],
     return prepared
 
 
+def _check_device_cap(used: int, max_devices: Optional[int], name: str,
+                      hw: HardwareSpec) -> None:
+    """Raise `DeviceCapError` when opening one more device would exceed
+    ``max_devices`` (None = uncapped, the historical behavior)."""
+    if max_devices is not None and used >= max_devices:
+        msg = (f"{name}: device cap {max_devices} reached on {hw.name} "
+               f"({used} devices in use); fleet may not grow")
+        raise DeviceCapError(msg, per_hw={hw.name: msg})
+
+
 def provision(specs: Sequence[WorkloadSpec],
               profiles: Dict[str, WorkloadCoefficients],
               hw: HardwareSpec, *,
               config: Optional[PlannerConfig] = None,
+              max_devices: Optional[int] = None,
               engine: Optional[str] = None,
               budget: Optional[BudgetLike] = None,
               batch: Optional[str] = None, replicate: Optional[bool] = None,
@@ -463,12 +484,18 @@ def provision(specs: Sequence[WorkloadSpec],
     equal-rate-share replicas (``w#0..w#k-1``, capped at ``k_max``)
     instead of clamping it to r = 1.0; a plan that never splits is
     bit-identical to ``replicate=False`` output.
+
+    ``max_devices`` caps the fleet: the line-14 fresh-device rule raises
+    `DeviceCapError` (with ``per_hw``) instead of silently opening a
+    device beyond the cap.  ``None`` (default) keeps the paper's
+    uncapped behavior bit-for-bit; a slack cap changes nothing.
     """
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch,
                          replicate=replicate, k_max=k_max)
     bm = resolve(cfg.budget)
     if cfg.engine == "vec":
-        return _provision_vec(specs, profiles, hw, cfg)
+        return _provision_vec(specs, profiles, hw, cfg,
+                              max_devices=max_devices)
     prepared = _prepare(specs, profiles, hw, budget=bm, batch=cfg.batch,
                         replicate=cfg.replicate, k_max=cfg.k_max)
 
@@ -489,6 +516,8 @@ def provision(specs: Sequence[WorkloadSpec],
                 best_q = q
                 best_alloc = r_a
         if best_q == -1:
+            _check_device_cap(sum(1 for d in devs if d.entries),
+                              max_devices, s.name, hw)
             devs.append(_Dev(                              # line 14
                 entries=[(s, c, b, self_grant(s, c, b, rl, hw, budget=bm))]))
         else:
@@ -522,7 +551,8 @@ def _argmin_inter(r_inter: "np.ndarray") -> int:
 def _provision_vec(specs: Sequence[WorkloadSpec],
                    profiles: Dict[str, WorkloadCoefficients],
                    hw: HardwareSpec,
-                   cfg: PlannerConfig) -> ProvisioningPlan:
+                   cfg: PlannerConfig, *,
+                   max_devices: Optional[int] = None) -> ProvisioningPlan:
     """Alg. 1 over the batched model: one `VecCluster.alloc_all` call
     scores every open device per placement, and the chosen device's
     invariants are refreshed incrementally."""
@@ -536,6 +566,8 @@ def _provision_vec(specs: Sequence[WorkloadSpec],
         feasible, rr, rn, r_inter = cl.alloc_all(s, c, b, rl)
         best_q = _argmin_inter(r_inter) if feasible.any() else -1
         if best_q == -1:
+            _check_device_cap(sum(1 for g in range(cl.d) if cl.entries[g]),
+                              max_devices, s.name, hw)
             q = cl.add_device()                                  # line 14
             cl.add_entry(q, s, c, b, self_grant(s, c, b, rl, hw, budget=bm))
         else:
@@ -602,7 +634,8 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  budget: Optional[BudgetLike] = None,
                  batch: Optional[str] = None,
                  exclude_gpus: Optional[frozenset] = None,
-                 pin: Optional[Tuple[int, float]] = None
+                 pin: Optional[Tuple[int, float]] = None,
+                 max_devices: Optional[int] = None
                  ) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
@@ -618,15 +651,26 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     Theorem 1 derivation — the health layer's capacity-preserving
     migration: a moved placement keeps the batch and at least the
     resource grant it was provisioned with, rather than whatever the
-    controller's drifted budget would re-derive."""
+    controller's drifted budget would re-derive.
+
+    ``max_devices`` caps the fleet like `provision`'s: the fresh-device
+    fallback raises `DeviceCapError` (with ``per_hw``) instead of
+    growing past the cap.  Every `InfeasibleError` raised here carries
+    ``per_hw`` diagnostics, so overload decisions and sweep logs can
+    report WHY a grant failed."""
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     bm = resolve(cfg.budget)
     c = profiles[spec.model]
     if pin is not None:
         b, rl = int(pin[0]), float(pin[1])
     else:
-        b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
-        rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+        try:
+            b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
+            rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+        except InfeasibleError as e:
+            if not e.per_hw:
+                e.per_hw = {hw.name: str(e)}
+            raise
 
     devs: Dict[int, _Dev] = {}
     for p in plan.placements:
@@ -662,6 +706,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 
     new_plan = ProvisioningPlan(hardware=plan.hardware or hw)
     if best_q == -1:
+        _check_device_cap(len(devs), max_devices, spec.name, hw)
         g_new = (max(devs) + 1) if devs else 0
         new_plan.placements = list(plan.placements) + [
             Placement(workload=spec, gpu=g_new,
@@ -709,17 +754,25 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                     config: Optional[PlannerConfig] = None,
                     engine: Optional[str] = None,
                     budget: Optional[BudgetLike] = None,
-                    batch: Optional[str] = None) -> ProvisioningPlan:
+                    batch: Optional[str] = None,
+                    max_devices: Optional[int] = None) -> ProvisioningPlan:
     """Re-place one workload under a NEW spec (arrival-rate / SLO drift):
     recompute Theorem 1 at the new rate, re-run Alg. 2 on its CURRENT
     device (the O(1-device) fast path — covers both growth, absorbing
     more interference, and shrink, releasing slack), and fall back to
-    `migrate_workload` when the current device can no longer host it."""
+    `migrate_workload` when the current device can no longer host it.
+    Raised `InfeasibleError`s carry ``per_hw`` diagnostics; the migrate
+    fallback honors ``max_devices``."""
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     bm = resolve(cfg.budget)
     c = profiles[spec.model]
-    b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
-    rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+    try:
+        b = appropriate_batch(spec, c, hw, budget=bm, batch=cfg.batch)
+        rl = resource_lower_bound(spec, c, hw, b, budget=bm)
+    except InfeasibleError as e:
+        if not e.per_hw:
+            e.per_hw = {hw.name: str(e)}
+        raise
 
     cur = next((p for p in plan.placements if p.workload.name == spec.name),
                None)
@@ -737,7 +790,8 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                          budget=bm)
     if r_a is None:
         return migrate_workload(plan, spec, profiles, hw,
-                                config=cfg.replace(budget=bm))
+                                config=cfg.replace(budget=bm),
+                                max_devices=max_devices)
 
     peer_r = dict(zip((p.workload.name for p in peers), r_a[:-1]))
     new_plan = ProvisioningPlan(hardware=plan.hardware)
@@ -762,15 +816,18 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                      engine: Optional[str] = None,
                      budget: Optional[BudgetLike] = None,
                      batch: Optional[str] = None,
-                     exclude_gpus: Optional[frozenset] = None
+                     exclude_gpus: Optional[frozenset] = None,
+                     max_devices: Optional[int] = None
                      ) -> ProvisioningPlan:
     """Move one workload to the minimum-interference device that can
     host its (possibly updated) spec — remove + `add_workload`, so the
     destination can also be a fresh device (`self_grant`).
-    ``exclude_gpus`` bans devices (health-layer quarantine)."""
+    ``exclude_gpus`` bans devices (health-layer quarantine);
+    ``max_devices`` caps the fresh-device fallback."""
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     return add_workload(remove_workload(plan, spec.name), spec, profiles,
-                        hw, config=cfg, exclude_gpus=exclude_gpus)
+                        hw, config=cfg, exclude_gpus=exclude_gpus,
+                        max_devices=max_devices)
 
 
 # ---------------------------------------------------------------------------
@@ -782,10 +839,13 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 def _set_replicas(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                   profiles: Dict[str, WorkloadCoefficients],
                   hw: HardwareSpec,
-                  cfg: PlannerConfig) -> ProvisioningPlan:
+                  cfg: PlannerConfig,
+                  max_devices: Optional[int] = None) -> ProvisioningPlan:
     """Remove every current replica of ``spec`` (a BASE spec: plain name,
     full workload rate), then `add_workload` each of the k new replicas
-    at its rate share — min-interference placement incl. fresh devices."""
+    at its rate share — min-interference placement incl. fresh devices
+    (capped by ``max_devices``; the input plan is never mutated, so a
+    mid-edit `DeviceCapError` leaves it intact)."""
     base = spec.name
     if replication.is_replica(base):
         raise ValueError(f"pass the BASE spec, not replica {base!r}")
@@ -796,7 +856,8 @@ def _set_replicas(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
     for p in cur:
         out = remove_workload(out, p.workload.name)
     for rs in replication.make_replicas(spec, k):
-        out = add_workload(out, rs, profiles, hw, config=cfg)
+        out = add_workload(out, rs, profiles, hw, config=cfg,
+                           max_devices=max_devices)
     return out
 
 
@@ -806,7 +867,8 @@ def split_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    config: Optional[PlannerConfig] = None,
                    engine: Optional[str] = None,
                    budget: Optional[BudgetLike] = None,
-                   batch: Optional[str] = None) -> ProvisioningPlan:
+                   batch: Optional[str] = None,
+                   max_devices: Optional[int] = None) -> ProvisioningPlan:
     """Scale-OUT edit: serve ``spec`` (base name, full rate) with k
     replicas, k strictly above the current count.  Each replica gets an
     equal rate share (summing to ``spec.rate_rps``), its own Theorem-1
@@ -817,7 +879,7 @@ def split_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
     if k <= k_cur:
         raise ValueError(f"{spec.name!r} already has {k_cur} replicas; "
                          f"split needs k > {k_cur}, got {k}")
-    return _set_replicas(plan, spec, k, profiles, hw, cfg)
+    return _set_replicas(plan, spec, k, profiles, hw, cfg, max_devices)
 
 
 def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
@@ -826,7 +888,8 @@ def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    config: Optional[PlannerConfig] = None,
                    engine: Optional[str] = None,
                    budget: Optional[BudgetLike] = None,
-                   batch: Optional[str] = None) -> ProvisioningPlan:
+                   batch: Optional[str] = None,
+                   max_devices: Optional[int] = None) -> ProvisioningPlan:
     """Scale-IN edit: drop to k replicas (k below the current count).
     Survivor shares renormalize to ``spec.rate_rps`` — the merged rate
     is re-split equally, never silently lost; ``k = 1`` returns the
@@ -837,7 +900,7 @@ def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
     if not 1 <= k < k_cur:
         raise ValueError(f"{spec.name!r} has {k_cur} replicas; "
                          f"merge needs 1 <= k < {k_cur}, got {k}")
-    return _set_replicas(plan, spec, k, profiles, hw, cfg)
+    return _set_replicas(plan, spec, k, profiles, hw, cfg, max_devices)
 
 
 # ---------------------------------------------------------------------------
@@ -848,6 +911,7 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
                        profiles_by_hw: Dict[str, Dict[str, WorkloadCoefficients]],
                        hardware: Sequence[HardwareSpec], *,
                        config: Optional[PlannerConfig] = None,
+                       max_devices=None,
                        engine: Optional[str] = None,
                        budget: Optional[BudgetLike] = None,
                        batch: Optional[str] = None,
@@ -855,6 +919,12 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
                        k_max: Optional[int] = None
                        ) -> Tuple[ProvisioningPlan, HardwareSpec]:
     """Run Alg. 1 per hardware type and pick the cheapest feasible plan.
+
+    ``max_devices`` caps each candidate fleet: an int applies the same
+    total cap to every hardware type; a ``{hw_name: cap}`` dict caps
+    per type (types absent from the dict stay uncapped).  A type whose
+    cap binds is infeasible FOR THAT TYPE and reported through the same
+    ``per_hw`` channel as a physics infeasibility.
 
     When EVERY type is infeasible, the raised `InfeasibleError` carries
     ``per_hw`` — hardware name -> the failing workload's error string —
@@ -864,8 +934,11 @@ def provision_cheapest(specs: Sequence[WorkloadSpec],
     best: Optional[Tuple[ProvisioningPlan, HardwareSpec]] = None
     errors: Dict[str, str] = {}
     for hw in hardware:
+        cap = (max_devices.get(hw.name)
+               if isinstance(max_devices, dict) else max_devices)
         try:
-            plan = provision(specs, profiles_by_hw[hw.name], hw, config=cfg)
+            plan = provision(specs, profiles_by_hw[hw.name], hw, config=cfg,
+                             max_devices=cap)
         except InfeasibleError as e:
             errors[hw.name] = str(e)
             continue

@@ -102,6 +102,26 @@ def group_rate(group: Sequence[WorkloadSpec]) -> float:
     return float(sum(s.rate_rps for s in group))
 
 
+def group_priority(group: Sequence[Placement]) -> int:
+    """Admission class of a replica group (all replicas inherit the base
+    spec's ``priority`` through `make_replicas`)."""
+    return int(group[0].workload.priority)
+
+
+def preemption_order(groups: Dict[str, List[Placement]]) -> List[str]:
+    """Deterministic victim order for the admission layer's preemption
+    (docs/control-plane.md, Overload): lowest priority class first, then
+    LARGEST device footprint (total granted r) — each shed frees the
+    most capacity per victim — then base name as the stable tie-break.
+    Both simulator engines and both reconciler paths must shed in this
+    exact order or controlled runs lose bit-identity.
+    """
+    def key(base: str):
+        g = groups[base]
+        return (group_priority(g), -sum(p.r for p in g), base)
+    return sorted(groups, key=key)
+
+
 def proportional_shares(total: float,
                         caps: Sequence[float]) -> Optional[List[float]]:
     """Rate shares proportional to per-replica serving capacity.

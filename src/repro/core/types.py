@@ -116,11 +116,19 @@ class WorkloadCoefficients:
 
 @dataclass(frozen=True)
 class WorkloadSpec:
-    """A DNN inference workload submitted to the iGniter portal."""
+    """A DNN inference workload submitted to the iGniter portal.
+
+    ``priority`` is the admission-control class (higher = more
+    important; default 0).  The paper's planner never says "no", so
+    priority is ignored by provisioning physics — it only orders the
+    controller's queue-or-shed / brownout / preemption decisions when a
+    device cap binds (docs/control-plane.md, Overload section).
+    """
     name: str                 # e.g. "W3"
     model: str                # model key (profile lookup)
     slo_ms: float             # T_slo
     rate_rps: float           # R (request arrival rate == target throughput)
+    priority: int = 0         # admission class (higher wins under a cap)
 
 
 @dataclass

@@ -155,14 +155,41 @@ class ControllerConfig:
                                  # fitted utilization near 1 can be a
                                  # TRUE utilization past 1
     health_readmit_s: float = 30.0
-                                 # quarantine probation: after this long the
-                                 # device is allowed to host placements
-                                 # again (re-detection re-quarantines it —
-                                 # time-based probation, not a health probe)
+                                 # quarantine probation length: at expiry
+                                 # the device is PROBED (an active canary
+                                 # measures its CURRENT residual) and
+                                 # readmitted only when it probes clean —
+                                 # a still-straggling device fails the
+                                 # probe and its probation restarts, so a
+                                 # permanent straggler stays quarantined
+                                 # forever.  Without a canary attached the
+                                 # legacy timer readmission applies.
     k_max: int = prov.K_MAX      # replica ceiling for scale-out (a drifted
                                  # workload infeasible even solo at r=1.0
                                  # is split into <= k_max rate-share
                                  # replicas; 1 disables replication)
+    # -- overload / admission layer (device cap + priority classes) --
+    max_devices: Optional[int] = None
+                                 # fleet cap for the reconciler's plan
+                                 # edits: None = the historical uncapped
+                                 # behavior; an int routes any edit that
+                                 # would open device max_devices + 1
+                                 # through the admission layer
+                                 # (preemption -> brownout -> queue-or-
+                                 # shed, docs/control-plane.md Overload)
+    brownout_mult: float = 1.5   # working-SLO multiplier tried before a
+                                 # cap-refused grant is queued or shed: a
+                                 # looser SLO shrinks the resource demand.
+                                 # Targets keep the TRUE SLO (recovery is
+                                 # retried on every later breach) and
+                                 # per-class violation stats measure
+                                 # against the creation-time ``slo0``, so
+                                 # a brownout cannot hide violations
+    readmit_backoff_s: float = 5.0
+                                 # shed-workload readmission retry gap:
+                                 # each failed re-admission attempt backs
+                                 # off this long before probing the cap
+                                 # again
     planner: Optional[PlannerConfig] = None
                                  # planner knobs (backend/engine/budget/
                                  # batch/k_max) for the reconciler's plan
@@ -308,8 +335,14 @@ class HealthMonitor:
       and cannot cancel.  Needs >= 2 reporting devices (a lone device IS
       the fleet median).  Predictions are memoized per composition.
 
-    Quarantined devices are skipped by detection and re-admitted after
-    `health_readmit_s` (probation — re-detection re-quarantines).
+    Quarantined devices are skipped by detection; at probation expiry
+    (`health_readmit_s`) the device is PROBED — ``observe``'s ``canary``
+    callable measures its current residual — and readmitted only when
+    the probe comes back clean (residual <= `health_straggler_factor`).
+    A failed probe restarts probation, so a PERMANENT straggler is never
+    readmitted; without a canary the legacy timer readmission applies
+    (re-detection then has to re-trip, repeating the outage — the bug
+    the probe fixes).
     """
 
     def __init__(self, profiles: Dict[str, WorkloadCoefficients],
@@ -343,7 +376,8 @@ class HealthMonitor:
         return t
 
     def observe(self, now_s: float,
-                instances: List[ServedInstance]) -> HealthReport:
+                instances: List[ServedInstance],
+                canary=None) -> HealthReport:
         cfg = self.cfg
         by_gpu: Dict[int, List[int]] = {}
         for i, inst in enumerate(instances):
@@ -458,8 +492,22 @@ class HealthMonitor:
             self._completed[i] = inst.completed
             self._seen[i] = len(inst.latencies)
             self._gpu[i] = inst.gpu
-        readmit = sorted(g for g, (_, t0) in self.quarantined.items()
-                         if now_s - t0 >= cfg.health_readmit_s)
+        readmit: List[int] = []
+        for g in sorted(self.quarantined):
+            kind, t0 = self.quarantined[g]
+            if now_s - t0 < cfg.health_readmit_s:
+                continue
+            if canary is not None:
+                # active probe, not a timer: readmit only when the device
+                # measures clean RIGHT NOW.  A still-down device probes
+                # at infinity, a permanent straggler at its multiplier —
+                # both fail and restart probation, so they never re-ingest
+                # placements just to re-trip detection.
+                if not (canary(g, now_s * 1000.0)
+                        <= cfg.health_straggler_factor):
+                    self.quarantined[g] = (kind, now_s)
+                    continue
+            readmit.append(g)
         return HealthReport(dead=dead, stragglers=strag, readmit=readmit)
 
 
@@ -489,9 +537,11 @@ class PlanState:
                  profiles: Dict[str, WorkloadCoefficients],
                  hw: HardwareSpec, budget: BudgetLike = QUEUEING,
                  backend: str = "numpy",
-                 probes: Optional[prov.ProbeCache] = None):
+                 probes: Optional[prov.ProbeCache] = None,
+                 max_devices: Optional[int] = None):
         self.hw = hw
         self.profiles = profiles
+        self.max_devices = max_devices
         self.hardware = plan.hardware or hw
         self.probes = probes
         self.cl = pmv.VecCluster(hw, budget=budget, backend=backend)
@@ -537,8 +587,24 @@ class PlanState:
                                dtype=bool, count=len(self.row_gpus))
             feasible = feasible & ~mask
             r_inter = np.where(mask, np.inf, r_inter)
+        if self.max_devices is not None:
+            used = sum(1 for q in range(cl.d) if cl.entries[q])
+            if used >= self.max_devices:
+                # cap reached: an EMPTY row is one more device in use
+                # the moment anything lands on it, so mask empty rows
+                # from the sweep along with refusing the fresh fallback
+                empty = np.fromiter((not cl.entries[q]
+                                     for q in range(cl.d)),
+                                    dtype=bool, count=cl.d)
+                if empty.any():
+                    feasible = feasible & ~empty
+                    r_inter = np.where(empty, np.inf, r_inter)
         row = prov._argmin_inter(r_inter) if feasible.any() else -1
         if row == -1:
+            if self.max_devices is not None:
+                prov._check_device_cap(
+                    sum(1 for q in range(cl.d) if cl.entries[q]),
+                    self.max_devices, spec.name, self.hw)
             row = cl.add_device()
             self.row_gpus.append(self._next_gpu)
             self._next_gpu += 1
@@ -623,6 +689,10 @@ class PlanEdit:
     action: str        # "resize" | "remove" | "add" | "split" | "merge"
                        # | "infeasible" | "migrate" (health eviction)
                        # | "readmit" (workload = "device:<gpu>")
+                       # | admission layer: "preempt" / "shed" (victim /
+                       #   self parked under the cap), "admit" (shed
+                       #   workload re-placed), "capped" (growth refused,
+                       #   demand queues at the old allocation)
     workload: str      # BASE workload name (replicas are one workload)
     rate_from: float
     rate_to: float
@@ -695,6 +765,20 @@ class Reconciler:
         # (every edit path — evictions AND ordinary drift edits — avoids
         # them until readmission)
         self.quarantined: set = set()
+        # admission layer (docs/control-plane.md, Overload): workloads
+        # shed under the device cap, keyed by BASE name and holding the
+        # TRUE target spec.  A shed workload's arrival stream stays
+        # visible to its estimator (the simulator drops requests at the
+        # instance, not the stream), so its silence on the SERVED side
+        # is policy — never a departure — and readmission resumes from
+        # live priors instead of re-bootstrapping from zero.
+        self.max_devices = self.cfg.max_devices
+        self.shed: Dict[str, WorkloadSpec] = {}
+        self.brownout: Dict[str, float] = {}     # base -> working mult
+        self._readmit_at: Dict[str, float] = {}  # base -> next retry t_s
+        self.admission_log: List[tuple] = []     # (t_s, event, detail)
+        self._adm = {"preempt": 0, "shed": 0, "readmit": 0, "capped": 0,
+                     "brownout_ticks": 0, "brownout_max": 0}
 
     # -- drift detection ----------------------------------------------------
 
@@ -739,7 +823,8 @@ class Reconciler:
         return ""
 
     def _orig_rate(self, name: str) -> float:
-        spec = self.targets.get(name) or self.departed.get(name)
+        spec = (self.targets.get(name) or self.departed.get(name)
+                or self.shed.get(name))
         return max(spec.rate_rps, 1e-9) if spec is not None else 1e-9
 
     def _cluster_cv2(self, estimators: Dict[str, ArrivalEstimator]) -> float:
@@ -771,6 +856,11 @@ class Reconciler:
                 "burst": cfg.debounce_burst}
         pending: List[str] = []
         for name, est in estimators.items():
+            if name in self.shed:
+                # admission-layer shed: the workload's silence on the
+                # served side is POLICY, not drift or departure — the
+                # readmission pass below owns its lifecycle
+                continue
             kind = self._drift_kind(name, est)
             prev_kind, prev_n = self._breach.get(name, ("", 0))
             # kind-aware debounce: consecutive same-kind breaches;
@@ -783,25 +873,40 @@ class Reconciler:
                          or (kind == "down"
                              and self._departed_now(name, est))):
                 pending.append(name)
-        if not pending:
-            return False
-
-        if self.base_bm.mode == "queueing":
-            # online burstiness, FLOORED at the provisioned model's: a
-            # deterministic trace's cv2 ~ 0 must not loosen budgets mid-
-            # drift (tail slack is what absorbs the transition), while a
-            # spike train's cv2 >> 1 tightens them
-            self.bm = self.base_bm.with_burstiness(
-                max(self._cluster_cv2(estimators),
-                    self.base_bm.burstiness))
-        self._ensure_state()
         changed = False
-        backlog = backlog or {}
-        for name in pending:
-            est = estimators[name]
-            changed |= self._apply(now_s, name, est,
-                                   backlog.get(name, 0.0))
-            self._breach[name] = ("", 0)
+        if pending or self.shed:
+            if pending and self.base_bm.mode == "queueing":
+                # online burstiness, FLOORED at the provisioned model's:
+                # a deterministic trace's cv2 ~ 0 must not loosen budgets
+                # mid-drift (tail slack is what absorbs the transition),
+                # while a spike train's cv2 >> 1 tightens them
+                self.bm = self.base_bm.with_burstiness(
+                    max(self._cluster_cv2(estimators),
+                        self.base_bm.burstiness))
+            self._ensure_state()
+            if self.shed:
+                changed |= self._readmit_shed(now_s, estimators)
+            backlog = backlog or {}
+            for name in pending:
+                if name in self.shed:
+                    # preempted by an EARLIER edit this same tick (its
+                    # drift breach predates the preemption decision)
+                    self._breach[name] = ("", 0)
+                    continue
+                est = estimators[name]
+                changed |= self._apply(now_s, name, est,
+                                       backlog.get(name, 0.0))
+                self._breach[name] = ("", 0)
+        # per-tick brownout depth record (admission telemetry): only
+        # while the admission layer is active, so a cap-slack run's log
+        # stays empty and its output byte-identical to pre-overload
+        depth = len(self.brownout)
+        if depth or self.shed:
+            self.admission_log.append((now_s, "tick", depth))
+        if depth:
+            self._adm["brownout_ticks"] += 1
+            self._adm["brownout_max"] = max(self._adm["brownout_max"],
+                                            depth)
         if changed and self._state is not None:
             self.plan = self._state.to_plan()
         return changed
@@ -815,7 +920,8 @@ class Reconciler:
             self._state = PlanState(self.plan, self.profiles, self.hw,
                                     budget=self.bm,
                                     backend=self.planner.backend,
-                                    probes=self.probes)
+                                    probes=self.probes,
+                                    max_devices=self.max_devices)
             self._state_bm = self.bm
             self._state.banned = set(self.quarantined)
         elif self.bm != self._state_bm:
@@ -899,29 +1005,41 @@ class Reconciler:
                                 max(k_cur + 1,
                                     math.ceil(k_cur * util
                                               / cfg.health_drain_util)))
-            if k_new > k_cur:
-                total = replication.group_rate(
-                    [p.workload for p in group])
-                proto = dataclasses.replace(
-                    by_base[base][0].workload, name=base, rate_rps=total)
-                reps = replication.make_replicas(proto, k_new)
-                # pin every replica at the group's planned capacity
-                # point (heaviest member's batch and grant): per-replica
-                # serving capacity is preserved while the rate share
-                # drops 1/k — that gap IS the drain headroom.  A
-                # re-derived Theorem 1 placement at the share rate would
-                # hand back a minimum-capacity allocation instead, and
-                # minimum capacity is exactly what cannot drain.
-                pin = max(((p.batch, p.r) for p in group),
-                          key=lambda t: (t[0], t[1]))
-                for p in group:
-                    self._remove_name(p.workload.name)
-                for rs in reps:
-                    self._add_spec(rs, pin=pin)
-            else:
-                for p in by_base[base]:
-                    self._remove_name(p.workload.name)
-                    self._add_spec(p.workload, pin=(p.batch, p.r))
+            plan0 = self._checkpoint()
+            try:
+                if k_new > k_cur:
+                    total = replication.group_rate(
+                        [p.workload for p in group])
+                    proto = dataclasses.replace(
+                        by_base[base][0].workload, name=base,
+                        rate_rps=total)
+                    reps = replication.make_replicas(proto, k_new)
+                    # pin every replica at the group's planned capacity
+                    # point (heaviest member's batch and grant): per-
+                    # replica serving capacity is preserved while the
+                    # rate share drops 1/k — that gap IS the drain
+                    # headroom.  A re-derived Theorem 1 placement at the
+                    # share rate would hand back a minimum-capacity
+                    # allocation instead, and minimum capacity is
+                    # exactly what cannot drain.
+                    pin = max(((p.batch, p.r) for p in group),
+                              key=lambda t: (t[0], t[1]))
+                    for p in group:
+                        self._remove_name(p.workload.name)
+                    for rs in reps:
+                        self._add_spec(rs, pin=pin)
+                else:
+                    for p in by_base[base]:
+                        self._remove_name(p.workload.name)
+                        self._add_spec(p.workload, pin=(p.batch, p.r))
+            except prov.DeviceCapError:
+                # the cap refuses the re-home: leave the victim on the
+                # quarantined device (honest degraded state) rather
+                # than half-moving its group
+                self._restore(plan0)
+                self._adm["capped"] += 1
+                self.admission_log.append((now_s, "capped", base))
+                continue
             self.edits.append(PlanEdit(
                 now_s, "migrate", base, rate, rate,
                 self.bm.burstiness, k_new))
@@ -963,7 +1081,7 @@ class Reconciler:
                 self.plan, spec, self.profiles, self.hw,
                 config=self.planner.replace(budget=self.bm),
                 exclude_gpus=frozenset(self.quarantined) or None,
-                pin=pin)
+                pin=pin, max_devices=self.max_devices)
 
     def _resize_spec(self, spec: WorkloadSpec) -> None:
         if self._state is not None:
@@ -971,7 +1089,8 @@ class Reconciler:
         else:
             self.plan = prov.resize_workload(
                 self.plan, spec, self.profiles, self.hw,
-                config=self.planner.replace(budget=self.bm))
+                config=self.planner.replace(budget=self.bm),
+                max_devices=self.max_devices)
 
     def _validate(self, reps: List[WorkloadSpec],
                   c: WorkloadCoefficients) -> bool:
@@ -1030,47 +1149,17 @@ class Reconciler:
                                                self.bm, self.batch,
                                                k_max=self.k_max) \
             if self.k_max > 1 else 1
+        updrift = est.projected_rps > plan_rate
         try:
-            if cur is None:               # re-arrival of a departed workload
-                reps = replication.make_replicas(new_spec, k_need or 1)
-                if len(reps) > 1 and not self._validate(reps, c):
-                    raise prov.InfeasibleError(name)
-                for rs in reps:
-                    self._add_spec(rs)
-                del self.departed[name]
-                action, k_new = "add", len(reps)
-            else:
-                if k_need is None:
-                    k_new = max(k_cur, 1)    # hopeless: keep membership
-                elif est.projected_rps > plan_rate:
-                    k_new = max(k_cur, k_need)
-                else:
-                    k_new = k_need
-                k_new = max(1, min(k_new, self.k_max))
-                reps = replication.make_replicas(new_spec, k_new)
-                same = [r.name for r in reps] == [p.workload.name
-                                                  for p in group]
-                # pre-flight anything non-atomic: a membership change
-                # mutates the plan across several remove/add calls, and
-                # a multi-replica resize across several resize calls —
-                # a mid-loop raise would leave the group half-edited
-                # (a single same-name resize raises before mutating)
-                if (not same or len(reps) > 1) \
-                        and not self._validate(reps, c):
-                    raise prov.InfeasibleError(name)
-                if same:
-                    # same membership: per-replica same-device resize
-                    for rs in reps:
-                        self._resize_spec(rs)
-                    action = "resize"
-                else:
-                    # membership changes: re-place the whole group (the
-                    # removed rate shares renormalize over the new k)
-                    for p in group:
-                        self._remove_name(p.workload.name)
-                    for rs in reps:
-                        self._add_spec(rs)
-                    action = "split" if k_new > k_cur else "merge"
+            action, k_new = self._edit(name, new_spec, c, k_need,
+                                       cur, group, k_cur, updrift)
+        except prov.DeviceCapError:
+            # the fleet cap — not physics — refused the edit: route the
+            # demand through the admission layer (preempt -> brownout ->
+            # queue-or-shed) instead of reporting it infeasible
+            return self._overloaded(now_s, name, new_spec, c, k_need,
+                                    cur, group, k_cur, updrift,
+                                    plan_rate)
         except prov.InfeasibleError:
             # beyond any feasible allocation even split k_max ways:
             # keep the current placement, report honestly via the edits
@@ -1078,10 +1167,261 @@ class Reconciler:
                                        plan_rate, new_rate,
                                        self.bm.burstiness, k_cur))
             return False
-        self.targets[name] = new_spec
+        self.brownout.pop(name, None)    # a true-SLO edit landed:
+        self.targets[name] = new_spec    # the brownout has recovered
         self.edits.append(PlanEdit(now_s, action, name, plan_rate,
                                    new_rate, self.bm.burstiness, k_new))
         return True
+
+    # -- transactional edit application -------------------------------------
+
+    def _checkpoint(self) -> ProvisioningPlan:
+        """Materialized recovery point for a multi-op edit sequence: the
+        device cap can fire MID-sequence (the Theorem-1 pre-flight cannot
+        see placement-time cap pressure), and both engine paths must roll
+        back to exactly this plan."""
+        return self._state.to_plan() if self._state is not None \
+            else self.plan
+
+    def _restore(self, plan0: ProvisioningPlan) -> None:
+        """Roll back to ``plan0``.  The scalar path re-adopts it directly
+        (the provisioner ops are plan-in/plan-out); the vec mirror is
+        discarded and rebuilt from it — the rebuild's gpu-sorted row
+        order matches what the incremental history produced, so every
+        subsequent allocation stays identical to the scalar oracle's."""
+        self.plan = plan0
+        if self._state is not None:
+            self._state = None
+            self._ensure_state()
+
+    def _edit(self, name: str, new_spec: WorkloadSpec,
+              c: WorkloadCoefficients, k_need: Optional[int],
+              cur: Optional[WorkloadSpec], group: List[Placement],
+              k_cur: int, updrift: bool) -> tuple:
+        """Apply one workload's plan edit atomically; returns
+        ``(action, k_new)`` or raises (`DeviceCapError` /
+        `InfeasibleError`) with the plan rolled back to its pre-edit
+        state."""
+        if cur is None:               # re-arrival of a departed workload
+            reps = replication.make_replicas(new_spec, k_need or 1)
+            if len(reps) > 1 and not self._validate(reps, c):
+                raise prov.InfeasibleError(name)
+            plan0 = self._checkpoint()
+            try:
+                for rs in reps:
+                    self._add_spec(rs)
+            except prov.InfeasibleError:
+                self._restore(plan0)
+                raise
+            del self.departed[name]
+            return "add", len(reps)
+        if k_need is None:
+            k_new = max(k_cur, 1)        # hopeless: keep membership
+        elif updrift:
+            k_new = max(k_cur, k_need)
+        else:
+            k_new = k_need
+        k_new = max(1, min(k_new, self.k_max))
+        reps = replication.make_replicas(new_spec, k_new)
+        same = [r.name for r in reps] == [p.workload.name
+                                          for p in group]
+        # pre-flight anything non-atomic: a membership change mutates
+        # the plan across several remove/add calls, and a multi-replica
+        # resize across several resize calls — a mid-loop physics raise
+        # would leave the group half-edited (the checkpoint additionally
+        # covers cap errors, which no pre-flight can rule out)
+        if (not same or len(reps) > 1) and not self._validate(reps, c):
+            raise prov.InfeasibleError(name)
+        plan0 = self._checkpoint()
+        try:
+            if same:
+                # same membership: per-replica same-device resize
+                for rs in reps:
+                    self._resize_spec(rs)
+                return "resize", k_new
+            # membership changes: re-place the whole group (the
+            # removed rate shares renormalize over the new k)
+            for p in group:
+                self._remove_name(p.workload.name)
+            for rs in reps:
+                self._add_spec(rs)
+            return ("split" if k_new > k_cur else "merge"), k_new
+        except prov.InfeasibleError:
+            self._restore(plan0)
+            raise
+
+    # -- admission layer (device cap: preempt / brownout / shed) ------------
+
+    def _shed_base(self, now_s: float, base: str, action: str) -> None:
+        """Park one base workload under the cap: its placements leave
+        the plan (freeing allocation), its target moves to ``shed``, and
+        `Controller._apply_plan` marks its instances shed so the
+        simulator drops (and counts) their requests."""
+        for p in self._group(base):
+            self._remove_name(p.workload.name)
+        spec = self.targets.pop(base)
+        self.shed[base] = spec
+        self._readmit_at[base] = now_s + self.cfg.readmit_backoff_s
+        self.brownout.pop(base, None)
+        self._adm["preempt" if action == "preempt" else "shed"] += 1
+        self.admission_log.append((now_s, action, base))
+        self.edits.append(PlanEdit(now_s, action, base, spec.rate_rps,
+                                   0.0, self.bm.burstiness, 0))
+
+    def _overloaded(self, now_s: float, name: str,
+                    new_spec: WorkloadSpec, c: WorkloadCoefficients,
+                    k_need: Optional[int], cur: Optional[WorkloadSpec],
+                    group: List[Placement], k_cur: int, updrift: bool,
+                    plan_rate: float) -> bool:
+        """The device cap refused ``name``'s edit.  In order: preempt
+        strictly-lower-priority groups (worst footprint first, the
+        `replication.preemption_order`), then retry under a brownout
+        (loosened WORKING SLO shrinks the demand), then queue-or-shed.
+        Every decision lands in ``admission_log`` and ``edits``."""
+        cfg = self.cfg
+        pr = int(new_spec.priority)
+        # 1) preemption: shed cheaper classes until the grant fits or
+        # victims run out (the order is priority-ascending, so the first
+        # victim at or above our class ends the hunt)
+        groups = replication.group_placements(self.plan.placements)
+        for victim in replication.preemption_order(groups):
+            if victim == name or victim not in self.targets:
+                continue
+            if replication.group_priority(groups[victim]) >= pr:
+                break
+            self._shed_base(now_s, victim, "preempt")
+            try:
+                action, k_new = self._edit(name, new_spec, c, k_need,
+                                           cur, group, k_cur, updrift)
+            except prov.DeviceCapError:
+                continue              # freed too little: next victim
+            except prov.InfeasibleError:
+                break                 # physics says no: stop shedding
+            self.brownout.pop(name, None)
+            self.targets[name] = new_spec
+            self.edits.append(PlanEdit(now_s, action, name, plan_rate,
+                                       new_spec.rate_rps,
+                                       self.bm.burstiness, k_new))
+            return True
+        # 2) brownout: retry with a loosened WORKING SLO.  The target
+        # keeps the true SLO — every later breach retries recovery, and
+        # per-class accounting measures against ``slo0`` — so this only
+        # changes what the planner is asked for, never what is reported.
+        if cfg.brownout_mult > 1.0:
+            loose = dataclasses.replace(
+                new_spec, slo_ms=new_spec.slo_ms * cfg.brownout_mult)
+            k_loose = self.probes.required_replicas(
+                loose, c, self.hw, self.bm, self.batch,
+                k_max=self.k_max) if self.k_max > 1 else 1
+            try:
+                action, k_new = self._edit(name, loose, c, k_loose,
+                                           cur, group, k_cur, updrift)
+            except prov.InfeasibleError:
+                action = ""
+            if action:
+                self.brownout[name] = cfg.brownout_mult
+                self.targets[name] = new_spec
+                self.admission_log.append((now_s, "brownout", name))
+                self.edits.append(PlanEdit(now_s, action, name,
+                                           plan_rate, new_spec.rate_rps,
+                                           self.bm.burstiness, k_new))
+                return True
+        # 3) queue-or-shed: a workload still holding capacity KEEPS it
+        # and queues (the cap refused growth, not service); a re-arrival
+        # with nothing placed is shed outright until capacity frees
+        self._adm["capped"] += 1
+        self.admission_log.append((now_s, "capped", name))
+        if cur is not None:
+            self.edits.append(PlanEdit(now_s, "capped", name, plan_rate,
+                                       new_spec.rate_rps,
+                                       self.bm.burstiness, k_cur))
+            return False
+        del self.departed[name]
+        self.shed[name] = dataclasses.replace(new_spec,
+                                              rate_rps=plan_rate
+                                              if plan_rate > 0.0
+                                              else new_spec.rate_rps)
+        self._readmit_at[name] = now_s + cfg.readmit_backoff_s
+        self._adm["shed"] += 1
+        self.edits.append(PlanEdit(now_s, "shed", name, 0.0,
+                                   new_spec.rate_rps,
+                                   self.bm.burstiness, 0))
+        return True
+
+    def _readmit_shed(self, now_s: float,
+                      estimators: Dict[str, "ArrivalEstimator"]) -> bool:
+        """Per-tick readmission pass, highest priority first.  A shed
+        workload whose demand ACTUALLY left (the estimator still sees
+        its arrival stream) moves to the ordinary departure book; the
+        rest retry placement under the cap with exponential-free backoff
+        (`readmit_backoff_s`), resuming from live estimator priors."""
+        changed = False
+        for base in sorted(self.shed,
+                           key=lambda b: (-self.shed[b].priority, b)):
+            est = estimators.get(base)
+            if est is not None and self._departed_now(base, est):
+                self.departed[base] = self.shed.pop(base)
+                self._readmit_at.pop(base, None)
+                self.admission_log.append((now_s, "shed-departed", base))
+                self.edits.append(PlanEdit(now_s, "remove", base, 0.0,
+                                           0.0, self.bm.burstiness, 0))
+                continue
+            if now_s < self._readmit_at.get(base, 0.0):
+                continue
+            spec0 = self.shed[base]
+            rate = spec0.rate_rps
+            if est is not None and est.ever_active:
+                rate = max(est.rate_rps, est.projected_rps)
+            trial = dataclasses.replace(spec0, rate_rps=rate)
+            c = self.profiles[spec0.model]
+            k = self.probes.required_replicas(trial, c, self.hw, self.bm,
+                                              self.batch,
+                                              k_max=self.k_max) \
+                if self.k_max > 1 else 1
+            try:
+                reps = replication.make_replicas(trial, k or 1)
+                if not self._validate(reps, c):
+                    raise prov.InfeasibleError(base)
+                plan0 = self._checkpoint()
+                try:
+                    for rs in reps:
+                        self._add_spec(rs)
+                except prov.InfeasibleError:
+                    self._restore(plan0)
+                    raise
+            except prov.InfeasibleError:
+                # still capped (or still infeasible): back off and retry
+                self._readmit_at[base] = now_s \
+                    + self.cfg.readmit_backoff_s
+                continue
+            del self.shed[base]
+            self._readmit_at.pop(base, None)
+            self.targets[base] = trial
+            self._adm["readmit"] += 1
+            self.admission_log.append((now_s, "readmit", base))
+            self.edits.append(PlanEdit(now_s, "admit", base, 0.0, rate,
+                                       self.bm.burstiness, len(reps)))
+            changed = True
+        return changed
+
+    def overload_stats(self) -> Dict[str, float]:
+        """Admission-layer counters for `SimResult.stats` — EMPTY until
+        the first admission decision, which is what keeps a cap-slack
+        run's stats byte-identical to the pre-overload build."""
+        a = self._adm
+        if not (a["preempt"] or a["shed"] or a["readmit"] or a["capped"]
+                or a["brownout_ticks"]):
+            return {}
+        return {
+            "overload_active": 1.0,
+            "admission_preemptions": float(a["preempt"]),
+            "admission_shed_workloads": float(a["shed"]),
+            "admission_readmits": float(a["readmit"]),
+            "admission_capped_edits": float(a["capped"]),
+            "brownout_ticks": float(a["brownout_ticks"]),
+            "brownout_depth_max": float(a["brownout_max"]),
+            "shed_workloads_final": float(len(self.shed)),
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -1128,6 +1468,7 @@ class Controller:
                 plan.placements).items()}
         self.health = (HealthMonitor(profiles, hw, self.cfg)
                        if self.cfg.health else None)
+        self._canary = None
         self._last_s = 0.0
         self.n_ticks = 0
         # (t_s, $/h) after each tick: the cost the reconciled plan would
@@ -1142,6 +1483,19 @@ class Controller:
     @property
     def edits(self) -> List[PlanEdit]:
         return self.reconciler.edits
+
+    def attach_canary(self, canary) -> None:
+        """Simulator-installed health probe: ``canary(gpu, now_ms)``
+        returns the device's CURRENT residual multiplier (``inf`` while
+        down, 1.0 clean).  Consumed only at probation expiry — a real
+        canary pass on an otherwise-empty device — so detection stays
+        telemetry-driven while readmission becomes an active probe."""
+        self._canary = canary
+
+    def overload_stats(self) -> Dict[str, float]:
+        """Admission-layer counters the simulator merges into
+        `SimResult.stats`; empty until the first admission decision."""
+        return self.reconciler.overload_stats()
 
     def __call__(self, now_s: float,
                  instances: List[ServedInstance]) -> None:
@@ -1183,7 +1537,8 @@ class Controller:
             backlog[base] = float(sum(len(i.queue) for i in insts_b))
         changed = False
         if self.health is not None:
-            rep = self.health.observe(now_s, instances)
+            rep = self.health.observe(now_s, instances,
+                                      canary=self._canary)
             if rep.readmit:
                 for g in rep.readmit:
                     self.health.quarantined.pop(g, None)
@@ -1232,10 +1587,20 @@ class Controller:
                 inst.r = p.r
                 inst.batch = max(1, p.batch)
                 inst.gpu = p.gpu
+                inst.shed = False             # in the plan = admitted
                 continue
             base = replication.base_name(name)
             if base in plan_bases:
                 free.setdefault(base, []).append(inst)   # rename/park pool
+            elif base in self.reconciler.shed:
+                # admission-shed: park the allocation and mark the
+                # instance so the simulator drops (and counts) its
+                # requests.  The spec's rate SHARE stays — arrivals keep
+                # routing here, so the estimator keeps seeing the true
+                # demand and readmission resumes from live priors.
+                inst.r = self.hw.r_unit
+                inst.batch = 1
+                inst.shed = True
             elif base in self.reconciler.departed:
                 inst.r = self.hw.r_unit
                 inst.batch = 1
@@ -1251,17 +1616,20 @@ class Controller:
                 inst.r = p.r
                 inst.batch = max(1, p.batch)
                 inst.gpu = p.gpu
+                inst.shed = False
             else:                             # scale-out: fresh replica
                 sibling = next(i for i in instances
                                if replication.base_name(i.spec.name)
                                == base)
                 instances.append(ServedInstance(
                     spec=p.workload, desc=sibling.desc, r=p.r,
-                    batch=max(1, p.batch), gpu=p.gpu))
+                    batch=max(1, p.batch), gpu=p.gpu,
+                    slo0=sibling.slo0))
         for pool in free.values():            # merged-away replicas
             for inst in pool:
                 inst.r = self.hw.r_unit
                 inst.batch = 1
+                inst.shed = False             # zero share: no arrivals
                 inst.spec = dataclasses.replace(inst.spec, rate_rps=0.0)
 
     @property

@@ -154,6 +154,17 @@ class ServedInstance:
     latencies: List[float] = field(default_factory=list)
     waits: List[float] = field(default_factory=list)   # serve start - arrival
     completed: int = 0
+    # overload admission (docs/control-plane.md): while ``shed`` the
+    # front door rejects this instance's arrivals — queued backlog is
+    # rejected at the shed tick, new arrivals are counted into
+    # ``shed_count`` instead of being served.  Toggled ONLY at adjust
+    # boundaries (the controller's tick), which is what keeps shed
+    # accounting byte-identical across both engines.  ``slo0`` pins the
+    # SLO the instance was CREATED with, so per-class violation
+    # accounting stays honest under brownout (loosened plan SLOs).
+    shed: bool = False
+    shed_count: int = 0
+    slo0: float = 0.0
     # arrivals in the last adjust interval, synced before adjust_fn calls
     # (identical across engines: both slice the pre-generated streams)
     recent_arrivals: np.ndarray = field(
@@ -435,7 +446,7 @@ def _setup(plan: ProvisioningPlan, models: Dict[str, ServedModelDesc],
     for p in plan.placements:
         instances.append(ServedInstance(
             spec=p.workload, desc=models[p.workload.model], r=p.r,
-            batch=max(1, p.batch), gpu=p.gpu))
+            batch=max(1, p.batch), gpu=p.gpu, slo0=p.workload.slo_ms))
     by_gpu: Dict[int, List[int]] = {}
     for i, inst in enumerate(instances):
         by_gpu.setdefault(inst.gpu, []).append(i)
@@ -581,6 +592,55 @@ def _regroup(instances: List[ServedInstance]) -> Dict[int, List[int]]:
     for i, inst in enumerate(instances):
         by_gpu.setdefault(inst.gpu, []).append(i)
     return by_gpu
+
+
+def _attach_canary(adjust_fn: Optional[AdjustFn], fstate) -> None:
+    """Hand a health-probe canary to a controller-style callback.
+
+    The canary answers "run one reference pass on idle device ``gpu``
+    at ``now_ms`` — what is measured/predicted?": the device's active
+    straggler multiplier (noise averages away exactly as in profiling),
+    ``inf`` while the device is down, 1.0 when clean.  Computed from the
+    fault schedule BOTH engines share, so probe-readmission decisions
+    are deterministic and engine-identical.  Callbacks without an
+    ``attach_canary`` method are untouched (hook is opt-in)."""
+    if adjust_fn is None:
+        return
+    attach = getattr(adjust_fn, "attach_canary", None)
+    if not callable(attach):
+        return
+
+    def canary(gpu: int, now_ms: float) -> float:
+        if fstate is None:
+            return 1.0
+        fl = fstate.dev.get(gpu)
+        if fl is None:
+            return 1.0
+        starts, ends, mult = fl
+        if starts:
+            kf = bisect_right(starts, now_ms) - 1
+            if kf >= 0 and now_ms < ends[kf]:
+                return math.inf
+        return mult
+
+    attach(canary)
+
+
+def _merge_overload_stats(adjust_fn: Optional[AdjustFn],
+                          stats: Dict[str, float]) -> None:
+    """Fold a controller-style callback's admission-layer report
+    (brownout depth, shed/preemption counts) into ``stats``.  Callbacks
+    without ``overload_stats``, and controllers whose admission layer
+    took ZERO actions, contribute nothing — the cap-slack run's stats
+    stay byte-identical to the pre-overload build."""
+    if adjust_fn is None:
+        return
+    rep = getattr(adjust_fn, "overload_stats", None)
+    if not callable(rep):
+        return
+    extra = rep()
+    if extra:
+        stats.update(extra)
 
 
 class _FaultState:
@@ -742,6 +802,35 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
         "wait_mean_ms": float(np.mean(all_waits)),
         "wait_p99_ms": float(np.percentile(all_waits, 99)),
     })
+    # Overload accounting — GATED: every key below is absent unless a
+    # request was actually shed or the controller reported admission
+    # activity, which is what keeps cap-slack runs byte-identical to
+    # pre-overload output.  Violation rates are measured against each
+    # instance's CREATION-time SLO (``slo0``), so a brownout (loosened
+    # working SLO) can never hide a violation from the per-class stats.
+    total_shed = sum(inst.shed_count for inst in instances)
+    if total_shed > 0 or stats.get("overload_active"):
+        stats["shed_requests"] = float(total_shed)
+        by_class: Dict[int, List[str]] = {}
+        for base, idxs in groups.items():
+            members = [instances[i] for i in idxs]
+            per[base]["shed_requests"] = float(
+                sum(m.shed_count for m in members))
+            by_class.setdefault(int(members[0].spec.priority),
+                                []).append(base)
+        for pr, bases in sorted(by_class.items()):
+            viol = served = shed = 0
+            for b in bases:
+                idxs = groups[b]
+                slo0 = instances[idxs[0]].slo0
+                viol += int(np.sum(req[b] > slo0))
+                served += int(req[b].size)
+                shed += sum(instances[i].shed_count for i in idxs)
+            stats[f"class{pr}_workloads"] = float(len(bases))
+            stats[f"class{pr}_violation_rate"] = \
+                viol / served if served else 0.0
+            stats[f"class{pr}_shed_rate"] = \
+                shed / (served + shed) if (served + shed) else 0.0
     return SimResult(per_workload=per, timeline=timeline,
                      request_latencies=req, request_waits=wts,
                      per_replica=per_rep, stats=stats)
@@ -761,6 +850,8 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         plan, models, shadow, shadow_extra, horizon, poisson, seed, trace)
     fstate = _FaultState(faults) \
         if faults is not None and (faults.down or faults.slow) else None
+    _attach_canary(adjust_fn, fstate)
+    shed_prev = [False] * len(instances)
 
     # (t, prio, seq, kind, idx, ver): the kind priority pins the same-
     # time ordering the setup-time push order used to imply (arrival <
@@ -860,6 +951,11 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         if kind == "arrival":
             if ver != arr_ver[idx]:
                 continue               # stale stream (re-split tail)
+            if instances[idx].shed:
+                # admission layer rejects at the front door: counted,
+                # never queued, never served (docs/control-plane.md)
+                instances[idx].shed_count += 1
+                continue
             instances[idx].queue.append(now)
             try_serve(idx, now)
         elif kind == "done":
@@ -909,8 +1005,17 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 arrivals.append(np.empty(0))
                 recent.append(deque())
                 arr_ver.append(0)
+                shed_prev.append(False)
                 if fault_dones is not None:
                     fault_dones.append([])
+            for i, inst in enumerate(instances):
+                if inst.shed and not shed_prev[i]:
+                    # shedding starts at this tick: the queued backlog
+                    # is rejected too (not yet admitted to a pass); the
+                    # in-flight pass, if any, completes
+                    inst.shed_count += len(inst.queue)
+                    inst.queue.clear()
+                shed_prev[i] = inst.shed
             for i in _resync_replicas(router, instances, arrivals, now):
                 arr_ver[i] += 1
                 a = arrivals[i]
@@ -953,6 +1058,7 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
         stats.update(fstate.fault_stats(
             fault_dones, horizon, sum(len(a) for a in arrivals),
             sum(inst.completed for inst in instances)))
+    _merge_overload_stats(adjust_fn, stats)
     return _finalize(instances, duration_s, timeline, stats)
 
 
@@ -1101,6 +1207,8 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
     n_inst = len(instances)
     fstate = _FaultState(faults) \
         if faults is not None and (faults.down or faults.slow) else None
+    _attach_canary(adjust_fn, fstate)
+    shed_prev = [False] * n_inst
 
     mon, adj = _epoch_times(horizon, monitor_period_s, adjust_fn,
                             adjust_period_s)
@@ -1159,6 +1267,16 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
         n_arr = len(arr)
         jj = jptr[i]
         if jj >= n_arr:
+            return
+        inst_i = instances[i]
+        if inst_i.shed:
+            # front-door rejection (mirrors the oracle's per-event drop;
+            # arrivals exactly at T sort before the boundary there)
+            j1 = bisect_right(arr, T, jj)
+            if j1 > jj:
+                inst_i.shed_count += j1 - jj
+                jptr[i] = j1
+                completed[i] = j1 - inst_i.shed_count
             return
         bu = busy[i]
         bcap = instances[i].batch
@@ -1222,7 +1340,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
             n_passes += 1
         jptr[i] = jj
         busy[i] = bu
-        completed[i] = jj             # all served so far
+        completed[i] = jj - inst_i.shed_count   # all served so far
 
     for (T, is_mon, is_adj) in epochs:
         for i in range(n_inst):
@@ -1286,7 +1404,21 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 completed.append(0)
                 done_flat.append([])
                 wptr.append(0)
+                shed_prev.append(False)
                 dirty.add(instances[j].gpu)
+            for i, inst in enumerate(instances):
+                if inst.shed and not shed_prev[i]:
+                    # shedding starts at this tick: reject the queued
+                    # backlog (same set the oracle clears), keep the
+                    # in-flight pass
+                    j1 = bisect_right(arr_l[i], T, jptr[i])
+                    if j1 > jptr[i]:
+                        inst.shed_count += j1 - jptr[i]
+                        jptr[i] = j1
+                    completed[i] = jptr[i] - inst.shed_count
+                    inst.completed = completed[i]
+                    inst.queue = []
+                shed_prev[i] = inst.shed
             n_inst = len(instances)
             for i in _resync_replicas(router, instances, arr_np, T):
                 arr_l[i] = arr_np[i].tolist()
@@ -1334,6 +1466,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
         stats.update(fstate.fault_stats(
             done_flat, horizon, sum(len(a) for a in arrivals),
             sum(completed)))
+    _merge_overload_stats(adjust_fn, stats)
     return _finalize(instances, duration_s, timeline, stats)
 
 

@@ -49,6 +49,8 @@ CLASSES = {
     "ProvisioningPlan": "src/repro/core/types.py",
     "PlannerConfig": "src/repro/core/types.py",
     "ProbeCache": "src/repro/core/provisioner.py",
+    "InfeasibleError": "src/repro/core/provisioner.py",
+    "DeviceCapError": "src/repro/core/provisioner.py",
     "CoeffArrays": "src/repro/core/perf_model_vec.py",
     "VecCluster": "src/repro/core/perf_model_vec.py",
     "BudgetModel": "src/repro/core/queueing.py",

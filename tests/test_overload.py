@@ -1,0 +1,382 @@
+"""Overload regime: device caps, priority admission, the shed /
+readmit lifecycle, probe-based quarantine readmission, and replica
+lifecycle edges.
+
+Pins the PR's acceptance behavior:
+
+  * `provision` / `add_workload` / `resize_workload` raise STRUCTURED
+    errors under a device cap (`DeviceCapError.per_hw`), and Theorem-1
+    infeasibility carries ``per_hw`` through the workload-edit paths;
+  * a slack cap is a byte-identical no-op: controlled runs with
+    ``max_devices`` far above the fleet match cap-less runs exactly
+    (streams AND stats — no overload keys appear);
+  * the admission layer preempts strictly-lower-priority groups, the
+    shed workload is NOT mistaken for a departure while its arrivals
+    continue, and readmission restores it from live estimator priors;
+  * a preempt-then-readmit controlled run is byte-identical across
+    simulator engines;
+  * quarantine readmission is an ACTIVE probe: a permanently slow
+    device stays quarantined forever, a recovered device is readmitted
+    at probation expiry;
+  * replica lifecycle edges: `merge_workload` renormalizes unequal
+    survivor shares, and a zero-share park / re-activate round-trip
+    loses no requests and never counts as shedding.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core import replication
+from repro.core.experiments import fitted_context
+from repro.core.types import Placement, PlannerConfig, WorkloadSpec
+from repro.serving import faults, traces
+from repro.serving.controller import (ArrivalEstimator, Controller,
+                                      ControllerConfig, Reconciler)
+from repro.serving.simulator import simulate_plan
+from repro.serving.workload import models, twelve_workloads
+
+WINDOW_MS = 1000.0
+_WALL_KEYS = ("wall_s", "events_per_s", "reconfig_latency_ms")
+
+
+@pytest.fixture(scope="module")
+def ctx12():
+    ctx = fitted_context()
+    plan = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw)
+    return ctx, plan
+
+
+@pytest.fixture(scope="module")
+def prio12():
+    """twelve_workloads with W1 promoted to priority 1 (the high tier)."""
+    ctx = fitted_context()
+    specs = [dataclasses.replace(s, priority=1) if s.name == "W1" else s
+             for s in twelve_workloads()]
+    plan = prov.provision(specs, ctx.profiles, ctx.hw)
+    return ctx, specs, plan
+
+
+def _det_window(rate_rps, window_ms=WINDOW_MS, t0=0.0):
+    period = 1000.0 / rate_rps
+    return t0 + np.arange(period / 2.0, window_ms, period)
+
+
+def _estimators(plan, cfg=None):
+    return {p.workload.name: ArrivalEstimator(p.workload.rate_rps, cfg)
+            for p in plan.placements}
+
+
+def _identical(a, b, *, stats=True):
+    assert set(a.request_latencies) == set(b.request_latencies)
+    for k in a.request_latencies:
+        assert np.array_equal(a.request_latencies[k],
+                              b.request_latencies[k]), k
+        assert np.array_equal(a.request_waits[k], b.request_waits[k]), k
+    assert a.per_workload == b.per_workload
+    if stats:
+        sa = {k: v for k, v in a.stats.items() if k not in _WALL_KEYS}
+        sb = {k: v for k, v in b.stats.items() if k not in _WALL_KEYS}
+        assert sa == sb
+
+
+# ---------------------------------------------------------------------------
+# Structured capacity errors
+# ---------------------------------------------------------------------------
+
+def test_provision_device_cap_raises_structured(ctx12):
+    ctx, plan = ctx12
+    with pytest.raises(prov.DeviceCapError) as ei:
+        prov.provision(twelve_workloads(), ctx.profiles, ctx.hw,
+                       max_devices=max(1, plan.n_gpus - 1))
+    err = ei.value
+    assert isinstance(err, prov.InfeasibleError)   # catchable as before
+    assert err.per_hw and ctx.hw.name in err.per_hw
+    # a slack cap changes nothing at all
+    capped = prov.provision(twelve_workloads(), ctx.profiles, ctx.hw,
+                            max_devices=plan.n_gpus)
+    assert capped == plan
+
+
+def test_add_workload_cap_and_per_hw(ctx12):
+    ctx, plan = ctx12
+    template = twelve_workloads()[0]
+    hog = dataclasses.replace(template, name="HOG",
+                              rate_rps=template.rate_rps * 3.0)
+    # cap frozen at the current fleet: the add needs a fresh device
+    with pytest.raises(prov.DeviceCapError) as ei:
+        prov.add_workload(plan, hog, ctx.profiles, ctx.hw,
+                          max_devices=plan.n_gpus)
+    assert ei.value.per_hw and ctx.hw.name in ei.value.per_hw
+    # Theorem-1 infeasibility (SLO below the floor) also carries per_hw
+    doomed = dataclasses.replace(template, name="DOOMED", slo_ms=1e-3)
+    with pytest.raises(prov.InfeasibleError) as ei:
+        prov.add_workload(plan, doomed, ctx.profiles, ctx.hw)
+    assert ei.value.per_hw and ctx.hw.name in ei.value.per_hw
+
+
+def test_resize_workload_infeasible_carries_per_hw(ctx12):
+    ctx, plan = ctx12
+    spec = plan.placements[0].workload
+    doomed = dataclasses.replace(spec, slo_ms=1e-3)
+    with pytest.raises(prov.InfeasibleError) as ei:
+        prov.resize_workload(plan, doomed, ctx.profiles, ctx.hw)
+    assert ei.value.per_hw and ctx.hw.name in ei.value.per_hw
+
+
+def test_provision_cheapest_cap_aggregates_per_hw(ctx12):
+    ctx, _ = ctx12
+    with pytest.raises(prov.InfeasibleError) as ei:
+        prov.provision_cheapest(twelve_workloads(),
+                                {ctx.hw.name: ctx.profiles}, [ctx.hw],
+                                max_devices=1)
+    assert ctx.hw.name in ei.value.per_hw
+
+
+# ---------------------------------------------------------------------------
+# Priority vocabulary
+# ---------------------------------------------------------------------------
+
+def test_preemption_order_priority_then_footprint():
+    def grp(name, pr, rs):
+        spec = WorkloadSpec(name=name, model="m", slo_ms=50.0,
+                            rate_rps=100.0, priority=pr)
+        return [Placement(workload=spec, gpu=i, r=r, batch=4)
+                for i, r in enumerate(rs)]
+    groups = {
+        "hi":   grp("hi", 1, [1.0, 1.0]),       # high class: last
+        "big":  grp("big", 0, [1.0, 0.8]),      # largest footprint first
+        "mid":  grp("mid", 0, [0.9]),
+        "tie":  grp("tie", 0, [0.9]),           # same footprint: by name
+    }
+    assert replication.preemption_order(groups) == \
+        ["big", "mid", "tie", "hi"]
+
+
+# ---------------------------------------------------------------------------
+# Slack cap == byte-identical no-op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("scalar", "vec"))
+def test_cap_slack_controlled_run_byte_identical(ctx12, engine):
+    ctx, plan = ctx12
+    mods = models()
+    names = [p.workload.name for p in plan.placements]
+    tr = traces.diurnal(names, 8000.0, peak=1.6)
+    kw = dict(duration_s=8.0, poisson=True, seed=3, trace=tr,
+              adjust_scope="cluster", adjust_period_s=1.0, engine=engine)
+    ctl_a = Controller(plan, ctx.profiles, ctx.hw,
+                       config=PlannerConfig(batch="joint"))
+    a = simulate_plan(plan, mods, ctx.hw, adjust_fn=ctl_a, **kw)
+    cfg = ControllerConfig(max_devices=plan.n_gpus * 10)
+    ctl_b = Controller(plan, ctx.profiles, ctx.hw,
+                       config=PlannerConfig(batch="joint"), cfg=cfg)
+    b = simulate_plan(plan, mods, ctx.hw, adjust_fn=ctl_b, **kw)
+    assert ctl_a.edits, "ramp should reconfigure (else this tests nothing)"
+    _identical(a, b)
+    assert "shed_requests" not in b.stats
+    assert not any(k.startswith("class") for k in b.stats)
+    assert ctl_b.overload_stats() == {}
+    assert ctl_b.reconciler.admission_log == []
+
+
+# ---------------------------------------------------------------------------
+# Admission lifecycle: preempt -> shed (not departed) -> readmit
+# ---------------------------------------------------------------------------
+
+def test_preempt_shed_readmit_lifecycle(prio12):
+    ctx, specs, plan = prio12
+    cfg = ControllerConfig(max_devices=plan.n_gpus, headroom=0.35,
+                           readmit_backoff_s=2.0)
+    rec = Reconciler(plan, ctx.profiles, ctx.hw, cfg=cfg)
+    ests = _estimators(plan, cfg)
+    rate0 = {n: rec.targets[replication.base_name(n)].rate_rps
+             for n in ests}
+    hi = "W1"
+
+    def tick(k, surge):
+        for n, est in ests.items():
+            r = rate0[n] * (surge if replication.base_name(n) == hi
+                            else 1.0)
+            est.observe(_det_window(r, t0=k * WINDOW_MS), WINDOW_MS)
+        rec.reconcile(k + 1.0, ests)
+
+    k = 0
+    # phase 1: the high tier surges far past the capped fleet's slack
+    while k < 8 and not rec.shed:
+        tick(k, 3.0)
+        k += 1
+    assert rec.shed, "surge under a tight cap must preempt someone"
+    assert rec._adm["preempt"] >= 1
+    victims = list(rec.shed)
+    assert all(s.priority == 0 for s in rec.shed.values())
+    assert hi not in rec.shed
+
+    # phase 2: victims' arrivals CONTINUE while shed — many windows of
+    # real traffic must never flip them to "departed" (their silence on
+    # the served side is policy, not drift), and the estimator keeps
+    # tracking true demand
+    for _ in range(10):
+        tick(k, 3.0)
+        k += 1
+    for v in victims:
+        assert v not in rec.departed
+        assert v in rec.shed
+        assert ests[v].rate_rps == pytest.approx(rate0[v], rel=0.1)
+
+    # phase 3: the surge ends; the downsize frees capacity and the
+    # shed workloads are readmitted from live estimator priors
+    for _ in range(12):
+        tick(k, 1.0)
+        k += 1
+    assert not rec.shed
+    for v in victims:
+        assert v in rec.targets
+        assert rec.targets[v].rate_rps == pytest.approx(rate0[v], rel=0.2)
+        group = replication.group_placements(rec.plan.placements)[v]
+        assert sum(p.workload.rate_rps for p in group) == \
+            pytest.approx(rec.targets[v].rate_rps)
+    stats = rec.overload_stats()
+    assert stats["admission_preemptions"] >= 1
+    assert stats["admission_readmits"] >= len(victims)
+    assert stats["shed_workloads_final"] == 0.0
+    assert any(e.action == "preempt" for e in rec.edits)
+    assert any(e.action == "admit" for e in rec.edits)
+
+
+def test_preempt_then_readmit_engine_identical(prio12):
+    """The whole preempt -> shed -> readmit arc, closed-loop in the
+    simulator, byte-identical scalar vs vec (fresh controllers each)."""
+    ctx, specs, plan = prio12
+    mods = models()
+    names = [p.workload.name for p in plan.placements]
+    edges = np.array([0.0, 5000.0, 12000.0])
+    scales = {n: np.array([3.0, 1.0]) if n == "W1"
+              else np.array([1.0, 1.0]) for n in names}
+    tr = traces.Trace(edges=edges, scales=scales)
+    kw = dict(duration_s=12.0, poisson=False, seed=7, trace=tr,
+              adjust_scope="cluster", adjust_period_s=1.0)
+    runs = {}
+    for engine in ("scalar", "vec"):
+        cfg = ControllerConfig(max_devices=plan.n_gpus, headroom=0.35,
+                               readmit_backoff_s=2.0)
+        ctl = Controller(plan, ctx.profiles, ctx.hw,
+                         config=PlannerConfig(batch="joint"), cfg=cfg)
+        runs[engine] = (ctl, simulate_plan(plan, mods, ctx.hw,
+                                           adjust_fn=ctl, engine=engine,
+                                           **kw))
+    a, b = runs["scalar"][1], runs["vec"][1]
+    assert a.stats.get("admission_preemptions", 0) >= 1
+    assert a.stats.get("shed_requests", 0) > 0
+    _identical(a, b)
+    assert runs["scalar"][0].reconciler.admission_log == \
+        runs["vec"][0].reconciler.admission_log
+
+
+# ---------------------------------------------------------------------------
+# Probe-based quarantine readmission
+# ---------------------------------------------------------------------------
+
+def _health_run(ctx, plan, fs, duration_s=14.0):
+    cfg = ControllerConfig(health_readmit_s=2.0)
+    ctl = Controller(plan, ctx.profiles, ctx.hw,
+                     config=PlannerConfig(batch="joint"), cfg=cfg)
+    res = simulate_plan(plan, models(), ctx.hw, duration_s=duration_s,
+                        poisson=True, seed=0, faults=fs, adjust_fn=ctl,
+                        adjust_scope="cluster", adjust_period_s=1.0)
+    return ctl, res
+
+
+def test_permanent_straggler_never_readmitted(ctx12):
+    """Regression: readmission is an ACTIVE canary probe, not a timer.
+    A device that is still slow at every probation expiry stays
+    quarantined forever — the old time-based probation would have
+    readmitted it after health_readmit_s and re-victimized the
+    workloads placed back onto it."""
+    ctx, plan = ctx12
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(slow={g: 2.5})
+    ctl, _ = _health_run(ctx, plan, fs)
+    # quarantined early, probation (2 s) expired many times over the
+    # 12 s run, yet every probe saw the 2.5x residual and refused
+    assert g in ctl.reconciler.quarantined
+    assert g in ctl.health.quarantined
+    assert not any(e.action == "readmit" for e in ctl.reconciler.edits)
+
+
+def test_recovered_device_readmitted_by_probe(ctx12):
+    """The counterpart: a device whose outage ENDS passes the canary at
+    probation expiry and rejoins the placement pool."""
+    ctx, plan = ctx12
+    g = next(p.gpu for p in plan.placements if p.workload.name == "W3")
+    fs = faults.FaultSchedule(down={g: [[2000.0, 5000.0]]})
+    ctl, _ = _health_run(ctx, plan, fs)
+    assert any(e.action == "readmit" and e.workload == f"device:{g}"
+               for e in ctl.reconciler.edits)
+    assert g not in ctl.reconciler.quarantined
+    assert g not in ctl.health.quarantined
+
+
+# ---------------------------------------------------------------------------
+# Replica lifecycle edges
+# ---------------------------------------------------------------------------
+
+def test_merge_renormalizes_unequal_shares(ctx12):
+    """Survivor shares after a merge sum to the base rate even when the
+    pre-merge group carried unequal (capacity-proportional) shares."""
+    ctx, plan = ctx12
+    spec = plan.placements[0].workload
+    plan3 = prov.split_workload(plan, spec, 3, ctx.profiles, ctx.hw)
+    # skew the shares the way the controller's capacity-proportional
+    # re-home would (0.5 / 0.3 / 0.2 of the base rate)
+    shares = [0.5, 0.3, 0.2]
+    skewed = []
+    for p in plan3.placements:
+        if replication.base_name(p.workload.name) == spec.name:
+            j = replication.replica_index(p.workload.name)
+            p = dataclasses.replace(p, workload=dataclasses.replace(
+                p.workload, rate_rps=spec.rate_rps * shares[j]))
+        skewed.append(p)
+    plan3 = dataclasses.replace(plan3, placements=skewed)
+    merged = prov.merge_workload(plan3, spec, 2, ctx.profiles, ctx.hw)
+    group = replication.group_placements(merged.placements)[spec.name]
+    assert len(group) == 2
+    assert sum(p.workload.rate_rps for p in group) == \
+        pytest.approx(spec.rate_rps)
+    # merge-to-one returns the plain unreplicated name at the full rate
+    plain = prov.merge_workload(merged, spec, 1, ctx.profiles, ctx.hw)
+    back = [p for p in plain.placements if p.workload.name == spec.name]
+    assert len(back) == 1
+    assert back[0].workload.rate_rps == pytest.approx(spec.rate_rps)
+
+
+def test_zero_share_park_reactivate_roundtrip(ctx12):
+    """Split -> merge parks the extra replica at a zero rate share;
+    a later re-split re-activates (adopts) it.  The round trip loses no
+    requests and must never be accounted as shedding."""
+    ctx, plan = ctx12
+    mods = models()
+    names = [p.workload.name for p in plan.placements]
+    target = plan.placements[0].workload.name
+    edges = np.array([0.0, 5000.0, 10000.0, 15000.0])
+    scales = {n: (np.array([2.6, 1.0, 2.6]) if n == target
+                  else np.array([1.0, 1.0, 1.0])) for n in names}
+    tr = traces.Trace(edges=edges, scales=scales)
+    ctl = Controller(plan, ctx.profiles, ctx.hw,
+                     config=PlannerConfig(batch="joint"))
+    res = simulate_plan(plan, mods, ctx.hw, duration_s=15.0,
+                        poisson=False, seed=0, trace=tr, adjust_fn=ctl,
+                        adjust_scope="cluster", adjust_period_s=1.0)
+    acts = [e.action for e in ctl.edits if e.workload == target]
+    assert "split" in acts and "merge" in acts
+    assert acts.index("merge") < len(acts) - 1 \
+        and "split" in acts[acts.index("merge"):], \
+        "needs a re-split after the merge to exercise re-activation"
+    # parking is not shedding: nothing dropped, no admission stats
+    assert "shed_requests" not in res.stats
+    assert res.stats.get("lost_requests", 0) == 0
+    # every arrival that entered the (finite) run was eventually served
+    # or still queued — the parked replica drained, none vanished
+    assert res.per_workload[target]["rps"] > 0.0
