@@ -42,8 +42,15 @@ Run:  PYTHONPATH=src python -m benchmarks.availability_sweep [--quick]
       --backend B    "numpy" (default) or "jax" simulator backend
       --sim-duration secs of simulated serving per run
       --check        exit non-zero if any gate above fails
+      --telemetry    attach a `Telemetry` recorder to every controlled
+                     run (results are byte-identical by contract —
+                     docs/observability.md); writes per-scenario JSONL +
+                     HTML artifacts next to --out, rows gain
+                     ``telemetry_*`` columns (drift rows are the
+                     straggler-detection signal), and --check gates the
+                     event-log-vs-n_reconfigs reconciliation
       --out F        JSON row dump (default
-                     benchmarks/availability_sweep_results.json)
+                     benchmarks/out/availability_sweep_results.json)
 """
 from __future__ import annotations
 
@@ -71,7 +78,7 @@ STRAGGLER_MULT = 2.5        # comfortably past the fleet-relative
                             # detection bar (health_straggler_factor)
 TAIL_WINDOW_S = 3.0         # straggler gate: victim p99 over the last
                             # 3 s of 1 s monitor windows must meet SLO
-DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
                            "availability_sweep_results.json")
 
 
@@ -110,14 +117,22 @@ def _victim_tail_ok(res, plan, specs, slow_gpus, horizon_s) -> tuple:
 
 
 def sweep(sizes, *, rates=RATES, seed: int = 0,
-          sim_duration_s: float = 12.0, backend: str = "numpy"):
+          sim_duration_s: float = 12.0, backend: str = "numpy",
+          telemetry: bool = False, artifact_dir: str = None):
     from repro.core import provisioner as prov
     from repro.core.experiments import fitted_context
     from repro.core.types import PlannerConfig
     from repro.serving import faults
     from repro.serving.controller import Controller
     from repro.serving.simulator import simulate_full
+    from repro.serving.telemetry import Telemetry
     from repro.serving.workload import models, synthetic_workloads
+
+    from benchmarks import telemetry_report
+
+    if telemetry:
+        artifact_dir = artifact_dir or os.path.dirname(DEFAULT_OUT)
+        os.makedirs(artifact_dir, exist_ok=True)
 
     cfg = PlannerConfig(backend=backend)
     ctx5 = fitted_context("tpu-v5e")
@@ -149,12 +164,15 @@ def sweep(sizes, *, rates=RATES, seed: int = 0,
             t0 = time.perf_counter()
             res_u = simulate_full(plan, mods, hw, **kw)
             off_wall = time.perf_counter() - t0
+            tel = Telemetry() if telemetry else None
             ctl = Controller(plan, profiles, hw,
-                             config=cfg.replace(batch="joint"))
+                             config=cfg.replace(batch="joint"),
+                             telemetry=tel)
             t0 = time.perf_counter()
             res_c = simulate_full(plan, mods, hw, adjust_fn=ctl,
                                   adjust_scope="cluster",
-                                  adjust_period_s=1.0, **kw)
+                                  adjust_period_s=1.0, telemetry=tel,
+                                  **kw)
             on_wall = time.perf_counter() - t0
             row = {
                 "bench": "availability_sweep", "m": m,
@@ -187,6 +205,21 @@ def sweep(sizes, *, rates=RATES, seed: int = 0,
                 row["n_stragglers"] = len(slow_gpus)
                 row["victim_tail_ok"] = ok
                 row["victim_tail_worst"] = round(worst, 3)
+            if tel is not None:
+                stem = os.path.join(artifact_dir,
+                                    f"telemetry_m{m}_{scenario}")
+                tel.to_jsonl(stem + ".jsonl")
+                with open(stem + ".html", "w") as f:
+                    f.write(telemetry_report.render_html(
+                        telemetry_report.load(stem + ".jsonl")))
+                row.update({
+                    "telemetry_events": tel.events.total,
+                    "telemetry_drift_rows": tel.drift.total,
+                    "telemetry_reconfig_ok":
+                        tel.counters.get("reconfig_events", 0)
+                        == int(res_c.stats["n_reconfigs"]),
+                    "telemetry_log": stem + ".jsonl",
+                })
             rows.append(row)
             print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
     return rows
@@ -210,6 +243,10 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="simulator backend (default: numpy)")
     ap.add_argument("--sim-duration", type=float, default=12.0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach a Telemetry recorder to every "
+                         "controlled run; writes per-scenario JSONL + "
+                         "HTML artifacts next to --out")
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     ap.add_argument("--check", action="store_true",
                     help="fail unless controller-on strictly beats "
@@ -225,7 +262,10 @@ def main(argv=None) -> int:
     rates = (tuple(float(r) for r in args.rates.split(","))
              if args.rates else RATES)
     rows = sweep(sizes, rates=rates, seed=args.seed,
-                 sim_duration_s=args.sim_duration, backend=args.backend)
+                 sim_duration_s=args.sim_duration, backend=args.backend,
+                 telemetry=args.telemetry,
+                 artifact_dir=os.path.dirname(os.path.abspath(args.out)))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {args.out} ({len(rows)} rows)")
@@ -233,6 +273,13 @@ def main(argv=None) -> int:
     status = 0
     for row in rows:
         tag = f"m={row['m']} {row['scenario']}"
+        if "telemetry_events" in row:
+            ok_rec = row["telemetry_reconfig_ok"]
+            print(f"# {tag}: telemetry {row['telemetry_events']} events, "
+                  f"{row['telemetry_drift_rows']} drift rows, event-log "
+                  f"reconciliation {'PASS' if ok_rec else 'FAIL'}")
+            if args.check and not ok_rec:
+                status = 1
         if row["scenario"] == "clean":
             noop = (row["n_reconfigs"] == 0 and row["n_edits"] == 0
                     and row["plan_identical"])

@@ -64,8 +64,21 @@ Run:  PYTHONPATH=src python -m benchmarks.dynamic_sweep [--quick] [--check]
                      diurnal controller overhead exceeds EDIT_TARGET_MS
       --sim-floor N  exit non-zero if any sim ran below N events/s
 
-Writes a JSON row dump (default benchmarks/dynamic_sweep_results.json —
-gitignored; CI uploads it as an artifact).
+--telemetry re-runs each controlled scenario with a `Telemetry`
+recorder attached (`repro.serving.telemetry`, docs/observability.md) to
+a FRESH controller — the primary controlled run stays telemetry-off so
+its wall clock remains the no-observability baseline.  Per scenario it
+writes a JSONL event/timeline log plus a self-contained HTML report
+(rendered via `benchmarks.telemetry_report`) next to --out, and the
+row gains ``telemetry_*`` columns.  Under --check the telemetry run
+must (a) reconcile its overflow-immune ``reconfig_events`` counter
+against the sim's ``n_reconfigs`` stat — every placement mutation
+appears exactly once in the event log — and (b) at m=1000 keep the
+telemetry-on wall within TELEMETRY_OVERHEAD_CAP (10%) of the
+telemetry-off controlled run.
+
+Writes a JSON row dump (default benchmarks/out/dynamic_sweep_results.json
+— gitignored; CI uploads it as an artifact).
 """
 from __future__ import annotations
 
@@ -98,7 +111,9 @@ SIM_TARGET_S = 60.0      # same bound as scale_sweep's m=1000 full sim
 EDIT_TARGET_MS = 10000.0  # m=1000 diurnal controller overhead bound:
                           # ~13 s before PR 6 (ProbeCache + vectorized
                           # probe path), ~7 s after
-DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+TELEMETRY_OVERHEAD_CAP = 0.10  # --check: m=1000 telemetry-on wall may
+                               # exceed telemetry-off by at most 10%
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
                            "dynamic_sweep_results.json")
 
 
@@ -186,13 +201,21 @@ def _mean_violation_rate(res, specs) -> float:
 
 
 def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
-          backend: str = "numpy"):
+          backend: str = "numpy", telemetry: bool = False,
+          artifact_dir: str = None):
     from repro.core import provisioner as prov
     from repro.core.experiments import fitted_context
     from repro.core.types import PlannerConfig
     from repro.serving.controller import Controller, ControllerConfig
     from repro.serving.simulator import simulate_full
+    from repro.serving.telemetry import Telemetry
     from repro.serving.workload import models, synthetic_workloads
+
+    from benchmarks import telemetry_report
+
+    if telemetry:
+        artifact_dir = artifact_dir or os.path.dirname(DEFAULT_OUT)
+        os.makedirs(artifact_dir, exist_ok=True)
 
     cfg = PlannerConfig(backend=backend)
     ctx5 = fitted_context("tpu-v5e")
@@ -282,8 +305,8 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
                 "final_cost_per_hour":
                     round(ctl.plan.cost_per_hour(), 2),
                 "mean_cost_per_hour": round(
-                    sum(c for _, c in ctl.cost_series)
-                    / max(len(ctl.cost_series), 1), 2),
+                    sum(c for _, c in ctl.costs)
+                    / max(len(ctl.costs), 1), 2),
                 "static_sim_wall_s": round(static_wall, 3),
                 "controlled_sim_wall_s": round(ctl_wall, 3),
                 "sim_events_per_s": round(res_c.stats["events_per_s"]),
@@ -316,6 +339,39 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
                     "admission_readmits":
                         int(st.get("admission_readmits", 0)),
                 })
+            if telemetry:
+                # Fresh controller + recorder: the primary controlled
+                # run above stays telemetry-off, so ctl_wall is the
+                # baseline the overhead gate compares against.
+                tel = Telemetry()
+                ctl_t = Controller(o_plan, o_profiles, o_hw,
+                                   config=cfg.replace(batch="joint"),
+                                   cfg=ctl_cfg, telemetry=tel)
+                t0 = time.perf_counter()
+                res_t = simulate_full(o_plan, mods, o_hw,
+                                      duration_s=sim_duration_s,
+                                      seed=seed, poisson=poisson, trace=tr,
+                                      adjust_fn=ctl_t,
+                                      adjust_scope="cluster",
+                                      adjust_period_s=1.0, backend=backend,
+                                      telemetry=tel)
+                tel_wall = time.perf_counter() - t0
+                stem = os.path.join(artifact_dir,
+                                    f"telemetry_m{m}_{scenario}")
+                tel.to_jsonl(stem + ".jsonl")
+                with open(stem + ".html", "w") as f:
+                    f.write(telemetry_report.render_html(
+                        telemetry_report.load(stem + ".jsonl")))
+                row.update({
+                    "telemetry_wall_s": round(tel_wall, 3),
+                    "telemetry_overhead": round(
+                        (tel_wall - ctl_wall) / max(ctl_wall, 1e-9), 4),
+                    "telemetry_events": tel.events.total,
+                    "telemetry_reconfig_ok":
+                        tel.counters.get("reconfig_events", 0)
+                        == int(res_t.stats["n_reconfigs"]),
+                    "telemetry_log": stem + ".jsonl",
+                })
             rows.append(row)
             print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
     return rows
@@ -340,6 +396,12 @@ def main(argv=None) -> int:
                     help="planner/simulator backend (default: numpy)")
     ap.add_argument("--sim-duration", type=float, default=10.0)
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="re-run each controlled scenario with a "
+                         "Telemetry recorder attached; writes per-"
+                         "scenario JSONL + HTML artifacts next to --out "
+                         "and (with --check) gates the event-log "
+                         "reconciliation and the m=1000 overhead cap")
     ap.add_argument("--check", action="store_true",
                     help="fail on controlled > static violations, on any "
                          "no-drift reconfiguration, or on an m=1000 "
@@ -356,7 +418,10 @@ def main(argv=None) -> int:
     scenarios = (tuple(args.scenarios.split(",")) if args.scenarios
                  else SCENARIOS)
     rows = sweep(sizes, scenarios, seed=args.seed,
-                 sim_duration_s=args.sim_duration, backend=args.backend)
+                 sim_duration_s=args.sim_duration, backend=args.backend,
+                 telemetry=args.telemetry,
+                 artifact_dir=os.path.dirname(os.path.abspath(args.out)))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {args.out} ({len(rows)} rows)")
@@ -399,6 +464,23 @@ def main(argv=None) -> int:
                   f"({'PASS' if ok_hi and ok_shed and ok_bo else 'FAIL'})")
             if args.check and not (ok_hi and ok_shed and ok_bo):
                 status = 1
+        if "telemetry_events" in row:
+            ok_rec = row["telemetry_reconfig_ok"]
+            print(f"# {tag}: telemetry {row['telemetry_events']} events, "
+                  f"wall {row['telemetry_wall_s']:.2f}s "
+                  f"({row['telemetry_overhead']:+.1%} vs off), event-log "
+                  f"reconciliation {'PASS' if ok_rec else 'FAIL'}")
+            if args.check and not ok_rec:
+                status = 1
+            if row["m"] == 1000:
+                ok_ovh = row["telemetry_overhead"] <= TELEMETRY_OVERHEAD_CAP
+                print(f"# {tag}: telemetry overhead "
+                      f"{row['telemetry_overhead']:.1%} "
+                      f"{'<=' if ok_ovh else '>'} "
+                      f"{TELEMETRY_OVERHEAD_CAP:.0%} cap "
+                      f"({'PASS' if ok_ovh else 'FAIL'})")
+                if args.check and not ok_ovh:
+                    status = 1
         if row["m"] == 1000:
             fast = row["controlled_sim_wall_s"] < SIM_TARGET_S
             print(f"# {tag}: controlled full sim "

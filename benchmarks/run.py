@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure (+ roofline).
 
 Prints ``bench,key=value,...`` CSV-ish rows and writes
-benchmarks/results.json.  Run: PYTHONPATH=src python -m benchmarks.run
+benchmarks/out/results.json.  Run: PYTHONPATH=src python -m benchmarks.run
 """
 import json
 import os
@@ -38,7 +38,9 @@ def main() -> None:
             print(f"{bench},{body}")
             r["bench"] = bench
         all_rows.extend(rows)
-    out = os.path.join(os.path.dirname(__file__), "results.json")
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, "results.json")
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1)
     print(f"# wrote {out} ({len(all_rows)} rows)")

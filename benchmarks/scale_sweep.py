@@ -49,8 +49,8 @@ Run:  PYTHONPATH=src python -m benchmarks.scale_sweep [--quick] [--check]
                      plan's simulated violations exceed predicted + N
                      (negative disables; CI enforces this per PR)
 
-Writes a JSON row dump (default benchmarks/scale_sweep_results.json —
-gitignored; CI uploads it as an artifact).
+Writes a JSON row dump (default benchmarks/out/scale_sweep_results.json
+— gitignored; CI uploads it as an artifact).
 """
 from __future__ import annotations
 
@@ -70,7 +70,7 @@ SIM_TARGET_S = 60.0      # CI bound for the m=1000 FULL-cluster simulation
 # m=10,000 rides the informational jax-tier job (single-digit minutes)
 TARGETS = {1000: (TARGET_S, SIM_TARGET_S), 10000: (240.0, 300.0)}
 CMP_MAX_M = 1000         # half-split / replica comparison plans up to here
-DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
                            "scale_sweep_results.json")
 
 
@@ -269,6 +269,7 @@ def main(argv=None) -> int:
         return 2
     rows = sweep(sizes, seed=args.seed, sim_duration_s=args.sim_duration,
                  backend=args.backend)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {args.out} ({len(rows)} rows)")

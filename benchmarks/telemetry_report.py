@@ -1,0 +1,323 @@
+"""Render a `Telemetry.to_jsonl` log as a terminal summary and/or a
+self-contained HTML report (inline SVG sparklines, no external assets).
+
+Stdlib-only ON PURPOSE: the docs/fast CI tiers render the committed
+fixture log (tests/data/telemetry_fixture.jsonl) without numpy or the
+repro package installed, so this module must import nothing beyond the
+standard library.
+
+Input is the typed-JSONL format documented in
+`repro.serving.telemetry.Telemetry.to_jsonl`: one record per line with
+``"type"`` in {"event", "workload", "device", "drift"} plus a single
+"summary" trailer carrying counters / wall totals / gauges / ring fill.
+
+Run:  python -m benchmarks.telemetry_report LOG.jsonl [--html OUT.html]
+      --html F   also write a self-contained HTML report to F
+      --top N    workloads/devices shown in tables and charts (default 8)
+      --check    exit non-zero if the log is malformed: no summary
+                 trailer, unknown record types, or the overflow-immune
+                 ``reconfig_events`` counter disagreeing with
+                 ``events_reconfig``
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import sys
+
+RECORD_TYPES = ("event", "workload", "device", "drift", "summary")
+
+
+def load(path: str) -> dict:
+    """Parse a telemetry JSONL log into {events, workloads, devices,
+    drift, summary, unknown} lists (summary: dict or None)."""
+    data = {"events": [], "workloads": [], "devices": [], "drift": [],
+            "summary": None, "unknown": []}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            t = rec.pop("type", None)
+            if t == "event":
+                data["events"].append(rec)
+            elif t == "workload":
+                data["workloads"].append(rec)
+            elif t == "device":
+                data["devices"].append(rec)
+            elif t == "drift":
+                data["drift"].append(rec)
+            elif t == "summary":
+                data["summary"] = rec
+            else:
+                data["unknown"].append(t)
+    return data
+
+
+def check(data: dict) -> list:
+    """Structural sanity problems (empty list = clean log)."""
+    problems = []
+    if data["unknown"]:
+        problems.append(f"unknown record types: {sorted(set(data['unknown']))}")
+    s = data["summary"]
+    if s is None:
+        problems.append("missing summary trailer")
+        return problems
+    counters = s.get("counters", {})
+    n_reconf = counters.get("reconfig_events", 0)
+    if counters.get("events_reconfig", 0) != n_reconf:
+        problems.append(
+            f"reconfig_events={n_reconf} disagrees with "
+            f"events_reconfig={counters.get('events_reconfig', 0)}")
+    for name, ring in s.get("rings", {}).items():
+        if ring["rows"] + ring["dropped"] != ring["total"]:
+            problems.append(f"ring {name}: rows+dropped != total ({ring})")
+    return problems
+
+
+# -- aggregation --------------------------------------------------------------
+
+def _series(rows, key_field, t_field, v_field):
+    """rows -> {key: [(t, v), ...]} sorted by t."""
+    out = {}
+    for r in rows:
+        out.setdefault(r[key_field], []).append((r[t_field], r[v_field]))
+    for v in out.values():
+        v.sort()
+    return out
+
+
+def _top_keys(series: dict, n: int) -> list:
+    """Keys ranked by peak value, descending."""
+    peak = {k: max((v for _, v in pts), default=0.0)
+            for k, pts in series.items()}
+    return sorted(peak, key=lambda k: (-peak[k], str(k)))[:n]
+
+
+def _event_counts(events) -> dict:
+    out = {}
+    for e in events:
+        key = (e.get("kind", "?"), e.get("cause", ""))
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+# -- terminal -----------------------------------------------------------------
+
+def terminal_report(data: dict, top: int = 8) -> str:
+    lines = []
+    s = data["summary"] or {}
+    rings = s.get("rings", {})
+    lines.append("== telemetry report ==")
+    lines.append(
+        "rows: " + ", ".join(
+            f"{name}={r['rows']}"
+            + (f" (+{r['dropped']} dropped)" if r["dropped"] else "")
+            for name, r in rings.items()) if rings else "rows: (no summary)")
+
+    counts = _event_counts(data["events"])
+    if counts:
+        lines.append("-- events (kind/cause) --")
+        for (kind, cause), n in sorted(counts.items(),
+                                       key=lambda kv: (-kv[1], kv[0])):
+            lines.append(f"  {kind:<12} {cause:<10} x{n}")
+
+    p99 = _series(data["workloads"], "workload", "t_s", "p99_ms")
+    if p99:
+        lines.append(f"-- workloads (top {top} by peak p99) --")
+        for w in _top_keys(p99, top):
+            vals = [v for _, v in p99[w]]
+            lines.append(f"  {w:<10} p99 peak {max(vals):8.2f} ms  "
+                         f"last {vals[-1]:8.2f} ms  ({len(vals)} ticks)")
+
+    util = _series(data["devices"], "gpu", "t_s", "util")
+    if util:
+        lines.append(f"-- devices (top {top} by peak util) --")
+        for g in _top_keys(util, top):
+            vals = [v for _, v in util[g]]
+            lines.append(f"  gpu {g:<6} util peak {max(vals):5.2f}  "
+                         f"last {vals[-1]:5.2f}  ({len(vals)} ticks)")
+        agg = {}
+        for r in data["devices"]:
+            agg.setdefault(r["t_s"], []).append(r)
+        t_last = max(agg)
+        rows = agg[t_last]
+        lines.append(
+            f"  fleet @ t={t_last:g}s: {len(rows)} devices, "
+            f"mean util {sum(r['util'] for r in rows) / len(rows):.2f}, "
+            f"mean power_sum "
+            f"{sum(r['power_sum'] for r in rows) / len(rows):.1f} W, "
+            f"mean delta_sch "
+            f"{sum(r['delta_sch'] for r in rows) / len(rows):.3f} ms")
+
+    score = _series(data["drift"], "gpu", "t_s", "score")
+    if score:
+        lines.append(f"-- drift (top {top} by peak score) --")
+        for g in _top_keys(score, top):
+            vals = [v for _, v in score[g]]
+            lines.append(f"  gpu {g:<6} score peak {max(vals):6.3f}  "
+                         f"last {vals[-1]:6.3f}  ({len(vals)} ticks)")
+
+    if s:
+        walls = s.get("walls_ms", {})
+        if walls:
+            lines.append("-- overhead (wall ms) --")
+            for k, v in walls.items():
+                lines.append(f"  {k:<12} {v:10.2f}")
+        counters = s.get("counters", {})
+        if counters:
+            lines.append("-- counters --")
+            for k, v in counters.items():
+                lines.append(f"  {k:<18} {v}")
+        gauges = s.get("gauges", {})
+        if gauges:
+            lines.append("-- gauges --")
+            for k, v in gauges.items():
+                lines.append(f"  {k:<18} {v}")
+    return "\n".join(lines)
+
+
+# -- HTML ---------------------------------------------------------------------
+
+def _sparkline(points, width=640, height=80, color="#2563eb") -> str:
+    """Inline-SVG polyline for [(t, v), ...]; self-scaling, no deps."""
+    if not points:
+        return "<svg/>"
+    ts = [t for t, _ in points]
+    vs = [v for _, v in points]
+    t0, t1 = min(ts), max(ts)
+    v0, v1 = min(vs), max(vs)
+    dt = (t1 - t0) or 1.0
+    dv = (v1 - v0) or 1.0
+    pad = 4
+    pts = " ".join(
+        f"{pad + (t - t0) / dt * (width - 2 * pad):.1f},"
+        f"{height - pad - (v - v0) / dv * (height - 2 * pad):.1f}"
+        for t, v in points)
+    return (f'<svg width="{width}" height="{height}" '
+            f'viewBox="0 0 {width} {height}">'
+            f'<polyline fill="none" stroke="{color}" stroke-width="1.5" '
+            f'points="{pts}"/>'
+            f'<text x="{pad}" y="12" font-size="10" fill="#666">'
+            f"max {v1:.3g}</text>"
+            f'<text x="{pad}" y="{height - 2 * pad}" font-size="10" '
+            f'fill="#666">min {v0:.3g}</text></svg>')
+
+
+def _chart_block(title, series, keys, colors) -> str:
+    parts = [f"<h2>{html.escape(title)}</h2>"]
+    for i, k in enumerate(keys):
+        parts.append(
+            f'<div class="chart"><span class="lbl">{html.escape(str(k))}'
+            f"</span>{_sparkline(series[k], color=colors[i % len(colors)])}"
+            f"</div>")
+    return "\n".join(parts)
+
+
+def render_html(data: dict, top: int = 8) -> str:
+    """Self-contained HTML report: summary tables + SVG sparklines."""
+    s = data["summary"] or {}
+    colors = ("#2563eb", "#dc2626", "#059669", "#d97706",
+              "#7c3aed", "#0891b2", "#be185d", "#4d7c0f")
+    body = ["<h1>telemetry report</h1>"]
+
+    rings = s.get("rings", {})
+    if rings:
+        body.append("<table><tr><th>ring</th><th>rows</th><th>total</th>"
+                    "<th>dropped</th></tr>")
+        for name, r in rings.items():
+            body.append(f"<tr><td>{html.escape(name)}</td><td>{r['rows']}"
+                        f"</td><td>{r['total']}</td><td>{r['dropped']}"
+                        f"</td></tr>")
+        body.append("</table>")
+
+    counts = _event_counts(data["events"])
+    if counts:
+        body.append("<h2>control-plane events</h2>"
+                    "<table><tr><th>kind</th><th>cause</th><th>n</th></tr>")
+        for (kind, cause), n in sorted(counts.items(),
+                                       key=lambda kv: (-kv[1], kv[0])):
+            body.append(f"<tr><td>{html.escape(kind)}</td>"
+                        f"<td>{html.escape(cause)}</td><td>{n}</td></tr>")
+        body.append("</table>")
+
+    p99 = _series(data["workloads"], "workload", "t_s", "p99_ms")
+    if p99:
+        body.append(_chart_block(f"workload p99 (ms, top {top})", p99,
+                                 _top_keys(p99, top), colors))
+    util = _series(data["devices"], "gpu", "t_s", "util")
+    if util:
+        body.append(_chart_block(f"device utilization (top {top})", util,
+                                 _top_keys(util, top), colors))
+    power = _series(data["devices"], "gpu", "t_s", "power_sum")
+    if power:
+        body.append(_chart_block(f"device power_sum (W, top {top})", power,
+                                 _top_keys(power, top), colors))
+    score = _series(data["drift"], "gpu", "t_s", "score")
+    if score:
+        body.append(_chart_block(f"drift score (top {top})", score,
+                                 _top_keys(score, top), colors))
+
+    if data["events"]:
+        body.append("<h2>event log (newest last)</h2>"
+                    "<table><tr><th>t_s</th><th>kind</th><th>workload</th>"
+                    "<th>cause</th><th>rate</th><th>gpu</th></tr>")
+        for e in data["events"][-50:]:
+            rate = (f"{e.get('rate_from', 0):.1f}&rarr;"
+                    f"{e.get('rate_to', 0):.1f}")
+            gpu = (f"{e.get('gpu_from', -1)}&rarr;{e.get('gpu_to', -1)}")
+            body.append(
+                f"<tr><td>{e.get('t_s', 0):.2f}</td>"
+                f"<td>{html.escape(e.get('kind', ''))}</td>"
+                f"<td>{html.escape(e.get('workload', ''))}</td>"
+                f"<td>{html.escape(e.get('cause', ''))}</td>"
+                f"<td>{rate}</td><td>{gpu}</td></tr>")
+        body.append("</table>")
+
+    for title, key in (("overhead (wall ms)", "walls_ms"),
+                       ("counters", "counters"), ("gauges", "gauges")):
+        d = s.get(key, {})
+        if d:
+            body.append(f"<h2>{title}</h2><table>")
+            for k, v in d.items():
+                body.append(f"<tr><td>{html.escape(k)}</td><td>{v}</td></tr>")
+            body.append("</table>")
+
+    return ("<!doctype html><html><head><meta charset='utf-8'>"
+            "<title>telemetry report</title><style>"
+            "body{font:13px monospace;margin:2em;color:#111}"
+            "table{border-collapse:collapse;margin:0.5em 0}"
+            "td,th{border:1px solid #ccc;padding:2px 8px;text-align:left}"
+            ".chart{display:flex;align-items:center;gap:8px;margin:2px 0}"
+            ".lbl{min-width:8em;display:inline-block}"
+            "</style></head><body>"
+            + "\n".join(body) + "</body></html>")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("log", help="telemetry JSONL log (Telemetry.to_jsonl)")
+    ap.add_argument("--html", type=str, default=None,
+                    help="write a self-contained HTML report here")
+    ap.add_argument("--top", type=int, default=8,
+                    help="workloads/devices per table/chart (default 8)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on a malformed log")
+    args = ap.parse_args(argv)
+
+    data = load(args.log)
+    print(terminal_report(data, top=args.top))
+    if args.html:
+        with open(args.html, "w") as f:
+            f.write(render_html(data, top=args.top))
+        print(f"# wrote {args.html}")
+    problems = check(data)
+    for p in problems:
+        print(f"# MALFORMED: {p}")
+    return 1 if (args.check and problems) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

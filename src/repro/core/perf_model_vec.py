@@ -378,6 +378,29 @@ class VecCluster:
         pass; the cached invariants are only used inside `alloc_all`)."""
         return predict_device_vec(self.placed(q), self.hw)
 
+    def interference_snapshot(self) -> List[Dict[str, float]]:
+        """Per-device interference terms straight from the cached
+        invariants (no re-evaluation): entry count, Sigma-power,
+        Sigma-cache, Delta_sch (Eq. 6) and the implied power demand
+        (Eq. 10) — the planner-side view `repro.serving.telemetry`
+        pairs with the simulator's measured timelines.  Empty devices
+        are skipped (their sums are zero by construction)."""
+        hw = self.hw
+        out: List[Dict[str, float]] = []
+        for q in range(self.d):
+            n = int(self.n[q])
+            if n == 0:
+                continue
+            out.append({
+                "device": q, "n": n,
+                "power_sum": float(self.power_sum[q]),
+                "cache_sum": float(self.cache_sum[q]),
+                "delta_sch": (0.0 if n <= 1
+                              else hw.alpha_sch * n + hw.beta_sch),
+                "p_demand": float(hw.idle_power + self.power_sum[q]),
+            })
+        return out
+
     # -- Algorithm 2, batched over every open device ------------------------
 
     def alloc_all(self, spec: WorkloadSpec, coeffs: WorkloadCoefficients,

@@ -635,8 +635,8 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  batch: Optional[str] = None,
                  exclude_gpus: Optional[frozenset] = None,
                  pin: Optional[Tuple[int, float]] = None,
-                 max_devices: Optional[int] = None
-                 ) -> ProvisioningPlan:
+                 max_devices: Optional[int] = None,
+                 telemetry=None) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
     with Alg. 2 reallocation, or a fresh device.  The vec engine scores
@@ -657,7 +657,13 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     fallback raises `DeviceCapError` (with ``per_hw``) instead of
     growing past the cap.  Every `InfeasibleError` raised here carries
     ``per_hw`` diagnostics, so overload decisions and sweep logs can
-    report WHY a grant failed."""
+    report WHY a grant failed.
+
+    ``telemetry`` (duck-typed `repro.serving.telemetry.Telemetry`, kept
+    untyped to avoid a core->serving import) counts the op under
+    ``prov_add`` — every edit op takes the same keyword."""
+    if telemetry is not None:
+        telemetry.count("prov_add")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     bm = resolve(cfg.budget)
     c = profiles[spec.model]
@@ -734,11 +740,14 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
 # has a scalar-oracle twin pinned by tests.
 # ---------------------------------------------------------------------------
 
-def remove_workload(plan: ProvisioningPlan, name: str) -> ProvisioningPlan:
+def remove_workload(plan: ProvisioningPlan, name: str, *,
+                    telemetry=None) -> ProvisioningPlan:
     """Drop one workload's placement (departure).  Remaining residents
     keep their Alg. 2 grants — with less interference on the device they
     can only get faster, so the plan stays feasible; reclaiming the
     slack is the next resize's job."""
+    if telemetry is not None:
+        telemetry.count("prov_remove")
     new_plan = ProvisioningPlan(hardware=plan.hardware)
     new_plan.placements = [p for p in plan.placements
                            if p.workload.name != name]
@@ -755,7 +764,8 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                     engine: Optional[str] = None,
                     budget: Optional[BudgetLike] = None,
                     batch: Optional[str] = None,
-                    max_devices: Optional[int] = None) -> ProvisioningPlan:
+                    max_devices: Optional[int] = None,
+                    telemetry=None) -> ProvisioningPlan:
     """Re-place one workload under a NEW spec (arrival-rate / SLO drift):
     recompute Theorem 1 at the new rate, re-run Alg. 2 on its CURRENT
     device (the O(1-device) fast path — covers both growth, absorbing
@@ -763,6 +773,8 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     `migrate_workload` when the current device can no longer host it.
     Raised `InfeasibleError`s carry ``per_hw`` diagnostics; the migrate
     fallback honors ``max_devices``."""
+    if telemetry is not None:
+        telemetry.count("prov_resize")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     bm = resolve(cfg.budget)
     c = profiles[spec.model]
@@ -817,13 +829,17 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                      budget: Optional[BudgetLike] = None,
                      batch: Optional[str] = None,
                      exclude_gpus: Optional[frozenset] = None,
-                     max_devices: Optional[int] = None
-                     ) -> ProvisioningPlan:
+                     max_devices: Optional[int] = None,
+                     telemetry=None) -> ProvisioningPlan:
     """Move one workload to the minimum-interference device that can
     host its (possibly updated) spec — remove + `add_workload`, so the
     destination can also be a fresh device (`self_grant`).
     ``exclude_gpus`` bans devices (health-layer quarantine);
-    ``max_devices`` caps the fresh-device fallback."""
+    ``max_devices`` caps the fresh-device fallback.  ``telemetry``
+    counts ONE ``prov_migrate`` (the inner remove/add are not
+    double-counted)."""
+    if telemetry is not None:
+        telemetry.count("prov_migrate")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     return add_workload(remove_workload(plan, spec.name), spec, profiles,
                         hw, config=cfg, exclude_gpus=exclude_gpus,
@@ -868,11 +884,14 @@ def split_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    engine: Optional[str] = None,
                    budget: Optional[BudgetLike] = None,
                    batch: Optional[str] = None,
-                   max_devices: Optional[int] = None) -> ProvisioningPlan:
+                   max_devices: Optional[int] = None,
+                   telemetry=None) -> ProvisioningPlan:
     """Scale-OUT edit: serve ``spec`` (base name, full rate) with k
     replicas, k strictly above the current count.  Each replica gets an
     equal rate share (summing to ``spec.rate_rps``), its own Theorem-1
     batch/budget at the share rate, and a min-interference placement."""
+    if telemetry is not None:
+        telemetry.count("prov_split")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     k_cur = len(replication.group_placements(plan.placements)
                 .get(spec.name, ()))
@@ -889,11 +908,14 @@ def merge_workload(plan: ProvisioningPlan, spec: WorkloadSpec, k: int,
                    engine: Optional[str] = None,
                    budget: Optional[BudgetLike] = None,
                    batch: Optional[str] = None,
-                   max_devices: Optional[int] = None) -> ProvisioningPlan:
+                   max_devices: Optional[int] = None,
+                   telemetry=None) -> ProvisioningPlan:
     """Scale-IN edit: drop to k replicas (k below the current count).
     Survivor shares renormalize to ``spec.rate_rps`` — the merged rate
     is re-split equally, never silently lost; ``k = 1`` returns the
     workload to its plain (unreplicated) name."""
+    if telemetry is not None:
+        telemetry.count("prov_merge")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     k_cur = len(replication.group_placements(plan.placements)
                 .get(spec.name, ()))

@@ -60,6 +60,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -73,6 +75,7 @@ from repro.core.queueing import BudgetLike, QUEUEING, resolve
 from repro.core.types import (HardwareSpec, Placement, PlannerConfig,
                               ProvisioningPlan, WorkloadCoefficients,
                               WorkloadSpec, planner_config)
+from repro.serving import telemetry as telemetry_mod
 from repro.serving.simulator import ServedInstance
 
 
@@ -199,6 +202,13 @@ class ControllerConfig:
                                  # ``config=`` argument overrides this,
                                  # which overrides the legacy ``k_max``
                                  # field above.
+    # -- observability --
+    cost_retention: int = 4096   # rows kept in `Controller.costs` (the
+                                 # (t_s, $/h) ring sampled every tick);
+                                 # the ring's ``total``/``dropped``
+                                 # expose overflow.  The unbounded
+                                 # ``cost_series`` list this replaces
+                                 # grew for the whole run
 
 
 class ArrivalEstimator:
@@ -346,10 +356,12 @@ class HealthMonitor:
     """
 
     def __init__(self, profiles: Dict[str, WorkloadCoefficients],
-                 hw: HardwareSpec, cfg: ControllerConfig):
+                 hw: HardwareSpec, cfg: ControllerConfig,
+                 telemetry: Optional["telemetry_mod.Telemetry"] = None):
         self.profiles = profiles
         self.hw = hw
         self.cfg = cfg
+        self.telemetry = telemetry
         self.quarantined: Dict[int, tuple] = {}   # gpu -> (kind, t_s)
         self._completed: Dict[int, int] = {}      # inst idx -> last count
         self._seen: Dict[int, int] = {}           # inst idx -> consumed lats
@@ -470,6 +482,13 @@ class HealthMonitor:
             fleet = float(np.median(list(score.values()))) if score else 0.0
             raw = {g: float(np.median([r for _, r in samples]))
                    for g, samples in dev_samples.items()}
+            if self.telemetry is not None:
+                # the measured-vs-fitted residual series: exactly the
+                # triple the quarantine comparison below reads, recorded
+                # instead of discarded (docs/observability.md, drift)
+                for g in sorted(dev_samples):
+                    self.telemetry.record_drift(
+                        now_s, g, raw[g], score.get(g, 0.0), fleet)
             for g in sorted(by_gpu):
                 if g in self.quarantined or g in dead:
                     continue
@@ -720,11 +739,13 @@ class Reconciler:
                  budget: Optional[BudgetLike] = None,
                  batch: Optional[str] = None,
                  engine: Optional[str] = None,
-                 cfg: Optional[ControllerConfig] = None):
+                 cfg: Optional[ControllerConfig] = None,
+                 telemetry: Optional["telemetry_mod.Telemetry"] = None):
         self.plan = plan
         self.profiles = profiles
         self.hw = hw
         self.cfg = cfg or ControllerConfig()
+        self.telemetry = telemetry
         # planner-knob resolution: config= > cfg.planner > the legacy
         # keywords over the controller's joint-batch default
         base = (self.cfg.planner if self.cfg.planner is not None
@@ -1069,28 +1090,37 @@ class Reconciler:
     def _remove_name(self, name: str) -> None:
         if self._state is not None:
             self._state.remove(name)
+            if self.telemetry is not None:
+                self.telemetry.count("prov_remove")
         else:
-            self.plan = prov.remove_workload(self.plan, name)
+            self.plan = prov.remove_workload(self.plan, name,
+                                             telemetry=self.telemetry)
 
     def _add_spec(self, spec: WorkloadSpec,
                   pin: Optional[tuple] = None) -> None:
         if self._state is not None:
             self._state.add(spec, batch=self.batch, pin=pin)
+            if self.telemetry is not None:
+                self.telemetry.count("prov_add")
         else:
             self.plan = prov.add_workload(
                 self.plan, spec, self.profiles, self.hw,
                 config=self.planner.replace(budget=self.bm),
                 exclude_gpus=frozenset(self.quarantined) or None,
-                pin=pin, max_devices=self.max_devices)
+                pin=pin, max_devices=self.max_devices,
+                telemetry=self.telemetry)
 
     def _resize_spec(self, spec: WorkloadSpec) -> None:
         if self._state is not None:
             self._state.resize(spec, batch=self.batch)
+            if self.telemetry is not None:
+                self.telemetry.count("prov_resize")
         else:
             self.plan = prov.resize_workload(
                 self.plan, spec, self.profiles, self.hw,
                 config=self.planner.replace(budget=self.bm),
-                max_devices=self.max_devices)
+                max_devices=self.max_devices,
+                telemetry=self.telemetry)
 
     def _validate(self, reps: List[WorkloadSpec],
                   c: WorkloadCoefficients) -> bool:
@@ -1451,11 +1481,14 @@ class Controller:
                  budget: Optional[BudgetLike] = None,
                  batch: Optional[str] = None,
                  engine: Optional[str] = None,
-                 cfg: Optional[ControllerConfig] = None):
+                 cfg: Optional[ControllerConfig] = None,
+                 telemetry: Optional["telemetry_mod.Telemetry"] = None):
         self.cfg = cfg or ControllerConfig()
+        self.telemetry = telemetry
         self.reconciler = Reconciler(plan, profiles, hw, config=config,
                                      budget=budget, batch=batch,
-                                     engine=engine, cfg=self.cfg)
+                                     engine=engine, cfg=self.cfg,
+                                     telemetry=telemetry)
         bm = self.reconciler.base_bm
         # one estimator per BASE workload: replicas of one workload feed
         # a single merged arrival estimate (their slices partition the
@@ -1466,15 +1499,19 @@ class Controller:
                 burstiness=bm.burstiness)
             for base, group in replication.group_placements(
                 plan.placements).items()}
-        self.health = (HealthMonitor(profiles, hw, self.cfg)
+        self.health = (HealthMonitor(profiles, hw, self.cfg,
+                                     telemetry=telemetry)
                        if self.cfg.health else None)
         self._canary = None
         self._last_s = 0.0
         self.n_ticks = 0
         # (t_s, $/h) after each tick: the cost the reconciled plan would
         # bill, so benchmarks can integrate savings from departures and
-        # the price of ramp capacity over the run, not just endpoints
-        self.cost_series: List[tuple] = []
+        # the price of ramp capacity over the run, not just endpoints.
+        # Bounded ring (cfg.cost_retention newest rows; .total/.dropped
+        # count overflow) — the unbounded list it replaces is still
+        # readable through the deprecated `cost_series` property.
+        self.costs = telemetry_mod.RingBuffer(self.cfg.cost_retention)
 
     @property
     def plan(self) -> ProvisioningPlan:
@@ -1483,6 +1520,17 @@ class Controller:
     @property
     def edits(self) -> List[PlanEdit]:
         return self.reconciler.edits
+
+    @property
+    def cost_series(self) -> List[tuple]:
+        """Deprecated alias for ``list(self.costs)`` — the same
+        (t_s, $/h) tuples the unbounded list used to hold, now capped
+        at ``ControllerConfig.cost_retention`` rows."""
+        warnings.warn(
+            "Controller.cost_series is deprecated; read Controller.costs "
+            "(a bounded telemetry.RingBuffer of the same tuples)",
+            DeprecationWarning, stacklevel=2)
+        return self.costs.list()
 
     def attach_canary(self, canary) -> None:
         """Simulator-installed health probe: ``canary(gpu, now_ms)``
@@ -1517,6 +1565,18 @@ class Controller:
                 "reservations are invisible to the plan edits and an "
                 "activation could overcommit the device")
         window_ms = max((now_s - self._last_s) * 1000.0, 1e-9)
+        tm = self.telemetry
+        if tm is not None:
+            # pre-edit placement snapshot + stream cursors, so every
+            # decision this tick drains into an enriched ControlEvent
+            t0 = _time.perf_counter()
+            n_edits0 = len(self.reconciler.edits)
+            n_adm0 = len(self.reconciler.admission_log)
+            pre_map: Dict[str, List[tuple]] = {}
+            for p in self.plan.placements:
+                pre_map.setdefault(
+                    replication.base_name(p.workload.name),
+                    []).append((p.gpu, p.batch, p.r))
         backlog: Dict[str, float] = {}
         by_base: Dict[str, List[ServedInstance]] = {}
         for inst in instances:
@@ -1536,9 +1596,17 @@ class Controller:
             est.observe(merged, window_ms)
             backlog[base] = float(sum(len(i.queue) for i in insts_b))
         changed = False
+        rep = None
         if self.health is not None:
             rep = self.health.observe(now_s, instances,
                                       canary=self._canary)
+        if tm is not None:
+            # Sec. 5.5-style phase walls: probe = estimator + health
+            # observation, solve = plan reconciliation, apply = mapping
+            # the plan onto live instances
+            t1 = _time.perf_counter()
+            tm.add_wall("ctl_probe", (t1 - t0) * 1000.0)
+        if rep is not None:
             if rep.readmit:
                 for g in rep.readmit:
                     self.health.quarantined.pop(g, None)
@@ -1552,11 +1620,91 @@ class Controller:
                 changed |= self.reconciler.evict(now_s)
         changed |= self.reconciler.reconcile(now_s, self.estimators,
                                              backlog, window_ms)
+        solve_ms = 0.0
+        if tm is not None:
+            t2 = _time.perf_counter()
+            solve_ms = (t2 - t1) * 1000.0
+            tm.add_wall("ctl_solve", solve_ms)
         if changed:
             self._apply_plan(instances)
+        if tm is not None:
+            tm.add_wall("ctl_apply", (_time.perf_counter() - t2) * 1000.0)
+            self._drain_events(now_s, rep, pre_map, n_edits0, n_adm0,
+                               solve_ms)
+            tm.gauge("probe_hits", self.reconciler.probes.hits)
+            tm.gauge("probe_misses", self.reconciler.probes.misses)
         self._last_s = now_s
         self.n_ticks += 1
-        self.cost_series.append((now_s, self.plan.cost_per_hour()))
+        self.costs.append((now_s, self.plan.cost_per_hour()))
+
+    # decision kind -> the signal that drives it (docs/observability.md)
+    _CAUSE = {"resize": "drift", "split": "drift", "merge": "drift",
+              "infeasible": "drift", "migrate": "health",
+              "readmit": "health", "preempt": "admission",
+              "shed": "admission", "admit": "admission",
+              "capped": "admission", "add": "arrival",
+              "remove": "departure"}
+
+    def _drain_events(self, now_s: float, rep, pre_map, n_edits0: int,
+                      n_adm0: int, solve_ms: float) -> None:
+        """Turn this tick's decisions into typed `telemetry.ControlEvent`
+        records: quarantine verdicts first (they precede reconciliation),
+        then every new `PlanEdit` enriched with the driving estimator's
+        state and the pre/post placement of the touched workload, then
+        admission-log entries with no PlanEdit twin (brownout,
+        shed-departed).  ``wall_ms`` on each event is the tick's solve
+        wall — a host measurement, excluded from engine identity."""
+        tm = self.telemetry
+        cfg = self.cfg
+        rec = self.reconciler
+        if rep is not None:
+            for kind_c, gpus in (("failed", rep.dead),
+                                 ("straggler", rep.stragglers)):
+                for g in gpus:
+                    tm.record_event(telemetry_mod.ControlEvent(
+                        t_s=now_s, kind="quarantine",
+                        workload=f"device:{g}", cause=kind_c,
+                        gpu_from=g, wall_ms=solve_ms))
+        post_map: Dict[str, List[tuple]] = {}
+        if len(rec.edits) > n_edits0:
+            for p in self.plan.placements:
+                post_map.setdefault(
+                    replication.base_name(p.workload.name),
+                    []).append((p.gpu, p.batch, p.r))
+        for e in rec.edits[n_edits0:]:
+            pre = pre_map.get(e.workload)
+            post = post_map.get(e.workload)
+            ev = telemetry_mod.ControlEvent(
+                t_s=e.t_s, kind=e.action, workload=e.workload,
+                cause=self._CAUSE.get(e.action, "drift"),
+                rate_from=e.rate_from, rate_to=e.rate_to,
+                burstiness=e.burstiness, replicas=e.replicas,
+                pre=None if pre is None else tuple(pre),
+                post=None if post is None else tuple(post),
+                wall_ms=solve_ms)
+            if pre is not None and post is not None \
+                    and len(pre) == 1 and len(post) == 1:
+                ev.gpu_from, ev.gpu_to = pre[0][0], post[0][0]
+            est = self.estimators.get(e.workload)
+            if est is not None:
+                ev.rate_rps = est.rate_rps
+                ev.trend_rps = est.trend_rps
+                ev.cv2 = est.cv2
+                ev.projected_rps = est.projected_rps
+                ev.rate_sigma = est.rate_sigma()
+                # the effective hysteresis bands at decision time: the
+                # configured band widened to noise_sigmas sigmas of the
+                # smoothed counting noise (see Reconciler._drift_kind)
+                noise = (cfg.noise_sigmas * ev.rate_sigma / e.rate_from
+                         if e.rate_from > 0.0 else 0.0)
+                ev.band_up = max(cfg.band_up, noise)
+                ev.band_down = max(cfg.band_down, noise)
+            tm.record_event(ev)
+        for (t_e, event, detail) in rec.admission_log[n_adm0:]:
+            if event in ("brownout", "shed-departed"):
+                tm.record_event(telemetry_mod.ControlEvent(
+                    t_s=t_e, kind=event, workload=str(detail),
+                    cause="admission", wall_ms=solve_ms))
 
     def _apply_plan(self, instances: List[ServedInstance]) -> None:
         """Map the reconciled plan onto the live instances: r / batch /

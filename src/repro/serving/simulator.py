@@ -89,6 +89,7 @@ from repro.core.types import HardwareSpec, ProvisioningPlan, WorkloadSpec
 from repro.profiling.metrics import ServedModelDesc
 from repro.serving import faults as faults_mod
 from repro.serving import physics
+from repro.serving import telemetry as telemetry_mod
 from repro.serving import traces as traces_mod
 
 MONITOR_WINDOW_MS = 1000.0       # P99 monitor lookback (1 s, paper Sec. 4.2)
@@ -574,6 +575,29 @@ def _dispatch_adjust(adjust_fn: AdjustFn, now_s: float,
     return changed_all, new_all, wall_ms
 
 
+def _emit_reconfigs(telemetry, now_ms: float,
+                    changed: List[Tuple[ServedInstance, int]],
+                    new: List[ServedInstance], wall_ms: float) -> None:
+    """One typed ``reconfig`` event per placement mutation the adjust
+    tick actually applied — the same (changed, new) sets `n_reconfigs`
+    counts, shared by both engines, so the event log reconciles
+    EXACTLY against ``SimResult.stats["n_reconfigs"]`` (the overflow-
+    immune ``reconfig_events`` counter survives ring eviction).
+    ``wall_ms`` is the tick's adjust_fn wall (host-side; excluded from
+    the engine-identity contract)."""
+    t_s = now_ms / 1000.0
+    for inst, old_g in changed:
+        telemetry.record_event(telemetry_mod.ControlEvent(
+            t_s=t_s, kind="reconfig", workload=inst.spec.name,
+            cause="adjust", post=((inst.gpu, inst.batch, inst.r),),
+            gpu_from=old_g, gpu_to=inst.gpu, wall_ms=wall_ms))
+    for inst in new:
+        telemetry.record_event(telemetry_mod.ControlEvent(
+            t_s=t_s, kind="reconfig", workload=inst.spec.name,
+            cause="scale_out", post=((inst.gpu, inst.batch, inst.r),),
+            gpu_from=-1, gpu_to=inst.gpu, wall_ms=wall_ms))
+
+
 def _sync_recent_arrivals(instances: List[ServedInstance],
                           arrivals: List[np.ndarray], now: float,
                           window_ms: float) -> None:
@@ -843,7 +867,7 @@ def _finalize(instances: List[ServedInstance], duration_s: float,
 def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                      shadow_extra, monitor_period_s, adjust_fn,
                      adjust_period_s, record_timeline, adjust_scope,
-                     trace, faults) -> SimResult:
+                     trace, faults, telemetry=None) -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0                      # ms
     instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
@@ -893,7 +917,7 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
 
     timeline: List[Dict] = []
     # last-window latencies, pruned each monitor tick (bounded deque, NOT
-    # an ever-growing list): (done_time, latency) per request
+    # an ever-growing list): (done_time, latency, wait) per request
     recent: List[deque] = [deque() for _ in instances]
     n_passes = 0
     peak_window = 0
@@ -939,7 +963,7 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
             lat = done - arr
             inst.latencies.append(lat)
             inst.waits.append(now - arr)
-            recent[i].append((done, lat))
+            recent[i].append((done, lat, now - arr))
         if fault_dones is not None:
             fault_dones[i].extend([done] * nb)
         inst.completed += nb
@@ -962,6 +986,7 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
             try_serve(idx, now)
         elif kind == "monitor":
             cutoff = now - MONITOR_WINDOW_MS
+            tl_rows = [] if telemetry is not None else None
             for i, inst in enumerate(instances):
                 dq = recent[i]
                 while dq and dq[0][0] <= cutoff:
@@ -970,8 +995,21 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 # in flight has its (done, lat) records stamped in the
                 # future, and with passes longer than the lookback the
                 # window is legitimately empty between completions
-                window = [l for (d, l) in dq if d <= now]
+                window = [l for (d, l, _) in dq if d <= now]
                 peak_window = max(peak_window, len(window))
+                if tl_rows is not None:
+                    # done stamps are nondecreasing per instance, so the
+                    # window is exactly the first len(window) entries
+                    k = len(window)
+                    stamps_w: List[float] = []
+                    waits_w: List[float] = []
+                    for (d, _, wt) in dq:
+                        if len(stamps_w) >= k:
+                            break
+                        stamps_w.append(d)
+                        waits_w.append(wt)
+                    tl_rows.append((i, window, waits_w, stamps_w,
+                                    len(inst.queue)))
                 if record_timeline:
                     timeline.append({
                         "t_s": now / 1000.0, "workload": inst.spec.name,
@@ -985,6 +1023,8 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                     if float(np.percentile(window, 99)) > inst.spec.slo_ms:
                         # switch to the pre-launched shadow process (Sec. 4.2)
                         inst.shadow_active = True
+            if tl_rows is not None:
+                telemetry.sample_tick(now, instances, by_gpu, hw, tl_rows)
         elif kind == "adjust" and adjust_fn is not None:
             _sync_recent_arrivals(instances, arrivals, now, adj_window_ms)
             n_before = len(instances)
@@ -992,6 +1032,9 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 adjust_fn, now / 1000.0, instances, by_gpu, adjust_scope)
             n_reconfigs += len(changed) + len(new)
             adjust_wall_ms += wall_ms
+            if telemetry is not None:
+                _emit_reconfigs(telemetry, now, changed, new, wall_ms)
+                telemetry.add_wall("sim_adjust", wall_ms)
             for j in range(n_before, len(instances)):
                 # appended replica: fresh per-instance RNG streams keyed
                 # by its (new, never-reused) global index — the vec
@@ -1052,6 +1095,10 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 for i in by_gpu.get(g, []):
                     try_serve(i, now)      # restart wake: drain backlog
 
+    if telemetry is not None:
+        # per-pass scalar physics calls: the oracle's "dispatch" unit
+        # (engine-specific by design, like the vec table-build counts)
+        telemetry.count("dispatch_scalar", n_passes)
     stats = _stats(sum(len(a) for a in arrivals), n_passes, peak_window,
                    wall0, n_reconfigs, adjust_wall_ms)
     if fstate is not None:
@@ -1199,7 +1246,8 @@ def _build_tables_chunk(instances: List[ServedInstance],
 def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                   shadow_extra, monitor_period_s, adjust_fn,
                   adjust_period_s, record_timeline, adjust_scope,
-                  trace, faults, backend="numpy") -> SimResult:
+                  trace, faults, telemetry=None,
+                  backend="numpy") -> SimResult:
     wall0 = _time.perf_counter()
     horizon = duration_s * 1000.0
     instances, by_gpu, arrivals, noise_a, noise_s, router = _setup(
@@ -1247,13 +1295,21 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
     # per-instance RNG streams make this reordering exact vs the
     # device-major formulation.
     tables: Dict[int, _LatTable] = {}
+    dispatch_key = "dispatch_jax" if backend == "jax" else "dispatch_numpy"
 
     def rebuild_gpu(g: int) -> None:
         tables.update(_build_tables_bulk(instances, {g: by_gpu[g]}, hw,
                                          backend=backend))
+        if telemetry is not None:
+            telemetry.count(dispatch_key)
 
     tables.update(_build_tables_bulk(instances, by_gpu, hw,
                                      backend=backend))
+    if telemetry is not None:
+        # table-build dispatches: the vec engine's physics-call unit
+        # (engine/backend-specific by design; the identity contract
+        # covers events + timelines, not dispatch counters)
+        telemetry.count(dispatch_key)
 
     def run_passes(i: int, T: float) -> None:
         """Advance instance i's pass recurrence up to epoch boundary T.
@@ -1348,6 +1404,7 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
         dirty: set = set()             # device ids needing table rebuilds
         if is_mon:
             cutoff = T - MONITOR_WINDOW_MS
+            tl_rows = [] if telemetry is not None else None
             for i in range(n_inst):
                 inst = instances[i]
                 dn = done_flat[i]
@@ -1360,9 +1417,17 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 # pass may complete past T (or past the horizon)
                 end = bisect_right(dn, T, w)
                 peak_window = max(peak_window, end - w)
-                if not record_timeline and not shadow:
+                if tl_rows is None and not record_timeline and not shadow:
                     continue           # window list only needed below
                 window = inst.latencies[w:end]
+                if tl_rows is not None:
+                    # queue depth at T: arrivals admitted but not yet
+                    # consumed by a pass — identical to the oracle's
+                    # len(inst.queue) at the tick
+                    tl_rows.append((i, window, inst.waits[w:end],
+                                    dn[w:end],
+                                    bisect_right(arr_l[i], T, jptr[i])
+                                    - jptr[i]))
                 if record_timeline:
                     rows.append((T, i, {
                         "t_s": T / 1000.0, "workload": inst.spec.name,
@@ -1376,6 +1441,8 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                     if float(np.percentile(window, 99)) > inst.spec.slo_ms:
                         inst.shadow_active = True
                         dirty.add(inst.gpu)
+            if tl_rows is not None:
+                telemetry.sample_tick(T, instances, by_gpu, hw, tl_rows)
         if is_adj and adjust_fn is not None:
             for i in range(n_inst):
                 inst = instances[i]
@@ -1389,6 +1456,9 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 adjust_fn, T / 1000.0, instances, by_gpu, adjust_scope)
             n_reconfigs += len(changed) + len(new)
             adjust_wall_ms += wall_ms
+            if telemetry is not None:
+                _emit_reconfigs(telemetry, T, changed, new, wall_ms)
+                telemetry.add_wall("sim_adjust", wall_ms)
             for j in range(n_before, len(instances)):
                 # appended replica: same RNG keys as the scalar oracle
                 noise_a.append(_NoiseStream(
@@ -1489,6 +1559,7 @@ def simulate_plan(plan: ProvisioningPlan,
                   record_timeline: bool = False,
                   trace: Optional["traces_mod.Trace"] = None,
                   faults: Optional["faults_mod.FaultSchedule"] = None,
+                  telemetry: Optional["telemetry_mod.Telemetry"] = None,
                   engine: str = "vec",
                   backend: str = "numpy") -> SimResult:
     """Run the serving cluster for `duration_s` simulated seconds.
@@ -1525,6 +1596,14 @@ def simulate_plan(plan: ProvisioningPlan,
     ``downtime_ms`` / ``lost_requests`` / ``n_recoveries`` /
     ``recovery_mean_ms``.  ``faults=None`` leaves every code path —
     and every output byte — exactly as before.
+
+    ``telemetry`` attaches a `repro.serving.telemetry.Telemetry`
+    recorder: per-monitor-tick workload/device metric timelines and one
+    typed ``reconfig`` event per placement mutation at adjust ticks
+    (see `docs/observability.md`).  ``telemetry=None`` (default) is
+    byte-identical to not having the feature at all, and for a fixed
+    seed both engines record identical event/timeline content (host
+    wall-time fields excepted).
     """
     if adjust_scope not in ("device", "cluster"):
         raise ValueError(f"unknown adjust_scope {adjust_scope!r}")
@@ -1535,7 +1614,8 @@ def simulate_plan(plan: ProvisioningPlan,
                   monitor_period_s=monitor_period_s, adjust_fn=adjust_fn,
                   adjust_period_s=adjust_period_s,
                   record_timeline=record_timeline,
-                  adjust_scope=adjust_scope, trace=trace, faults=faults)
+                  adjust_scope=adjust_scope, trace=trace, faults=faults,
+                  telemetry=telemetry)
     if engine == "vec":
         return _simulate_vec(plan, models, hw, backend=backend, **kwargs)
     if engine != "scalar":

@@ -38,6 +38,8 @@ MODULES = {
     "faults": "src/repro/serving/faults.py",
     "controller": "src/repro/serving/controller.py",
     "workload": "src/repro/serving/workload.py",
+    "telemetry": "src/repro/serving/telemetry.py",
+    "telemetry_report": "benchmarks/telemetry_report.py",
 }
 
 # class-level references: `VecCluster.alloc_all`, `SimResult.stats`, ...
@@ -65,6 +67,9 @@ CLASSES = {
     "Controller": "src/repro/serving/controller.py",
     "PlanState": "src/repro/serving/controller.py",
     "PlanEdit": "src/repro/serving/controller.py",
+    "Telemetry": "src/repro/serving/telemetry.py",
+    "RingBuffer": "src/repro/serving/telemetry.py",
+    "ControlEvent": "src/repro/serving/telemetry.py",
 }
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

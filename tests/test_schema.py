@@ -1,0 +1,157 @@
+"""Golden-schema pins: the EXACT key sets of the JSON surfaces other
+tooling consumes — `SimResult.stats`, `SimResult.per_workload`, and
+each sweep's row dump.  A new key is a deliberate schema change: update
+the golden set here in the same PR that adds it.  Conditional keys
+(overload ``classN_*`` / ``shed_requests``, fault accounting, telemetry
+columns) are asserted ABSENT when their feature is off — that absence
+is the byte-identity story (docs/observability.md).
+"""
+import os
+import sys
+
+import pytest
+
+from repro.core import provisioner as prov
+from repro.core.experiments import fitted_context
+from repro.core.types import PlannerConfig
+from repro.serving.simulator import simulate_plan
+from repro.serving.workload import models, synthetic_workloads
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+STATS_KEYS = {
+    "n_requests", "n_passes", "n_events", "wall_s", "events_per_s",
+    "peak_window", "n_reconfigs", "reconfig_latency_ms",
+    "e2e_p50_ms", "e2e_p99_ms", "wait_mean_ms", "wait_p99_ms",
+}
+PER_WORKLOAD_KEYS = {
+    "p99_ms", "p50_ms", "avg_ms", "wait_avg_ms", "wait_p99_ms", "rps",
+    "r_final", "batch_final", "shadow_used", "n_replicas",
+}
+# conditional stats: only under overload admission activity / faults
+OVERLOAD_STATS = {"shed_requests", "class0_violation_rate",
+                  "class0_shed_rate", "class0_workloads",
+                  "brownout_depth_max", "brownout_ticks"}
+FAULT_STATS = {"n_failures", "downtime_ms", "lost_requests",
+               "n_recoveries", "recovery_mean_ms"}
+
+DYNAMIC_ROW_KEYS = {
+    "bench", "m", "scenario", "backend", "hardware", "n_devices",
+    "provision_wall_s", "static_violations", "controlled_violations",
+    "static_violation_rate", "controlled_violation_rate", "n_reconfigs",
+    "n_edits", "n_splits", "n_merges", "split_workloads", "n_replicas",
+    "reconfig_latency_ms", "probe_hits", "probe_misses",
+    "plan_identical", "static_cost_per_hour", "final_cost_per_hour",
+    "mean_cost_per_hour", "static_sim_wall_s", "controlled_sim_wall_s",
+    "sim_events_per_s", "sim_duration_s",
+}
+DYNAMIC_OVERLOAD_KEYS = {
+    "max_devices", "hi_workloads", "lo_workloads", "hi_violations",
+    "lo_violations", "shed_requests", "lo_shed_rate", "hi_shed_rate",
+    "hi_violation_rate", "brownout_depth_max", "brownout_ticks",
+    "admission_preemptions", "admission_shed_workloads",
+    "admission_readmits",
+}
+DYNAMIC_TELEMETRY_KEYS = {
+    "telemetry_wall_s", "telemetry_overhead", "telemetry_events",
+    "telemetry_reconfig_ok", "telemetry_log",
+}
+AVAILABILITY_ROW_KEYS = {
+    "bench", "m", "scenario", "backend", "hardware", "n_devices",
+    "n_failures", "off_violation_rate", "on_violation_rate", "off", "on",
+    "n_reconfigs", "n_migrations", "n_readmits", "n_edits",
+    "plan_identical", "off_sim_wall_s", "on_sim_wall_s",
+    "sim_duration_s",
+}
+AVAILABILITY_STRAGGLER_KEYS = {
+    "n_stragglers", "victim_tail_ok", "victim_tail_worst",
+}
+AVAILABILITY_TELEMETRY_KEYS = {
+    "telemetry_events", "telemetry_drift_rows", "telemetry_reconfig_ok",
+    "telemetry_log",
+}
+SCALE_ROW_KEYS = {
+    "bench", "m", "budget", "backend", "wall_s", "target_s",
+    "n_devices", "hardware", "cost_per_hour", "predicted_violations",
+    "scalar_wall_s", "matches_scalar_oracle", "sim_devices",
+    "sim_workloads", "sim_duration_s", "sim_target_s", "sim_wall_s",
+    "sim_violations", "sim_requests", "sim_passes", "sim_events_per_s",
+    "sim_wait_mean_ms", "sim_wait_p99_ms", "gap",
+    "half_n_devices", "half_cost_per_hour", "half_predicted_violations",
+    "half_sim_violations", "half_gap",
+    "repl_n_devices", "repl_cost_per_hour", "repl_predicted_violations",
+    "repl_sim_violations", "repl_split_workloads", "repl_n_replicas",
+    "repl_gap",
+    "half_repl_n_devices", "half_repl_cost_per_hour",
+    "half_repl_predicted_violations", "half_repl_sim_violations",
+    "half_repl_split_workloads", "half_repl_n_replicas",
+    "half_repl_gap",
+}
+
+
+@pytest.fixture(scope="module")
+def sim_result():
+    ctx = fitted_context("tpu-v5e")
+    specs = synthetic_workloads(6, seed=0)
+    cfg = PlannerConfig()
+    plan, hw = prov.provision_cheapest(
+        specs, {ctx.hw.name: ctx.profiles}, [ctx.hw], config=cfg)
+    return simulate_plan(plan, models(), hw, duration_s=2.0, seed=0)
+
+
+def test_sim_stats_schema(sim_result):
+    assert set(sim_result.stats) == STATS_KEYS
+    # feature-gated keys absent on a plain (no-fault, no-overload) run
+    assert not (set(sim_result.stats) & OVERLOAD_STATS)
+    assert not (set(sim_result.stats) & FAULT_STATS)
+
+
+def test_per_workload_schema(sim_result):
+    assert sim_result.per_workload
+    for name, rec in sim_result.per_workload.items():
+        assert set(rec) == PER_WORKLOAD_KEYS, name
+        assert "shed_requests" not in rec
+
+
+def test_dynamic_sweep_row_schema(tmp_path):
+    from benchmarks import dynamic_sweep
+    rows = dynamic_sweep.sweep((10,), ("no_drift", "overload"),
+                               sim_duration_s=3.0, telemetry=True,
+                               artifact_dir=str(tmp_path))
+    by_scenario = {r["scenario"]: r for r in rows}
+    assert set(by_scenario["no_drift"]) \
+        == DYNAMIC_ROW_KEYS | DYNAMIC_TELEMETRY_KEYS
+    assert set(by_scenario["overload"]) \
+        == DYNAMIC_ROW_KEYS | DYNAMIC_OVERLOAD_KEYS \
+        | DYNAMIC_TELEMETRY_KEYS
+    assert os.path.exists(by_scenario["no_drift"]["telemetry_log"])
+    assert os.path.exists(
+        str(tmp_path / "telemetry_m10_overload.html"))
+
+
+def test_dynamic_sweep_row_schema_telemetry_off():
+    from benchmarks import dynamic_sweep
+    rows = dynamic_sweep.sweep((10,), ("no_drift",), sim_duration_s=3.0)
+    assert set(rows[0]) == DYNAMIC_ROW_KEYS
+    assert not (set(rows[0]) & DYNAMIC_TELEMETRY_KEYS)
+    assert not (set(rows[0]) & DYNAMIC_OVERLOAD_KEYS)
+
+
+def test_availability_sweep_row_schema():
+    from benchmarks import availability_sweep
+    rows = availability_sweep.sweep((10,), rates=(), sim_duration_s=3.0)
+    by_scenario = {r["scenario"]: r for r in rows}
+    assert set(by_scenario) == {"clean", "straggler"}
+    assert set(by_scenario["clean"]) == AVAILABILITY_ROW_KEYS
+    assert set(by_scenario["straggler"]) \
+        == AVAILABILITY_ROW_KEYS | AVAILABILITY_STRAGGLER_KEYS
+    assert not (set(by_scenario["clean"]) & AVAILABILITY_TELEMETRY_KEYS)
+    for r in rows:
+        assert set(r["off"]) == FAULT_STATS
+        assert set(r["on"]) == FAULT_STATS
+
+
+def test_scale_sweep_row_schema():
+    from benchmarks import scale_sweep
+    rows = scale_sweep.sweep((10,), sim_duration_s=1.0)
+    assert set(rows[0]) == SCALE_ROW_KEYS

@@ -1,0 +1,357 @@
+"""Observability layer (`repro.serving.telemetry`): the hard contracts.
+
+* ``telemetry=None`` is byte-identical to the pre-telemetry build;
+* fixed seed => scalar and vec engines emit IDENTICAL event and
+  timeline content (wall-time fields excepted);
+* every controller placement mutation appears exactly once in the
+  event log — the overflow-immune ``reconfig_events`` counter
+  reconciles EXACTLY against ``SimResult.stats["n_reconfigs"]``;
+* the `Controller.cost_series` deprecation shim returns the same
+  tuples the old unbounded list held, off the new bounded ring;
+* the JSONL / Prometheus exporters and the stdlib-only
+  `benchmarks.telemetry_report` renderer round-trip the state.
+"""
+import os
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import perf_model as pm
+from repro.core import perf_model_vec as pmv
+from repro.core import provisioner as prov
+from repro.core.experiments import fitted_context
+from repro.core.types import PlannerConfig, WorkloadSpec
+from repro.serving import faults, traces
+from repro.serving.controller import Controller, ControllerConfig
+from repro.serving.simulator import simulate_plan
+from repro.serving.telemetry import (ControlEvent, RingBuffer, Telemetry,
+                                     _p99)
+from repro.serving.workload import models, synthetic_workloads
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "telemetry_fixture.jsonl")
+DURATION_S = 4.0
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return fitted_context("tpu-v5e")
+
+
+@pytest.fixture(scope="module")
+def setting(ctx):
+    specs = synthetic_workloads(8, seed=0)
+    cfg = PlannerConfig()
+    plan, hw = prov.provision_cheapest(
+        specs, {ctx.hw.name: ctx.profiles}, [ctx.hw], config=cfg)
+    tr = traces.diurnal([s.name for s in specs], DURATION_S * 1000.0,
+                        peak=2.0)
+    return specs, cfg, plan, hw, tr
+
+
+def _controlled(ctx, setting, *, engine, telemetry):
+    """One controlled diurnal run with a FRESH controller (controllers
+    mutate their plan, so every run gets its own)."""
+    specs, cfg, plan, hw, tr = setting
+    ctl = Controller(plan, ctx.profiles, hw,
+                     config=cfg.replace(batch="joint"), telemetry=telemetry)
+    res = simulate_plan(plan, models(), hw, duration_s=DURATION_S, seed=0,
+                        trace=tr, adjust_fn=ctl, adjust_scope="cluster",
+                        adjust_period_s=1.0, engine=engine,
+                        telemetry=telemetry)
+    return res, ctl
+
+
+@pytest.fixture(scope="module")
+def runs(ctx, setting):
+    """{(engine, tel_on): (SimResult, Controller, Telemetry|None)} —
+    the four controlled runs every contract test below reads from."""
+    out = {}
+    for engine in ("scalar", "vec"):
+        for tel_on in (False, True):
+            tel = Telemetry() if tel_on else None
+            res, ctl = _controlled(ctx, setting, engine=engine,
+                                   telemetry=tel)
+            out[(engine, tel_on)] = (res, ctl, tel)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_bounds_and_accounting():
+    rb = RingBuffer(3)
+    for i in range(10):
+        rb.append(i)
+    assert rb.list() == [7, 8, 9]
+    assert len(rb) == 3 and rb.capacity == 3
+    assert rb.total == 10 and rb.dropped == 7
+    assert rb[0] == 7 and list(rb) == [7, 8, 9]
+    with pytest.raises(ValueError):
+        RingBuffer(0)
+
+
+def test_p99_matches_numpy_linear_interpolation():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 7, 50, 99, 100, 101, 500):
+        w = rng.uniform(1.0, 100.0, size=n).tolist()
+        assert _p99(w) == pytest.approx(float(np.percentile(w, 99)),
+                                        rel=1e-12)
+    assert _p99([]) == 0.0
+
+
+def test_record_event_counts_kinds():
+    tel = Telemetry(retention=2)
+    for k in ("resize", "reconfig", "reconfig", "reconfig"):
+        tel.record_event(ControlEvent(t_s=0.0, kind=k, workload="w"))
+    # the ring dropped rows, the overflow-immune counter did not
+    assert len(tel.events) == 2
+    assert tel.counters["reconfig_events"] == 3
+    assert tel.counters["events_reconfig"] == 3
+    assert tel.counters["events_resize"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Contract 1: telemetry=None is byte-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["scalar", "vec"])
+def test_telemetry_off_vs_on_byte_identical(runs, engine):
+    res_off, _, _ = runs[(engine, False)]
+    res_on, _, _ = runs[(engine, True)]
+    assert res_off.per_workload == res_on.per_workload
+    assert res_off.stats["n_reconfigs"] == res_on.stats["n_reconfigs"]
+    assert set(res_off.request_latencies) == set(res_on.request_latencies)
+    for k in res_off.request_latencies:
+        np.testing.assert_array_equal(res_off.request_latencies[k],
+                                      res_on.request_latencies[k])
+
+
+# ---------------------------------------------------------------------------
+# Contract 2: engines emit identical telemetry content
+# ---------------------------------------------------------------------------
+
+def test_engines_emit_identical_events_and_timelines(runs):
+    _, _, tel_s = runs[("scalar", True)]
+    _, _, tel_v = runs[("vec", True)]
+    ev_s = [dict(e.to_dict(), wall_ms=0.0) for e in tel_s.events]
+    ev_v = [dict(e.to_dict(), wall_ms=0.0) for e in tel_v.events]
+    assert ev_s == ev_v
+    assert len(ev_s) > 0
+    assert tel_s.workloads.list() == tel_v.workloads.list()
+    assert tel_s.devices.list() == tel_v.devices.list()
+    assert tel_s.drift.list() == tel_v.drift.list()
+    assert len(tel_s.workloads) > 0 and len(tel_s.devices) > 0
+    # dispatch_* counters are engine-specific BY DESIGN; the event-kind
+    # counters are not
+    for tel in (tel_s, tel_v):
+        kinds = {k: v for k, v in tel.counters.items()
+                 if k.startswith("events_")}
+        assert kinds == {k: v for k, v in tel_s.counters.items()
+                         if k.startswith("events_")}
+    assert "dispatch_scalar" in tel_s.counters
+    assert "dispatch_numpy" in tel_v.counters
+
+
+# ---------------------------------------------------------------------------
+# Contract 3: every placement mutation appears exactly once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["scalar", "vec"])
+def test_reconfig_events_reconcile_with_stats(runs, engine):
+    res, _, tel = runs[(engine, True)]
+    n = int(res.stats["n_reconfigs"])
+    assert n > 0                     # the diurnal ramp must reconfigure
+    assert tel.counters.get("reconfig_events", 0) == n
+    assert tel.counters.get("events_reconfig", 0) == n
+    assert sum(1 for e in tel.events if e.kind == "reconfig") == n
+
+
+def test_events_carry_estimator_inputs_and_placements(runs):
+    _, _, tel = runs[("vec", True)]
+    drift_evs = [e for e in tel.events
+                 if e.cause == "drift" and e.kind in ("resize", "split")]
+    assert drift_evs
+    for e in drift_evs:
+        assert e.rate_rps > 0.0 and e.projected_rps > 0.0
+        assert e.band_up > 0.0 and e.band_down > 0.0
+        assert e.pre is not None     # the touched workload was placed
+        for (gpu, batch, r) in e.pre:
+            assert gpu >= 0 and batch >= 1 and r > 0.0
+
+
+def test_device_rows_carry_true_interference_terms(runs, ctx):
+    _, _, tel = runs[("vec", True)]
+    hw = ctx.hw
+    for row in tel.devices:
+        n = row["n_colocated"]
+        want = 0.0 if n <= 1 else hw.alpha_sch * n + hw.beta_sch  # Eq. 6
+        assert row["delta_sch"] == pytest.approx(want)
+        assert row["power_sum"] > 0.0
+        assert 0.0 < row["freq"] <= hw.max_freq
+        assert row["device_power"] >= hw.idle_power
+        assert 0.0 < row["util"] <= 1.2    # r_eff sum (+shadow headroom)
+
+
+def test_drift_series_recorded(runs):
+    _, _, tel = runs[("vec", True)]
+    rows = tel.drift.list()
+    assert rows
+    for row in rows:
+        assert set(row) == {"t_s", "gpu", "raw", "score", "fleet"}
+    # healthy fleet: raw measured/fitted ratios hover near 1
+    raws = [r["raw"] for r in rows if r["raw"] > 0]
+    assert raws and 0.5 < float(np.median(raws)) < 2.0
+
+
+def test_controller_wall_phases_recorded(runs):
+    _, _, tel = runs[("vec", True)]
+    for phase in ("ctl_probe", "ctl_solve", "ctl_apply", "sim_adjust"):
+        assert tel.walls.get(phase, 0.0) > 0.0
+    assert "probe_hits" in tel.gauges and "probe_misses" in tel.gauges
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cost_series ring + deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_cost_series_shim_and_retention(runs):
+    _, ctl, _ = runs[("vec", True)]
+    assert len(ctl.costs) > 0
+    with pytest.warns(DeprecationWarning):
+        legacy = ctl.cost_series
+    assert legacy == ctl.costs.list()
+    assert all(isinstance(t, tuple) and len(t) == 2 for t in legacy)
+    assert ctl.costs.capacity == ControllerConfig().cost_retention
+
+
+def test_cost_retention_knob_bounds_the_ring(ctx, setting):
+    specs, cfg, plan, hw, tr = setting
+    ctl = Controller(plan, ctx.profiles, hw,
+                     config=cfg.replace(batch="joint"),
+                     cfg=ControllerConfig(cost_retention=2))
+    simulate_plan(plan, models(), hw, duration_s=DURATION_S, seed=0,
+                  trace=tr, adjust_fn=ctl, adjust_scope="cluster",
+                  adjust_period_s=1.0)
+    assert ctl.costs.capacity == 2
+    assert len(ctl.costs) == 2 and ctl.costs.total > 2
+
+
+# ---------------------------------------------------------------------------
+# Exporters + report renderer
+# ---------------------------------------------------------------------------
+
+def test_jsonl_roundtrip_and_report_render(runs, tmp_path):
+    from benchmarks import telemetry_report
+    _, _, tel = runs[("vec", True)]
+    log = tmp_path / "tel.jsonl"
+    tel.to_jsonl(str(log))
+    data = telemetry_report.load(str(log))
+    assert telemetry_report.check(data) == []
+    assert len(data["events"]) == len(tel.events)
+    assert len(data["workloads"]) == len(tel.workloads)
+    assert len(data["devices"]) == len(tel.devices)
+    assert len(data["drift"]) == len(tel.drift)
+    assert data["summary"]["counters"] == tel.counters
+    text = telemetry_report.terminal_report(data)
+    assert "telemetry report" in text and "reconfig" in text
+    html_doc = telemetry_report.render_html(data)
+    assert "<svg" in html_doc and "drift score" in html_doc
+
+
+def test_prometheus_text_snapshot(runs):
+    _, _, tel = runs[("vec", True)]
+    text = tel.prometheus_text()
+    assert '# TYPE repro_telemetry_count counter' in text
+    assert 'repro_telemetry_count{name="reconfig_events"}' in text
+    assert 'repro_telemetry_wall_ms{phase="ctl_solve"}' in text
+    assert 'repro_telemetry_ring_rows{ring="events"}' in text
+
+
+def test_committed_fixture_renders_clean():
+    from benchmarks import telemetry_report
+    data = telemetry_report.load(FIXTURE)
+    assert telemetry_report.check(data) == []
+    assert data["events"] and data["workloads"] and data["drift"]
+    assert "<svg" in telemetry_report.render_html(data)
+
+
+# ---------------------------------------------------------------------------
+# Drift under real stragglers + planner-side snapshot
+# ---------------------------------------------------------------------------
+
+def test_straggler_drift_scores_stand_out(ctx):
+    specs = synthetic_workloads(8, seed=1)
+    cfg = PlannerConfig()
+    plan, hw = prov.provision_cheapest(
+        specs, {ctx.hw.name: ctx.profiles}, [ctx.hw], config=cfg)
+    fs = faults.stragglers(plan.n_gpus, frac=0.2, multiplier=2.5, seed=1)
+    tel = Telemetry()
+    ctl = Controller(plan, ctx.profiles, hw,
+                     config=cfg.replace(batch="joint"), telemetry=tel)
+    simulate_plan(plan, models(), hw, duration_s=8.0, seed=1,
+                  faults=fs, adjust_fn=ctl, adjust_scope="cluster",
+                  adjust_period_s=1.0, telemetry=tel)
+    slow = set(fs.slow)
+    slow_raw = [r["raw"] for r in tel.drift
+                if r["gpu"] in slow and r["raw"] > 0]
+    ok_raw = [r["raw"] for r in tel.drift
+              if r["gpu"] not in slow and r["raw"] > 0]
+    assert slow_raw and ok_raw
+    # the recorded residual series separates slow from healthy devices
+    assert max(slow_raw) > 1.5 * float(np.median(ok_raw))
+    quarantines = [e for e in tel.events if e.kind == "quarantine"]
+    migrations = [e for e in tel.events if e.kind == "migrate"]
+    assert quarantines and migrations
+    assert all(e.cause == "health" for e in migrations)
+
+
+def test_veccluster_interference_snapshot_matches_predict(ctx):
+    rng = np.random.default_rng(5)
+    profiles = ctx.profiles
+    names = sorted(profiles)
+    cl = pmv.VecCluster(ctx.hw)
+    devices = []
+    for q in range(4):
+        cl.add_device()
+        devices.append([])
+        for _ in range(int(rng.integers(0, 4))):
+            mname = names[int(rng.integers(len(names)))]
+            s = WorkloadSpec(f"W{q}", mname, 200.0, 30.0)
+            b = int(rng.integers(1, 17))
+            r = float(rng.choice([0.1, 0.2, 0.25]))
+            cl.add_entry(q, s, profiles[mname], b, r)
+            devices[q].append((profiles[mname], b, r))
+    snap = {row["device"]: row for row in cl.interference_snapshot()}
+    assert set(snap) == {q for q in range(4) if devices[q]}
+    for q, row in snap.items():
+        ref = pm.predict_device(
+            [pm.PlacedWorkload(c, b, r) for (c, b, r) in devices[q]],
+            ctx.hw)
+        assert row["p_demand"] == pytest.approx(ref.p_demand, rel=1e-9)
+        assert row["n"] == len(devices[q])
+        n = row["n"]
+        want = 0.0 if n <= 1 else ctx.hw.alpha_sch * n + ctx.hw.beta_sch
+        assert row["delta_sch"] == pytest.approx(want)
+
+
+def test_provisioner_ops_count_into_telemetry(ctx, setting):
+    """The provisioner edit ops accept (and count into) a telemetry
+    recorder without changing the edit itself."""
+    import dataclasses
+    specs, cfg, plan, hw, tr = setting
+    tel = Telemetry()
+    spec = dataclasses.replace(plan.placements[0].workload,
+                               rate_rps=plan.placements[0].workload.rate_rps
+                               * 1.5)
+    a = prov.resize_workload(plan, spec, ctx.profiles, hw, config=cfg)
+    b = prov.resize_workload(plan, spec, ctx.profiles, hw, config=cfg,
+                             telemetry=tel)
+    assert tel.counters.get("prov_resize") == 1
+    assert [(p.gpu, p.workload.name, p.batch, p.r) for p in a.placements] \
+        == [(p.gpu, p.workload.name, p.batch, p.r) for p in b.placements]
