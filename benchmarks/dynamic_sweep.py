@@ -339,6 +339,45 @@ def sweep(sizes, scenarios, *, seed: int = 0, sim_duration_s: float = 10.0,
                     "admission_readmits":
                         int(st.get("admission_readmits", 0)),
                 })
+            if scenario in ("no_drift", "spike"):
+                # Third run: same plan/trace with the predictive tier on
+                # (forecast-armed Sec. 4.2 shadows, docs/control-plane.md).
+                # The spike gate wants the forecast-on whole-run violation
+                # rate strictly below the reactive controller's — the
+                # reactive loop can only drain a 2 s flash crowd's backlog
+                # after the fact, while the forecaster pre-sizes and arms
+                # standby r before the step lands.  no_drift must stay a
+                # no-op: constant-rate Poisson noise never fires the
+                # forecaster (zero forecast/shadow_arm events, plan
+                # bit-identical).
+                import dataclasses
+                fc_cfg = (dataclasses.replace(ctl_cfg, forecast=True)
+                          if ctl_cfg is not None
+                          else ControllerConfig(forecast=True))
+                ctl_f = Controller(o_plan, o_profiles, o_hw,
+                                   config=cfg.replace(batch="joint"),
+                                   cfg=fc_cfg)
+                t0 = time.perf_counter()
+                res_f = simulate_full(o_plan, mods, o_hw,
+                                      duration_s=sim_duration_s,
+                                      seed=seed, poisson=poisson, trace=tr,
+                                      adjust_fn=ctl_f,
+                                      adjust_scope="cluster",
+                                      adjust_period_s=1.0, backend=backend)
+                fc_wall = time.perf_counter() - t0
+                row.update({
+                    "forecast_violations": len(_violations(res_f, o_specs,
+                                                           tr, horizon_ms)),
+                    "forecast_violation_rate":
+                        round(_mean_violation_rate(res_f, o_specs), 4),
+                    "forecast_n_reconfigs": int(res_f.stats["n_reconfigs"]),
+                    "n_forecast_events": sum(1 for e in ctl_f.edits
+                                             if e.action == "forecast"),
+                    "n_shadow_arms": sum(1 for e in ctl_f.edits
+                                         if e.action == "shadow_arm"),
+                    "forecast_plan_identical": ctl_f.plan is o_plan,
+                    "forecast_sim_wall_s": round(fc_wall, 3),
+                })
             if telemetry:
                 # Fresh controller + recorder: the primary controlled
                 # run above stays telemetry-off, so ctl_wall is the
@@ -463,6 +502,33 @@ def main(argv=None) -> int:
                   f"{row['admission_readmits']} readmits "
                   f"({'PASS' if ok_hi and ok_shed and ok_bo else 'FAIL'})")
             if args.check and not (ok_hi and ok_shed and ok_bo):
+                status = 1
+        if "forecast_violations" in row:
+            if row["scenario"] == "spike":
+                ok_f = (row["forecast_violation_rate"]
+                        < row["controlled_violation_rate"]
+                        and row["forecast_violations"]
+                        <= row["controlled_violations"])
+                print(f"# {tag}: forecast gate rate "
+                      f"{row['forecast_violation_rate']:.3f} "
+                      f"{'<' if ok_f else '!<'} reactive "
+                      f"{row['controlled_violation_rate']:.3f} "
+                      f"(violations {row['controlled_violations']} -> "
+                      f"{row['forecast_violations']}; "
+                      f"{row['n_forecast_events']} forecast edits, "
+                      f"{row['n_shadow_arms']} shadow arms; "
+                      f"{'PASS' if ok_f else 'FAIL'})")
+            else:  # no_drift: the forecaster must not fire on Poisson noise
+                ok_f = (row["forecast_n_reconfigs"] == 0
+                        and row["forecast_plan_identical"]
+                        and row["n_forecast_events"] == 0
+                        and row["n_shadow_arms"] == 0)
+                print(f"# {tag}: forecast no-op check "
+                      f"({'PASS' if ok_f else 'FAIL'}: "
+                      f"{row['forecast_n_reconfigs']} reconfigs, "
+                      f"{row['n_forecast_events']} forecast edits, "
+                      f"plan_identical={row['forecast_plan_identical']})")
+            if args.check and not ok_f:
                 status = 1
         if "telemetry_events" in row:
             ok_rec = row["telemetry_reconfig_ok"]

@@ -636,6 +636,7 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                  exclude_gpus: Optional[frozenset] = None,
                  pin: Optional[Tuple[int, float]] = None,
                  max_devices: Optional[int] = None,
+                 reserved: Optional[Dict[int, float]] = None,
                  telemetry=None) -> ProvisioningPlan:
     """Place one newly-arrived workload into an existing plan (in place of
     a full re-run of Alg. 1): greedy minimum-interference device selection
@@ -658,6 +659,14 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     growing past the cap.  Every `InfeasibleError` raised here carries
     ``per_hw`` diagnostics, so overload decisions and sweep logs can
     report WHY a grant failed.
+
+    ``reserved`` maps plan gpu id -> armed Sec. 4.2 shadow reservation
+    on that device (the controller's predictive tier): a candidate
+    whose re-solved residents + newcomer would eat into the reservation
+    (total past r = 1.0) is treated as infeasible, so a later shadow
+    activation can never overcommit the device.  Reservations
+    attributable to the edited workload itself must be excluded by the
+    caller.  The fresh-device fallback is naturally reservation-free.
 
     ``telemetry`` (duck-typed `repro.serving.telemetry.Telemetry`, kept
     untyped to avoid a core->serving import) counts the op under
@@ -695,6 +704,13 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                 cl.add_entry(q, s, cc, bb, r)
         if gpu_ids:
             feasible, rr, rn, r_inter = cl.alloc_all(spec, c, b, rl)
+            if reserved:
+                resv = np.array([reserved.get(g, 0.0) for g in gpu_ids])
+                if resv.any():
+                    load = (rr * cl.mask[:cl.d]).sum(axis=1) + rn + resv
+                    over = load > 1.0 + 1e-9
+                    feasible = feasible & ~over
+                    r_inter = np.where(over, np.inf, r_inter)
             row = _argmin_inter(r_inter) if feasible.any() else -1
             if row != -1:
                 best_q = gpu_ids[row]
@@ -704,6 +720,9 @@ def add_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
         for q, dev in sorted(cand.items()):
             r_a = alloc_gpus(dev, spec, c, b, rl, hw, budget=bm)
             if r_a is None:
+                continue
+            if reserved and (math.fsum(r_a) + reserved.get(q, 0.0)
+                             > 1.0 + 1e-9):
                 continue
             old = [e[3] for e in dev.entries] + [rl]
             r_inter = sum(max(0.0, na - oa) for na, oa in zip(r_a, old))
@@ -765,6 +784,7 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                     budget: Optional[BudgetLike] = None,
                     batch: Optional[str] = None,
                     max_devices: Optional[int] = None,
+                    reserved: Optional[Dict[int, float]] = None,
                     telemetry=None) -> ProvisioningPlan:
     """Re-place one workload under a NEW spec (arrival-rate / SLO drift):
     recompute Theorem 1 at the new rate, re-run Alg. 2 on its CURRENT
@@ -772,7 +792,9 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     more interference, and shrink, releasing slack), and fall back to
     `migrate_workload` when the current device can no longer host it.
     Raised `InfeasibleError`s carry ``per_hw`` diagnostics; the migrate
-    fallback honors ``max_devices``."""
+    fallback honors ``max_devices``.  ``reserved`` holds armed shadow
+    reservations out of the re-solve, `add_workload`-style: a same-
+    device result that would eat into one falls through to migration."""
     if telemetry is not None:
         telemetry.count("prov_resize")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
@@ -800,10 +822,15 @@ def resize_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
     else:
         r_a = alloc_gpus(_Dev(entries=residents), spec, c, b, rl, hw,
                          budget=bm)
+    if (r_a is not None and reserved
+            and (math.fsum(float(x) for x in r_a)
+                 + reserved.get(cur.gpu, 0.0) > 1.0 + 1e-9)):
+        r_a = None                 # the reservation holds: migrate
     if r_a is None:
         return migrate_workload(plan, spec, profiles, hw,
                                 config=cfg.replace(budget=bm),
-                                max_devices=max_devices)
+                                max_devices=max_devices,
+                                reserved=reserved)
 
     peer_r = dict(zip((p.workload.name for p in peers), r_a[:-1]))
     new_plan = ProvisioningPlan(hardware=plan.hardware)
@@ -830,20 +857,22 @@ def migrate_workload(plan: ProvisioningPlan, spec: WorkloadSpec,
                      batch: Optional[str] = None,
                      exclude_gpus: Optional[frozenset] = None,
                      max_devices: Optional[int] = None,
+                     reserved: Optional[Dict[int, float]] = None,
                      telemetry=None) -> ProvisioningPlan:
     """Move one workload to the minimum-interference device that can
     host its (possibly updated) spec — remove + `add_workload`, so the
     destination can also be a fresh device (`self_grant`).
     ``exclude_gpus`` bans devices (health-layer quarantine);
-    ``max_devices`` caps the fresh-device fallback.  ``telemetry``
-    counts ONE ``prov_migrate`` (the inner remove/add are not
+    ``max_devices`` caps the fresh-device fallback; ``reserved`` holds
+    armed shadow reservations out of candidacy.  ``telemetry`` counts
+    ONE ``prov_migrate`` (the inner remove/add are not
     double-counted)."""
     if telemetry is not None:
         telemetry.count("prov_migrate")
     cfg = planner_config(config, engine=engine, budget=budget, batch=batch)
     return add_workload(remove_workload(plan, spec.name), spec, profiles,
                         hw, config=cfg, exclude_gpus=exclude_gpus,
-                        max_devices=max_devices)
+                        max_devices=max_devices, reserved=reserved)
 
 
 # ---------------------------------------------------------------------------

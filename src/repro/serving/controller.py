@@ -62,6 +62,7 @@ import dataclasses
 import math
 import time as _time
 import warnings
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -202,6 +203,62 @@ class ControllerConfig:
                                  # ``config=`` argument overrides this,
                                  # which overrides the legacy ``k_max``
                                  # field above.
+    # -- predictive tier (forecast-armed Sec. 4.2 shadows) --
+    forecast: bool = False       # master switch for the proactive tier:
+                                 # False (default) keeps every code path
+                                 # byte-identical to the reactive build
+    forecast_horizon: float = 3.0
+                                 # control periods of trend extrapolation:
+                                 # forecast = rate + max(0, trend) x this
+                                 # (plus the seasonal lookup when a
+                                 # period is detected)
+    forecast_band: float = 0.30  # minimum relative rise of the forecast
+                                 # over the plan rate before the
+                                 # predictive tier may act
+    forecast_sigmas: float = 10.0
+                                 # widen that band to this many sigmas of
+                                 # the smoothed counting noise — larger
+                                 # than the reactive noise_sigmas because
+                                 # the horizon extrapolation amplifies
+                                 # trend noise ~3x.  This band alone
+                                 # keeps constant-rate Poisson input
+                                 # forecast-silent at any seed: measured
+                                 # worst single-tick margin is ~0.84 of
+                                 # the band (worst consecutive PAIR ~0.64)
+                                 # over 180k noise-only ticks
+                                 # (tests/test_forecast.py)
+    forecast_debounce: int = 1   # consecutive forecast breaches before
+                                 # acting.  1 by design: the predictive
+                                 # tier must act at the FIRST tick a flash
+                                 # crowd is visible or the reactive pass
+                                 # wins the race (it fires at
+                                 # debounce_up=1 and raises the target the
+                                 # forecast is compared against) — noise
+                                 # immunity comes from the 10-sigma band,
+                                 # not the debounce.  Raise it to trade
+                                 # spike lead time for extra insurance.
+    forecast_hold: int = 5       # breach-free ticks before armed shadows
+                                 # are released (never while one is
+                                 # ACTIVE — yanking r_eff mid-drain would
+                                 # re-blow the tail it just absorbed)
+    forecast_history: int = 64   # per-workload rate-history windows kept
+                                 # for the autocorrelation period scan
+                                 # (bounded: the deque IS the memory cap)
+    forecast_min_period: int = 4 # smallest candidate period (windows) —
+                                 # below this the EWMA trend already
+                                 # tracks the swing
+    forecast_autocorr: float = 0.5
+                                 # autocorrelation peak needed to declare
+                                 # a period (white noise at lag k is
+                                 # ~N(0, 1/n) — far below this)
+    forecast_snr: float = 4.0    # series variance must exceed this many
+                                 # times the Poisson counting-noise
+                                 # variance before the period scan runs
+                                 # at all: flat + noise never qualifies
+    shadow_extra: float = 0.10   # Sec. 4.2 shadow reservation size per
+                                 # armed instance (capped by the free
+                                 # capacity of its device), matching
+                                 # ``simulate_plan(shadow_extra=...)``
     # -- observability --
     cost_retention: int = 4096   # rows kept in `Controller.costs` (the
                                  # (t_s, $/h) ring sampled every tick);
@@ -235,6 +292,11 @@ class ArrivalEstimator:
         self._gap_buf: List[float] = []   # gaps awaiting a moment update
         self._g1: Optional[float] = None  # EWMA mean gap [ms]
         self._g2: Optional[float] = None  # EWMA mean squared gap [ms^2]
+        # bounded raw per-window rate history for the predictive tier's
+        # autocorrelation period scan (maintained unconditionally: one
+        # float per control period, and the deque caps the memory)
+        self.history: deque = deque(
+            maxlen=max(int(self.cfg.forecast_history), 8))
 
     @property
     def projected_rps(self) -> float:
@@ -254,10 +316,67 @@ class ArrivalEstimator:
         return (math.sqrt(lam * var_factor) * 1000.0 / self.window_ms
                 if self.window_ms > 0 else 0.0)
 
+    def detect_period(self) -> Optional[int]:
+        """Dominant period of the rate history, in control periods, or
+        None.  Demeaned autocorrelation over lags in
+        [forecast_min_period, n/2]; a lag qualifies only when its
+        coefficient clears `forecast_autocorr` AND the series variance
+        clears `forecast_snr` x the Poisson counting-noise variance —
+        the double gate is what keeps constant-rate Poisson input (whose
+        lag-k autocorrelation is ~N(0, 1/n)) period-free at any seed.
+        Among qualifying lags the smallest one within 10% of the best
+        coefficient wins, so a fundamental beats its own harmonics."""
+        cfg = self.cfg
+        n = len(self.history)
+        max_lag = n // 2
+        if max_lag < cfg.forecast_min_period:
+            return None
+        x = np.asarray(self.history, dtype=np.float64)
+        x = x - x.mean()
+        denom = float(np.dot(x, x))
+        if denom <= 0.0:
+            return None
+        # counting-noise floor: a Poisson window of lam = R * T_w
+        # arrivals has rate variance R / T_w — flat + noise sits AT this
+        # floor while a real seasonal swing carries far more power
+        noise_var = self.rate_rps * 1000.0 / max(self.window_ms, 1e-9)
+        if denom / n < cfg.forecast_snr * max(noise_var, 1e-12):
+            return None
+        lags = np.arange(cfg.forecast_min_period, max_lag + 1)
+        acf = np.array([float(np.dot(x[:-k], x[k:])) / denom
+                        for k in lags])
+        best = float(acf.max())
+        if best < cfg.forecast_autocorr:
+            return None
+        return int(lags[np.argmax(acf >= best - 0.1 * abs(best))])
+
+    def forecast_rps(self, horizon: float) -> float:
+        """Short-horizon rate forecast: trend extrapolation ``rate +
+        max(0, trend) * horizon`` (a falling trend is not projected —
+        shrinking stays on the reactive slow path), raised to the
+        seasonal level one detected period back at t + horizon when the
+        history carries a significant period.  Never below the current
+        smoothed estimate, and monotone in the trend — a linear ramp's
+        forecasts rise monotonically (tests/test_forecast.py)."""
+        f = self.rate_rps + max(0.0, self.trend_rps) * max(horizon, 0.0)
+        p = self.detect_period()
+        n = len(self.history)
+        if p is not None and n > p:
+            idx = n - 1 + int(round(horizon)) - p
+            while idx >= n:          # horizon beyond one period: wrap
+                idx -= p
+            if idx >= 0:
+                h = list(self.history)
+                lo, hi = max(0, idx - 1), min(n, idx + 2)
+                seasonal = float(np.mean(h[lo:hi]))  # 3-point smooth
+                f = max(f, seasonal)
+        return f
+
     def observe(self, arrivals: np.ndarray, window_ms: float) -> None:
         cfg = self.cfg
         arrivals = np.asarray(arrivals, dtype=np.float64)
         inst_rate = arrivals.size * 1000.0 / max(window_ms, 1e-9)
+        self.history.append(inst_rate)
         prev = self.rate_rps
         self.rate_rps += cfg.alpha * (inst_rate - self.rate_rps)
         self.trend_rps += cfg.alpha * ((self.rate_rps - prev)
@@ -557,7 +676,8 @@ class PlanState:
                  hw: HardwareSpec, budget: BudgetLike = QUEUEING,
                  backend: str = "numpy",
                  probes: Optional[prov.ProbeCache] = None,
-                 max_devices: Optional[int] = None):
+                 max_devices: Optional[int] = None,
+                 shadow: Optional[Dict[str, float]] = None):
         self.hw = hw
         self.profiles = profiles
         self.max_devices = max_devices
@@ -580,6 +700,25 @@ class PlanState:
         # plan gpu ids placement must avoid (health-layer quarantine);
         # the Reconciler keeps this in sync with its quarantine set
         self.banned: set = set()
+        # Sec. 4.2 shadow reservations, workload name -> shadow_r.
+        # Shared BY REFERENCE with the owning Reconciler's armed book,
+        # so every placement sweep sees the reservation the moment it
+        # is granted: an activation may push a device to r + shadow_r
+        # but never past 1.0 (tests/test_forecast.py pins this)
+        self.shadow: Dict[str, float] = shadow if shadow is not None \
+            else {}
+
+    def _row_reserved(self, exclude: Optional[str] = None) -> np.ndarray:
+        """Per-row armed shadow reservation: the capacity a monitor-tick
+        activation may claim, which placement must treat as spoken for."""
+        out = np.zeros(self.cl.d)
+        for name, sr in self.shadow.items():
+            if name == exclude:
+                continue
+            q = self.home.get(name)
+            if q is not None:
+                out[q] += sr
+        return out
 
     def set_budget(self, budget: BudgetLike) -> None:
         self.cl.set_budget(budget)
@@ -606,6 +745,18 @@ class PlanState:
                                dtype=bool, count=len(self.row_gpus))
             feasible = feasible & ~mask
             r_inter = np.where(mask, np.inf, r_inter)
+        if self.shadow:
+            # armed reservations are spoken-for capacity: a row whose
+            # re-solved residents + newcomer + reservations would exceed
+            # r = 1.0 is infeasible for this placement (the activation
+            # headroom must survive every edit)
+            resv = self._row_reserved(exclude=spec.name)
+            if resv.any():
+                load = (rr * cl.mask[:cl.d]).sum(axis=1) + rn + resv
+                over = load > 1.0 + 1e-9
+                if over.any():
+                    feasible = feasible & ~over
+                    r_inter = np.where(over, np.inf, r_inter)
         if self.max_devices is not None:
             used = sum(1 for q in range(cl.d) if cl.entries[q])
             if used >= self.max_devices:
@@ -678,6 +829,12 @@ class PlanState:
                      for i, (s, cc, bb) in enumerate(cl.entries[q])]
         r_a = pmv.alloc_gpus_vec(residents, spec, c, b, rl, self.hw,
                                  budget=cl.bm)
+        if r_a is not None and self.shadow:
+            resv_q = math.fsum(
+                sr for n2, sr in self.shadow.items()
+                if n2 != spec.name and self.home.get(n2) == q)
+            if math.fsum(r_a) + resv_q > 1.0 + 1e-9:
+                r_a = None           # the reservation holds: migrate
         if r_a is not None:
             cl.set_row_r(q, np.array(r_a[:-1]))
             cl.add_entry(q, spec, c, b, r_a[-1])
@@ -712,6 +869,11 @@ class PlanEdit:
                        #   self parked under the cap), "admit" (shed
                        #   workload re-placed), "capped" (growth refused,
                        #   demand queues at the old allocation)
+                       # | predictive tier: "forecast" (pre-size /
+                       #   pre-split to the forecast rate; rate_to = the
+                       #   sized target), "shadow_arm" / "shadow_disarm"
+                       #   (Sec. 4.2 reservations granted / released;
+                       #   replicas = instances touched)
     workload: str      # BASE workload name (replicas are one workload)
     rate_from: float
     rate_to: float
@@ -800,6 +962,20 @@ class Reconciler:
         self.admission_log: List[tuple] = []     # (t_s, event, detail)
         self._adm = {"preempt": 0, "shed": 0, "readmit": 0, "capped": 0,
                      "brownout_ticks": 0, "brownout_max": 0}
+        # predictive tier (cfg.forecast + docs/control-plane.md
+        # Forecasting): armed Sec. 4.2 shadow reservations keyed by
+        # PLACEMENT name.  Shared by reference with the vec mirror
+        # (PlanState.shadow) so every edit path accounts for them; the
+        # scalar oracle threads the same book through the provisioner
+        # ops' ``reserved=`` map.  Also adopts simulator-armed
+        # (shadow=True) reservations at the controller's first tick.
+        self.armed: Dict[str, float] = {}
+        self._fc_streak: Dict[str, int] = {}  # base -> breach streak
+        self._fc_clear: Dict[str, int] = {}   # base -> breach-free ticks
+        self._fc_edited: set = set()          # bases pre-sized THIS tick
+        # bases with an ACTIVE shadow this tick (fed by the Controller):
+        # an active reservation is never released mid-drain
+        self.shadow_active_bases: set = set()
 
     # -- drift detection ----------------------------------------------------
 
@@ -895,6 +1071,23 @@ class Reconciler:
                              and self._departed_now(name, est))):
                 pending.append(name)
         changed = False
+        if cfg.forecast:
+            # proactive tier BEFORE the reactive pass: the rate signal
+            # LEADS the p99 signal, and a forecast edit raises its
+            # base's target so the reactive drift check below compares
+            # against the post-edit plan — the two tiers cannot
+            # double-fire on one signal in this order either, and the
+            # forecast keeps its one-tick head start (a 2 s flash crowd
+            # is over before a reactive resize lands)
+            changed |= self._forecast_pass(now_s, estimators, backlog or {})
+            if self._fc_edited:
+                # a base the forecast just pre-sized must not ALSO fire
+                # reactively this tick: its group was re-placed against
+                # the raised target, so the reactive reading (and the
+                # group snapshot it would edit) are both stale
+                pending = [n for n in pending if n not in self._fc_edited]
+                for n in self._fc_edited:
+                    self._breach[n] = ("", 0)
         if pending or self.shed:
             if pending and self.base_bm.mode == "queueing":
                 # online burstiness, FLOORED at the provisioned model's:
@@ -942,7 +1135,8 @@ class Reconciler:
                                     budget=self.bm,
                                     backend=self.planner.backend,
                                     probes=self.probes,
-                                    max_devices=self.max_devices)
+                                    max_devices=self.max_devices,
+                                    shadow=self.armed)
             self._state_bm = self.bm
             self._state.banned = set(self.quarantined)
         elif self.bm != self._state_bm:
@@ -1087,7 +1281,25 @@ class Reconciler:
             p.workload.name) or 0)
         return group
 
+    def _reserved_map(self) -> Optional[Dict[int, float]]:
+        """Plan-gpu -> armed shadow reservation, for the scalar
+        provisioner ops (the vec mirror reads the shared book
+        directly).  None while nothing is armed — the historical
+        call signature, byte-identical behavior."""
+        if not self.armed:
+            return None
+        by_name = {p.workload.name: p.gpu for p in self.plan.placements}
+        gpus: Dict[int, float] = {}
+        for name, sr in self.armed.items():
+            g = by_name.get(name)
+            if g is not None:
+                gpus[g] = gpus.get(g, 0.0) + sr
+        return gpus or None
+
     def _remove_name(self, name: str) -> None:
+        # a removed placement's reservation leaves with it: reservations
+        # are valid only for the placement they were computed against
+        self.armed.pop(name, None)
         if self._state is not None:
             self._state.remove(name)
             if self.telemetry is not None:
@@ -1108,9 +1320,14 @@ class Reconciler:
                 config=self.planner.replace(budget=self.bm),
                 exclude_gpus=frozenset(self.quarantined) or None,
                 pin=pin, max_devices=self.max_devices,
+                reserved=self._reserved_map(),
                 telemetry=self.telemetry)
 
     def _resize_spec(self, spec: WorkloadSpec) -> None:
+        # the resized placement's own reservation was computed against
+        # its OLD allocation: drop it (the forecast pass re-arms against
+        # the new one on its next breach tick)
+        self.armed.pop(spec.name, None)
         if self._state is not None:
             self._state.resize(spec, batch=self.batch)
             if self.telemetry is not None:
@@ -1120,6 +1337,7 @@ class Reconciler:
                 self.plan, spec, self.profiles, self.hw,
                 config=self.planner.replace(budget=self.bm),
                 max_devices=self.max_devices,
+                reserved=self._reserved_map(),
                 telemetry=self.telemetry)
 
     def _validate(self, reps: List[WorkloadSpec],
@@ -1205,21 +1423,30 @@ class Reconciler:
 
     # -- transactional edit application -------------------------------------
 
-    def _checkpoint(self) -> ProvisioningPlan:
+    def _checkpoint(self) -> tuple:
         """Materialized recovery point for a multi-op edit sequence: the
         device cap can fire MID-sequence (the Theorem-1 pre-flight cannot
         see placement-time cap pressure), and both engine paths must roll
-        back to exactly this plan."""
-        return self._state.to_plan() if self._state is not None \
+        back to exactly this plan.  The armed shadow book rides along —
+        an edit that dropped or granted reservations before failing must
+        hand them back too (tests/test_forecast.py injects exactly
+        that failure)."""
+        plan = self._state.to_plan() if self._state is not None \
             else self.plan
+        return plan, dict(self.armed)
 
-    def _restore(self, plan0: ProvisioningPlan) -> None:
-        """Roll back to ``plan0``.  The scalar path re-adopts it directly
-        (the provisioner ops are plan-in/plan-out); the vec mirror is
-        discarded and rebuilt from it — the rebuild's gpu-sorted row
-        order matches what the incremental history produced, so every
-        subsequent allocation stays identical to the scalar oracle's."""
+    def _restore(self, cp: tuple) -> None:
+        """Roll back to checkpoint ``cp``.  The scalar path re-adopts the
+        plan directly (the provisioner ops are plan-in/plan-out); the vec
+        mirror is discarded and rebuilt from it — the rebuild's
+        gpu-sorted row order matches what the incremental history
+        produced, so every subsequent allocation stays identical to the
+        scalar oracle's.  The armed book is restored IN PLACE: the
+        rebuilt mirror shares the same dict."""
+        plan0, armed0 = cp
         self.plan = plan0
+        self.armed.clear()
+        self.armed.update(armed0)
         if self._state is not None:
             self._state = None
             self._ensure_state()
@@ -1434,6 +1661,186 @@ class Reconciler:
             changed = True
         return changed
 
+    # -- predictive tier (forecast-armed Sec. 4.2 shadows) -------------------
+
+    def _armed_names(self, base: str) -> List[str]:
+        pref = base + replication.SEP
+        return [n for n in self.armed
+                if n == base or n.startswith(pref)]
+
+    def _forecast_pass(self, now_s: float,
+                       estimators: Dict[str, ArrivalEstimator],
+                       backlog: Dict[str, float]) -> bool:
+        """One tick of the proactive tier: per base workload, compare the
+        horizon forecast against the plan target behind its own
+        (noise-widened, debounced) band; a sustained breach pre-sizes /
+        pre-splits the group to the forecast rate AND arms Sec. 4.2
+        shadows on its devices, both through the same transactional edit
+        machinery as reactive drift.  Runs BEFORE the reactive pass — the
+        rate signal leads the p99 signal, and a forecast edit raises the
+        target the reactive drift check is then re-evaluated against, so
+        the two tiers never double-fire on one signal.  Breach-free
+        for `forecast_hold` ticks releases a base's reservations, unless
+        one is ACTIVE (the Controller feeds ``shadow_active_bases``)."""
+        cfg = self.cfg
+        changed = False
+        acted_any = False
+        self._fc_edited.clear()
+        for base in sorted(self.targets):
+            est = estimators.get(base)
+            cur = self.targets[base]
+            if est is None or not est.ever_active or cur.rate_rps <= 0.0:
+                continue
+            plan_rate = cur.rate_rps
+            f = est.forecast_rps(cfg.forecast_horizon)
+            band = max(cfg.forecast_band,
+                       cfg.forecast_sigmas * est.rate_sigma() / plan_rate)
+            if f / plan_rate > 1.0 + band:
+                self._fc_clear[base] = 0
+                streak = self._fc_streak.get(base, 0) + 1
+                self._fc_streak[base] = streak
+                if streak >= cfg.forecast_debounce:
+                    if (not acted_any
+                            and self.base_bm.mode == "queueing"):
+                        # same online-burstiness tightening the reactive
+                        # pass applies before its edits: a spike train's
+                        # cv^2 >> 1 must tighten the forecast pre-size's
+                        # budgets too (floored at the provisioned model)
+                        self.bm = self.base_bm.with_burstiness(
+                            max(self._cluster_cv2(estimators),
+                                self.base_bm.burstiness))
+                    acted_any = True
+                    changed |= self._forecast_act(
+                        now_s, base, est, f, backlog.get(base, 0.0))
+            else:
+                self._fc_streak[base] = 0
+                if self._armed_names(base):
+                    clear = self._fc_clear.get(base, 0) + 1
+                    self._fc_clear[base] = clear
+                    if (clear >= cfg.forecast_hold
+                            and base not in self.shadow_active_bases):
+                        changed |= self._disarm(now_s, base)
+        return changed
+
+    def _forecast_act(self, now_s: float, base: str,
+                      est: ArrivalEstimator, f: float,
+                      backlog: float = 0.0) -> bool:
+        """Act on a debounced forecast breach: pre-size (and pre-split,
+        when `required_replicas` says the forecast rate needs it) the
+        group to the forecast target, then arm shadows on every device
+        the group lands on.  A cap- or physics-refused pre-size still
+        arms — the reservation costs nothing until activation and is the
+        cheaper half of the insurance.  The proactive tier never invokes
+        the admission layer: preempting live workloads on a prediction
+        is the wrong trade."""
+        cfg = self.cfg
+        self._ensure_state()      # lazy: only a tick that ACTS builds
+        cur = self.targets[base]  # the vec mirror
+        plan_rate = cur.rate_rps
+        c = self.profiles[cur.model]
+        # same sizing rule as the reactive up-drift path, driven by the
+        # HORIZON forecast instead of the one-period projection: lead
+        # the ramp, plus capacity to drain the backlog the spike has
+        # already queued within ~one control period (capped)
+        target = max(f, est.projected_rps) * (1.0 + cfg.headroom)
+        target += min(backlog * 1000.0 / max(self._period_ms, 1e-9),
+                      cfg.drain_cap * est.rate_rps)
+        new_spec = dataclasses.replace(cur, name=base, rate_rps=target)
+        group = self._group(base)
+        k_cur = len(group)
+        k_need = self.probes.required_replicas(
+            new_spec, c, self.hw, self.bm, self.batch,
+            k_max=self.k_max) if self.k_max > 1 else 1
+        changed = False
+        try:
+            action, k_new = self._edit(base, new_spec, c, k_need, cur,
+                                       group, k_cur, True)
+        except (prov.DeviceCapError, prov.InfeasibleError):
+            action, k_new = "", k_cur
+        if action:
+            self.targets[base] = new_spec
+            self._fc_edited.add(base)
+            self.edits.append(PlanEdit(now_s, "forecast", base,
+                                       plan_rate, target,
+                                       self.bm.burstiness, k_new))
+            changed = True
+        changed |= self._arm_shadows(now_s, base, plan_rate, f)
+        if changed:
+            self._fc_streak[base] = 0
+        return changed
+
+    def _device_used(self, gpu: int, q: Optional[int]) -> float:
+        """Live r committed on one device (exactly-rounded fsum, so the
+        vec mirror and the scalar plan agree bit-for-bit regardless of
+        summation order), plus every armed reservation homed there."""
+        if self._state is not None and q is not None:
+            st = self._state
+            used = math.fsum(float(st.cl.r[q, i])
+                             for i in range(len(st.cl.entries[q])))
+            resv = math.fsum(sr for n, sr in self.armed.items()
+                             if st.home.get(n) == q)
+        else:
+            used = math.fsum(p.r for p in self.plan.placements
+                             if p.gpu == gpu)
+            by_name = {p.workload.name: p.gpu
+                       for p in self.plan.placements}
+            resv = math.fsum(sr for n, sr in self.armed.items()
+                             if by_name.get(n) == gpu)
+        return used + resv
+
+    def _arm_shadows(self, now_s: float, base: str, plan_rate: float,
+                     f: float) -> bool:
+        """Reserve Sec. 4.2 shadow capacity (`shadow_extra`, capped by
+        the device's free share) for every replica of ``base`` that does
+        not already hold one.  Arming only writes the book — the
+        Controller maps it onto ``inst.shadow_r`` and the simulator's
+        monitor tick activates it the moment the window p99 breaches the
+        SLO, well inside the adjust period a reactive resize waits for."""
+        cfg = self.cfg
+        st = self._state
+        armed_any = False
+        if st is not None:
+            pref = base + replication.SEP
+            members = sorted(
+                (n for n in st.home if n == base or n.startswith(pref)),
+                key=lambda n: replication.replica_index(n) or 0)
+            homes = [(n, st.row_gpus[st.home[n]], st.home[n])
+                     for n in members]
+        else:
+            homes = [(p.workload.name, p.gpu, None)
+                     for p in self._group(base)]
+        for name, gpu, q in homes:
+            if self.armed.get(name, 0.0) > 0.0:
+                continue
+            free_r = 1.0 - self._device_used(gpu, q)
+            sr = min(cfg.shadow_extra, max(0.0, free_r))
+            if sr <= 1e-12:
+                continue
+            self.armed[name] = sr
+            armed_any = True
+        if armed_any:
+            self.edits.append(PlanEdit(now_s, "shadow_arm", base,
+                                       plan_rate, f, self.bm.burstiness,
+                                       len(homes)))
+        return armed_any
+
+    def _disarm(self, now_s: float, base: str) -> bool:
+        """Release ``base``'s reservations (forecast clear for
+        `forecast_hold` ticks, none active): the freed capacity returns
+        to the placement sweeps and the Controller zeroes the live
+        instances' ``shadow_r`` on apply."""
+        names = self._armed_names(base)
+        if not names:
+            return False
+        for n in names:
+            del self.armed[n]
+        self._fc_clear[base] = 0
+        rate = self.targets[base].rate_rps if base in self.targets \
+            else 0.0
+        self.edits.append(PlanEdit(now_s, "shadow_disarm", base, rate,
+                                   rate, self.bm.burstiness, len(names)))
+        return True
+
     def overload_stats(self) -> Dict[str, float]:
         """Admission-layer counters for `SimResult.stats` — EMPTY until
         the first admission decision, which is what keeps a cap-slack
@@ -1555,15 +1962,16 @@ class Controller:
                 "Controller needs the whole cluster per tick: pass "
                 "adjust_scope=\"cluster\" to simulate_plan (the default "
                 "\"device\" scope calls adjust_fn once per device)")
-        if any(inst.shadow_r > 0.0 for inst in instances):
-            # the provisioner-level edits cannot see shadow_extra
-            # reservations: re-solved allocations plus an activated
-            # shadow could overcommit a device past r=1.0 — the
-            # combination is unsupported, so refuse it up front
-            raise RuntimeError(
-                "Controller does not compose with shadow=True: shadow_r "
-                "reservations are invisible to the plan edits and an "
-                "activation could overcommit the device")
+        if self.n_ticks == 0:
+            # adopt simulator-armed (shadow=True) reservations into the
+            # armed book, so every plan edit accounts for them — the
+            # historical "Controller does not compose with shadow=True"
+            # refusal is gone: the book makes reservations visible to
+            # the placement sweeps in both engine paths
+            for inst in instances:
+                if inst.shadow_r > 0.0:
+                    self.reconciler.armed.setdefault(
+                        inst.spec.name, float(inst.shadow_r))
         window_ms = max((now_s - self._last_s) * 1000.0, 1e-9)
         tm = self.telemetry
         if tm is not None:
@@ -1595,6 +2003,11 @@ class Controller:
                     [np.asarray(i.recent_arrivals) for i in insts_b]))
             est.observe(merged, window_ms)
             backlog[base] = float(sum(len(i.queue) for i in insts_b))
+        # bases holding an ACTIVE shadow: the predictive tier's disarm
+        # hold waits for these to deactivate before releasing capacity
+        self.reconciler.shadow_active_bases = {
+            base for base, insts_b in by_base.items()
+            if any(i.shadow_active for i in insts_b)}
         changed = False
         rep = None
         if self.health is not None:
@@ -1643,7 +2056,8 @@ class Controller:
               "readmit": "health", "preempt": "admission",
               "shed": "admission", "admit": "admission",
               "capped": "admission", "add": "arrival",
-              "remove": "departure"}
+              "remove": "departure", "forecast": "forecast",
+              "shadow_arm": "forecast", "shadow_disarm": "forecast"}
 
     def _drain_events(self, now_s: float, rep, pre_map, n_edits0: int,
                       n_adm0: int, solve_ms: float) -> None:
@@ -1726,6 +2140,7 @@ class Controller:
         by_name = {p.workload.name: p for p in self.plan.placements}
         plan_bases = {replication.base_name(n) for n in by_name}
         live_names = {inst.spec.name for inst in instances}
+        armed = self.reconciler.armed
         free: Dict[str, List[ServedInstance]] = {}
         for inst in instances:
             name = inst.spec.name
@@ -1736,6 +2151,7 @@ class Controller:
                 inst.batch = max(1, p.batch)
                 inst.gpu = p.gpu
                 inst.shed = False             # in the plan = admitted
+                self._apply_shadow(inst, armed.get(name, 0.0))
                 continue
             base = replication.base_name(name)
             if base in plan_bases:
@@ -1749,9 +2165,11 @@ class Controller:
                 inst.r = self.hw.r_unit
                 inst.batch = 1
                 inst.shed = True
+                self._apply_shadow(inst, 0.0)
             elif base in self.reconciler.departed:
                 inst.r = self.hw.r_unit
                 inst.batch = 1
+                self._apply_shadow(inst, 0.0)
         for p in self.plan.placements:        # plan order = replica order
             name = p.workload.name
             if name in live_names:
@@ -1765,6 +2183,7 @@ class Controller:
                 inst.batch = max(1, p.batch)
                 inst.gpu = p.gpu
                 inst.shed = False
+                self._apply_shadow(inst, armed.get(name, 0.0))
             else:                             # scale-out: fresh replica
                 sibling = next(i for i in instances
                                if replication.base_name(i.spec.name)
@@ -1772,13 +2191,26 @@ class Controller:
                 instances.append(ServedInstance(
                     spec=p.workload, desc=sibling.desc, r=p.r,
                     batch=max(1, p.batch), gpu=p.gpu,
-                    slo0=sibling.slo0))
+                    slo0=sibling.slo0,
+                    shadow_r=armed.get(name, 0.0)))
         for pool in free.values():            # merged-away replicas
             for inst in pool:
                 inst.r = self.hw.r_unit
                 inst.batch = 1
                 inst.shed = False             # zero share: no arrivals
                 inst.spec = dataclasses.replace(inst.spec, rate_rps=0.0)
+                self._apply_shadow(inst, 0.0)
+
+    @staticmethod
+    def _apply_shadow(inst: ServedInstance, sr: float) -> None:
+        """Map the armed book onto one live instance.  Only ever writes
+        on a CHANGE, and a released reservation deactivates too — with
+        nothing armed this is a no-op on every instance, which is what
+        keeps forecast-off runs byte-identical to the reactive build."""
+        if sr != inst.shadow_r:
+            inst.shadow_r = sr
+            if sr <= 0.0:
+                inst.shadow_active = False
 
     @property
     def hw(self) -> HardwareSpec:

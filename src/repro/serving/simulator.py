@@ -1019,7 +1019,12 @@ def _simulate_scalar(plan, models, hw, *, duration_s, seed, poisson, shadow,
                         "rps_1s": len(window) / 1.0,
                         "shadow": inst.shadow_active,
                     })
-                if shadow and window and not inst.shadow_active:
+                # Sec. 4.2 activation: simulator-armed (shadow=True) OR
+                # controller-armed (inst.shadow_r set by the predictive
+                # tier) — per-instance, so a run with nothing armed
+                # evaluates exactly as before
+                if ((shadow or inst.shadow_r > 0.0) and window
+                        and not inst.shadow_active):
                     if float(np.percentile(window, 99)) > inst.spec.slo_ms:
                         # switch to the pre-launched shadow process (Sec. 4.2)
                         inst.shadow_active = True
@@ -1417,7 +1422,8 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                 # pass may complete past T (or past the horizon)
                 end = bisect_right(dn, T, w)
                 peak_window = max(peak_window, end - w)
-                if tl_rows is None and not record_timeline and not shadow:
+                if (tl_rows is None and not record_timeline
+                        and not shadow and inst.shadow_r <= 0.0):
                     continue           # window list only needed below
                 window = inst.latencies[w:end]
                 if tl_rows is not None:
@@ -1437,7 +1443,10 @@ def _simulate_vec(plan, models, hw, *, duration_s, seed, poisson, shadow,
                         "rps_1s": len(window) / 1.0,
                         "shadow": inst.shadow_active,
                     }))
-                if shadow and window and not inst.shadow_active:
+                # activation for simulator- OR controller-armed shadows
+                # (mirrors the scalar monitor, incl. the table rebuild)
+                if ((shadow or inst.shadow_r > 0.0) and window
+                        and not inst.shadow_active):
                     if float(np.percentile(window, 99)) > inst.spec.slo_ms:
                         inst.shadow_active = True
                         dirty.add(inst.gpu)

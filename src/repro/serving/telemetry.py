@@ -107,12 +107,14 @@ class ControlEvent:
 
     ``kind`` is the decision type: the `PlanEdit` actions (resize /
     remove / add / split / merge / infeasible / migrate / readmit /
-    preempt / shed / admit / capped) plus ``quarantine`` (health layer),
-    ``brownout`` (admission layer), and ``reconfig`` (simulator-side:
-    one per instance whose placement tuple actually changed at an
-    adjust tick).  ``cause`` groups kinds by driving signal: "drift"
-    (estimator band breach), "health", "admission", "arrival",
-    "departure", "adjust", "scale_out".
+    preempt / shed / admit / capped / forecast / shadow_arm /
+    shadow_disarm — the last three are the predictive tier's pre-size
+    and Sec. 4.2 reservation lifecycle) plus ``quarantine`` (health
+    layer), ``brownout`` (admission layer), and ``reconfig``
+    (simulator-side: one per instance whose placement tuple actually
+    changed at an adjust tick).  ``cause`` groups kinds by driving
+    signal: "drift" (estimator band breach), "health", "admission",
+    "arrival", "departure", "adjust", "scale_out", "forecast".
 
     Estimator fields are 0.0 when no estimator drove the decision
     (health / simulator events).  ``pre`` / ``post`` are tuples of

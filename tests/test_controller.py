@@ -440,16 +440,19 @@ def test_controller_rejects_device_scope(ctx12):
                       adjust_scope="device")
 
 
-def test_controller_rejects_shadow_mode(ctx12):
-    """shadow_r reservations are invisible to the plan edits, so the
-    shadow + Controller combination must refuse instead of silently
-    overcommitting a device."""
+def test_controller_composes_with_shadow_mode(ctx12):
+    """The historical Controller <-> shadow=True refusal is gone: the
+    controller ADOPTS simulator-armed shadow_r reservations into its
+    armed book at the first tick, so every plan edit accounts for them
+    and an activation can never overcommit a device."""
     ctx, plan = ctx12
     ctl = Controller(plan, ctx.profiles, ctx.hw)
-    with pytest.raises(RuntimeError, match="shadow"):
-        simulate_plan(plan, models(), ctx.hw, duration_s=3.0, shadow=True,
-                      adjust_fn=ctl, adjust_period_s=1.0,
-                      adjust_scope="cluster")
+    res = simulate_plan(plan, models(), ctx.hw, duration_s=3.0,
+                        shadow=True, adjust_fn=ctl, adjust_period_s=1.0,
+                        adjust_scope="cluster")
+    assert res.stats["n_requests"] > 0
+    # every _setup-armed reservation is in the book after tick 1
+    assert ctl.reconciler.armed  # twelve_workloads leaves free capacity
 
 
 def test_migration_via_gpu_mutation(ctx12):

@@ -56,6 +56,14 @@ DYNAMIC_TELEMETRY_KEYS = {
     "telemetry_wall_s", "telemetry_overhead", "telemetry_events",
     "telemetry_reconfig_ok", "telemetry_log",
 }
+# predictive-tier columns: only on the scenarios that run the
+# forecast-on third simulation (no_drift's silence gate, spike's
+# strictly-better gate)
+DYNAMIC_FORECAST_KEYS = {
+    "forecast_violations", "forecast_violation_rate",
+    "forecast_n_reconfigs", "n_forecast_events", "n_shadow_arms",
+    "forecast_plan_identical", "forecast_sim_wall_s",
+}
 AVAILABILITY_ROW_KEYS = {
     "bench", "m", "scenario", "backend", "hardware", "n_devices",
     "n_failures", "off_violation_rate", "on_violation_rate", "off", "on",
@@ -120,10 +128,12 @@ def test_dynamic_sweep_row_schema(tmp_path):
                                artifact_dir=str(tmp_path))
     by_scenario = {r["scenario"]: r for r in rows}
     assert set(by_scenario["no_drift"]) \
-        == DYNAMIC_ROW_KEYS | DYNAMIC_TELEMETRY_KEYS
+        == DYNAMIC_ROW_KEYS | DYNAMIC_TELEMETRY_KEYS \
+        | DYNAMIC_FORECAST_KEYS
     assert set(by_scenario["overload"]) \
         == DYNAMIC_ROW_KEYS | DYNAMIC_OVERLOAD_KEYS \
         | DYNAMIC_TELEMETRY_KEYS
+    assert not (set(by_scenario["overload"]) & DYNAMIC_FORECAST_KEYS)
     assert os.path.exists(by_scenario["no_drift"]["telemetry_log"])
     assert os.path.exists(
         str(tmp_path / "telemetry_m10_overload.html"))
@@ -132,7 +142,7 @@ def test_dynamic_sweep_row_schema(tmp_path):
 def test_dynamic_sweep_row_schema_telemetry_off():
     from benchmarks import dynamic_sweep
     rows = dynamic_sweep.sweep((10,), ("no_drift",), sim_duration_s=3.0)
-    assert set(rows[0]) == DYNAMIC_ROW_KEYS
+    assert set(rows[0]) == DYNAMIC_ROW_KEYS | DYNAMIC_FORECAST_KEYS
     assert not (set(rows[0]) & DYNAMIC_TELEMETRY_KEYS)
     assert not (set(rows[0]) & DYNAMIC_OVERLOAD_KEYS)
 

@@ -155,6 +155,79 @@ def test_device_sample_consistent_with_full(setup):
         assert np.isfinite(m["p99_ms"])
 
 
+def _assert_streams_identical(a, b):
+    assert set(a.request_latencies) == set(b.request_latencies)
+    for w in a.request_latencies:
+        assert np.array_equal(a.request_latencies[w],
+                              b.request_latencies[w]), w
+        assert np.array_equal(a.request_waits[w], b.request_waits[w]), w
+    assert a.per_workload == b.per_workload
+    assert a.stats["n_requests"] == b.stats["n_requests"]
+    assert a.stats["n_reconfigs"] == b.stats["n_reconfigs"]
+
+
+def test_engines_identical_controller_owned_shadows(setup):
+    """Uncovered matrix cell: spike trace x Poisson x CONTROLLER-owned
+    shadows — the predictive tier arms `inst.shadow_r` itself (no
+    `shadow=True` simulator flag), and both engines must honor the
+    armed reservation and its monitor-tick activation identically.
+    Controllers are stateful: each engine gets a fresh one."""
+    from repro.serving.controller import Controller, ControllerConfig
+    ctx, plan, mods = setup
+    tr = traces.step_spike(_NAMES, 6000.0, at_ms=2400.0,
+                           duration_ms=1200.0, scale=2.5)
+    res, ctls = {}, {}
+    for engine in ("scalar", "vec"):
+        ctl = Controller(plan, ctx.profiles, ctx.hw,
+                         cfg=ControllerConfig(forecast=True))
+        res[engine] = simulate_plan(plan, mods, ctx.hw, duration_s=6.0,
+                                    engine=engine, poisson=True, seed=5,
+                                    trace=tr, adjust_fn=ctl,
+                                    adjust_scope="cluster",
+                                    adjust_period_s=1.0)
+        ctls[engine] = ctl
+    _assert_streams_identical(res["scalar"], res["vec"])
+    # the predictive tier actually acted, identically in both runs
+    for ctl in ctls.values():
+        acts = {e.action for e in ctl.edits}
+        assert "forecast" in acts and "shadow_arm" in acts
+    assert [(e.t_s, e.action, e.workload, e.replicas)
+            for e in ctls["scalar"].edits] \
+        == [(e.t_s, e.action, e.workload, e.replicas)
+            for e in ctls["vec"].edits]
+    assert ctls["scalar"].reconciler.armed == ctls["vec"].reconciler.armed
+
+
+def test_engines_identical_faults_trace_telemetry(setup):
+    """Uncovered matrix cell: device faults x diurnal trace x telemetry
+    recorder — byte-identical result streams, fault accounting, and
+    telemetry CONTENT (wall-clock fields excepted, engine-tagged
+    dispatch counters excepted by design)."""
+    from repro.serving import faults
+    from repro.serving.telemetry import Telemetry
+    ctx, plan, mods = setup
+    fs = faults.random_failures(plan.n_gpus, 6000.0, rate_per_min=6.0,
+                                mttr_ms=600.0, seed=3)
+    tr = traces.diurnal(_NAMES, 6000.0, peak=1.8)
+    res, tels = {}, {}
+    for engine in ("scalar", "vec"):
+        tel = Telemetry()
+        res[engine] = simulate_plan(plan, mods, ctx.hw, duration_s=6.0,
+                                    engine=engine, poisson=True, seed=9,
+                                    trace=tr, faults=fs, telemetry=tel)
+        tels[engine] = tel
+    _assert_streams_identical(res["scalar"], res["vec"])
+    assert res["scalar"].stats["n_failures"] > 0
+    for key in ("n_failures", "downtime_ms", "lost_requests"):
+        assert res["scalar"].stats[key] == res["vec"].stats[key], key
+    ev_s = [dict(e.to_dict(), wall_ms=0.0) for e in tels["scalar"].events]
+    ev_v = [dict(e.to_dict(), wall_ms=0.0) for e in tels["vec"].events]
+    assert ev_s == ev_v
+    assert tels["scalar"].workloads.list() == tels["vec"].workloads.list()
+    assert tels["scalar"].devices.list() == tels["vec"].devices.list()
+    assert tels["scalar"].drift.list() == tels["vec"].drift.list()
+
+
 def test_shadow_equivalent_and_recovers(setup):
     """The 12-workload shadow scenario both flips the shadow (Sec. 4.2)
     and stays engine-identical after the table invalidation."""

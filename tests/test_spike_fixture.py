@@ -1,0 +1,113 @@
+"""Golden spike fixture: the predictive tier's control-plane event
+sequence, pinned byte-for-byte.
+
+`tests/data/telemetry_spike_fixture.jsonl` is a committed
+`Telemetry.to_jsonl` log of the canonical forecast-on flash-crowd run —
+m=100 synthetic workloads (seed 0), the dynamic_sweep `spike` trace
+shape (2.5x step at 40% of a 6 s horizon for 20% of it), Poisson
+arrivals, a `ControllerConfig(forecast=True)` controller on the numpy
+backend, `Telemetry(retention=600)`.  Regenerate (only on a deliberate
+predictive-tier behavior change) by re-running exactly that and
+refreshing the pinned constants below:
+
+    from repro.serving.telemetry import Telemetry
+    tel = Telemetry(retention=600)
+    ctl = Controller(plan, profiles, hw, config=cfg.replace(batch="joint"),
+                     cfg=ControllerConfig(forecast=True), telemetry=tel)
+    simulate_full(plan, models(), hw, duration_s=6.0, seed=0,
+                  poisson=True, trace=step_spike(names, 6000.0,
+                  at_ms=2400.0, duration_ms=1200.0, scale=2.5),
+                  adjust_fn=ctl, adjust_scope="cluster",
+                  adjust_period_s=1.0, telemetry=tel)
+    tel.to_jsonl("tests/data/telemetry_spike_fixture.jsonl")
+
+This module is stdlib-only ON PURPOSE (no numpy, no repro import): it
+replays the log through `benchmarks.telemetry_report` the way the docs
+CI tier does, so the fixture doubles as the renderer's regression input.
+A digest mismatch here means the forecast trigger, the arming order, or
+the event schema changed — update the fixture AND the constants in the
+same PR, deliberately.
+"""
+import hashlib
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import telemetry_report
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "telemetry_spike_fixture.jsonl")
+
+# the exact (t_s, kind, workload, replicas) sequence of every
+# forecast / shadow_arm / shadow_disarm event, in log order
+SEQUENCE_SHA256 = \
+    "e0ebfdbb91e2e76627ddf5c73c99c9946142243f460dbbb1ee5a076d476bd0e7"
+N_FORECAST = 62
+N_SHADOW_ARM = 58
+N_SHADOW_DISARM = 0
+N_RECONFIGS = 182
+FORECAST_TICKS = {3.0, 4.0}   # the spike lands at 2.4 s; the monitor
+                              # window ending t=3 is the FIRST tick the
+                              # rate signal is visible, and the
+                              # forecaster acts on it immediately
+
+
+def _load():
+    data = telemetry_report.load(FIXTURE)
+    pred = [e for e in data["events"]
+            if e["kind"] in ("forecast", "shadow_arm", "shadow_disarm")]
+    return data, pred
+
+
+def test_fixture_is_clean_and_renders():
+    data, pred = _load()
+    assert telemetry_report.check(data) == []
+    assert data["events"] and data["workloads"] and data["drift"]
+    html = telemetry_report.render_html(data)
+    assert "<svg" in html and "forecast" in html
+
+
+def test_forecast_event_sequence_pinned():
+    _, pred = _load()
+    sig = "|".join(f"{e['t_s']}:{e['kind']}:{e['workload']}"
+                   f":{e['replicas']}" for e in pred)
+    assert hashlib.sha256(sig.encode()).hexdigest() == SEQUENCE_SHA256
+    kinds = {}
+    for e in pred:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    assert kinds.get("forecast", 0) == N_FORECAST
+    assert kinds.get("shadow_arm", 0) == N_SHADOW_ARM
+    assert kinds.get("shadow_disarm", 0) == N_SHADOW_DISARM
+
+
+def test_forecast_events_structurally_sound():
+    """Schema-level contracts every predictive event must satisfy,
+    independent of the pinned digest."""
+    data, pred = _load()
+    assert {e["t_s"] for e in pred} == FORECAST_TICKS
+    assert all(e["cause"] == "forecast" for e in pred)
+    # a pre-size always RAISES the target, and every arm covers >= 1
+    # replica
+    for e in pred:
+        if e["kind"] == "forecast":
+            assert e["rate_to"] > e["rate_from"]
+        elif e["kind"] == "shadow_arm":
+            assert e["replicas"] >= 1
+    # arming rides a successful pre-size in this run: every shadow_arm
+    # has a same-tick forecast edit for its base
+    fc = {(e["t_s"], e["workload"]) for e in pred
+          if e["kind"] == "forecast"}
+    assert all((e["t_s"], e["workload"]) in fc
+               for e in pred if e["kind"] == "shadow_arm")
+
+
+def test_reconfig_counter_reconciles():
+    """The overflow-immune counter in the summary trailer equals the
+    ring's reconfig event count — the same reconciliation the sweep's
+    --check gate enforces, replayed from the committed artifact."""
+    data, _ = _load()
+    counters = data["summary"]["counters"]
+    assert counters["reconfig_events"] == N_RECONFIGS
+    assert counters["events_forecast"] == N_FORECAST
+    assert counters["events_shadow_arm"] == N_SHADOW_ARM
